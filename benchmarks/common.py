@@ -1,0 +1,62 @@
+"""Shared benchmark plumbing: system builders + policy table (paper §5.1)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+from repro.core import (COSERVE, COSERVE_EM, COSERVE_EM_RA, COSERVE_NONE,
+                        SAMBA, SAMBA_FIFO, SAMBA_PARALLEL, CoServeSystem,
+                        Metrics, Simulation, SystemPolicy)
+from repro.core.memory import NUMA, UMA, TierSpec
+from repro.core.workload import (BOARD_A, BOARD_B, BoardSpec, build_board_coe,
+                                 make_executor_specs, make_task_requests)
+
+TASKS = {
+    "A1": (BOARD_A, 2500),
+    "A2": (BOARD_A, 3500),
+    "B1": (BOARD_B, 2500),
+    "B2": (BOARD_B, 3500),
+}
+
+TIERS = {"numa": NUMA, "uma": UMA}
+
+BASELINES = {
+    "samba_coe": SAMBA,
+    "samba_coe_fifo": SAMBA_FIFO,
+    "samba_coe_parallel": SAMBA_PARALLEL,
+}
+
+ABLATIONS = {
+    "coserve_none": COSERVE_NONE,
+    "coserve_em": COSERVE_EM,
+    "coserve_em_ra": COSERVE_EM_RA,
+    "coserve": COSERVE,
+}
+
+
+def executors_for(tier: TierSpec, policy: SystemPolicy,
+                  n_gpu: Optional[int] = None, n_cpu: Optional[int] = None
+                  ) -> Tuple[int, int]:
+    """Paper defaults: NUMA 3G+1C, UMA 2G+1C; Samba-CoE single executor;
+    Samba-Parallel matches CoServe's executor count."""
+    if policy.assign == "single":
+        return 1, 0
+    if n_gpu is None:
+        n_gpu = 3 if tier.name.startswith("numa") else 2
+    if n_cpu is None:
+        n_cpu = 1
+    return n_gpu, n_cpu
+
+
+def run_task(policy: SystemPolicy, board: BoardSpec, n_requests: int,
+             tier: TierSpec, n_gpu: Optional[int] = None,
+             n_cpu: Optional[int] = None, pool_fraction: float = 0.75,
+             gpu_pool_bytes: Optional[int] = None, seed: int = 1) -> Metrics:
+    coe = build_board_coe(board)
+    g, c = executors_for(tier, policy, n_gpu, n_cpu)
+    pools, specs = make_executor_specs(tier, g, c, pool_fraction,
+                                       gpu_pool_bytes)
+    system = CoServeSystem(coe, specs, pools, policy=policy, tier=tier)
+    sim = Simulation(system)
+    sim.submit(make_task_requests(board, n_requests, seed=seed))
+    return sim.run()

@@ -1,0 +1,106 @@
+"""Hillclimb harness (§Perf): compile ONE cell, report the three roofline
+terms plus an op-level breakdown of the optimized HLO (top ops by result
+bytes, collective ops by kind+shape) — the 'profile' the hypothesis loop
+iterates on.
+
+  PYTHONPATH=src python -m benchmarks.hillclimb --arch moonshot_v1_16b_a3b \
+      --shape decode_32k [--periods 1] [--top 25]
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+import json
+import re
+from collections import defaultdict
+
+import jax  # noqa: E402
+
+PEAK_FLOPS, HBM_BW, ICI_BW = 197e12, 819e9, 50e9
+
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*"
+    r"(?P<type>\([^)]*\)|[a-z0-9]+\[[^\]]*\](?:\{[^}]*\})?)\s*"
+    r"(?P<op>[\w\-]+)\(", re.M)
+_SHAPE_RE = re.compile(r"(?P<dtype>[a-z]+[0-9]+|pred)\[(?P<dims>[0-9,]*)\]")
+_BYTES = {"pred": 1, "s8": 1, "u8": 1, "bf16": 2, "f16": 2, "s16": 2,
+          "u16": 2, "f32": 4, "s32": 4, "u32": 4, "f64": 8, "s64": 8,
+          "u64": 8}
+
+
+def shape_bytes(t):
+    tot = 0
+    for m in _SHAPE_RE.finditer(t):
+        n = 1
+        dims = m.group("dims")
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        tot += n * _BYTES.get(m.group("dtype"), 4)
+    return tot
+
+
+def op_breakdown(hlo: str, top: int = 25):
+    per_op = defaultdict(float)
+    rows = []
+    for m in _OP_RE.finditer(hlo):
+        b = shape_bytes(m.group("type"))
+        per_op[m.group("op")] += b
+        rows.append((b, m.group("op"), m.group("type")[:110]))
+    rows.sort(reverse=True)
+    return dict(sorted(per_op.items(), key=lambda kv: -kv[1])), rows[:top]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--periods", type=int, default=None)
+    ap.add_argument("--top", type=int, default=25)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--dump-hlo", default=None)
+    args = ap.parse_args(argv)
+
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.specs import build_cell, lower_cell
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    cell = build_cell(args.arch, args.shape, mesh, n_periods=args.periods)
+    lowered = lower_cell(cell, mesh)
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis()
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    if args.dump_hlo:
+        with open(args.dump_hlo, "w") as f:
+            f.write(hlo)
+    per_kind, top_rows = op_breakdown(hlo, args.top)
+
+    flops = cost.get("flops", 0.0)
+    bytes_acc = cost.get("bytes accessed", 0.0)
+    coll = {k: v for k, v in per_kind.items()
+            if k in ("all-gather", "all-reduce", "reduce-scatter",
+                     "all-to-all", "collective-permute",
+                     "all-gather-start", "all-reduce-start")}
+    coll_b = sum(coll.values())
+    print(f"=== {args.arch} x {args.shape} "
+          f"(periods={args.periods or 'full'}) ===")
+    print(f"flops/dev          {flops:.4g}   -> compute    "
+          f"{flops / PEAK_FLOPS:.4g} s")
+    print(f"bytes accessed/dev {bytes_acc:.4g}   -> memory     "
+          f"{bytes_acc / HBM_BW:.4g} s")
+    print(f"collective/dev     {coll_b:.4g}   -> collective "
+          f"{coll_b / ICI_BW:.4g} s")
+    print(f"peak/dev {getattr(mem, 'peak_memory_in_bytes', 0)/2**30:.2f} GiB "
+          f"| temp {getattr(mem, 'temp_size_in_bytes', 0)/2**30:.2f} GiB")
+    print("\n-- result bytes by op kind --")
+    for k, v in list(per_kind.items())[:14]:
+        print(f"  {k:24s} {v/2**30:9.3f} GiB")
+    print("\n-- top ops by result bytes --")
+    for b, op, t in top_rows:
+        print(f"  {b/2**20:10.1f} MiB  {op:18s} {t}")
+    return {"flops": flops, "bytes": bytes_acc, "collective": coll_b}
+
+
+if __name__ == "__main__":
+    main()

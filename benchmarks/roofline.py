@@ -1,0 +1,127 @@
+"""Roofline analysis (deliverable g): three terms per (arch x shape) cell
+from the dry-run's compiled artifacts.
+
+  compute   = HLO_FLOPs_per_chip / peak_FLOP/s          (197 TF bf16, v5e)
+  memory    = HLO_bytes_per_chip / HBM_bw               (819 GB/s)
+  collective= collective_bytes_per_chip / link_bw       (~50 GB/s ICI)
+
+``flops``/``bytes_accessed`` come from ``compiled.cost_analysis()`` of the
+per-device SPMD module; collective bytes from the optimized-HLO sweep
+(launch/hlo.py). Scan bodies are counted once by XLA, so the dry-run also
+compiles unrolled 1-/2-period variants and extrapolates full depth — those
+extrapolated numbers are what this report uses.
+
+  PYTHONPATH=src python -m benchmarks.roofline [--in dryrun_results.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict, List
+
+from repro.configs import SHAPES, get_config
+from repro.configs.base import shape_overrides
+
+PEAK_FLOPS = 197e12       # bf16 per chip
+HBM_BW = 819e9            # bytes/s per chip
+ICI_BW = 50e9             # bytes/s per link (1 link counted per collective hop)
+
+SUGGEST = {
+    "compute": ("compute-bound: reduce recompute (remat policy) or raise "
+                "arithmetic efficiency (fused kernels, larger per-chip tiles)"),
+    "memory": ("HBM-bound: shrink activations/KV traffic (fusion, bf16/int8 "
+               "KV, better layouts) or re-balance batch per chip"),
+    "collective": ("ICI-bound: re-shard to cut gathered bytes (FSDP->TP "
+                   "boundary, sequence sharding), overlap collectives with "
+                   "compute, or compress the reduced tensors"),
+}
+
+
+def model_flops(arch: str, shape: str) -> float:
+    cfg = shape_overrides(get_config(arch), shape)
+    spec = SHAPES[shape]
+    n_active = cfg.param_count(active_only=True)
+    if spec.kind == "train":
+        tokens = spec.global_batch * spec.seq_len
+        return 6.0 * n_active * tokens
+    if spec.kind == "prefill":
+        tokens = spec.global_batch * spec.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * spec.global_batch      # decode: 1 new token/seq
+
+
+def analyse_cell(rec: dict) -> dict:
+    r = rec.get("roofline") or rec      # multi-pod cells lack extrapolation
+    chips = 1
+    for d in rec["mesh"]:
+        chips *= d
+    t_compute = r["flops"] / PEAK_FLOPS
+    t_memory = r["bytes_accessed"] / HBM_BW
+    coll = sum(r["collective_bytes"].values())
+    t_coll = coll / ICI_BW
+    dominant = max(("compute", t_compute), ("memory", t_memory),
+                   ("collective", t_coll), key=lambda kv: kv[1])[0]
+    mf = model_flops(rec["arch"], rec["shape"])
+    hlo_total = r["flops"] * chips
+    bound = max(t_compute, t_memory, t_coll)
+    # useful-work fraction at the roofline bound: what fraction of the
+    # bound-time the chips spend on MODEL (not HLO) flops
+    mfu_bound = (mf / chips / PEAK_FLOPS) / bound if bound > 0 else 0.0
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "chips": chips,
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "model_flops": mf, "hlo_flops_total": hlo_total,
+        "useful_ratio": mf / hlo_total if hlo_total else 0.0,
+        "roofline_fraction": mfu_bound,
+        "suggest": SUGGEST[dominant],
+    }
+
+
+def markdown_table(rows: List[dict]) -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | bottleneck "
+           "| MODEL/HLO | roofline frac |\n|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3e} "
+            f"| {r['t_memory_s']:.3e} | {r['t_collective_s']:.3e} "
+            f"| **{r['dominant']}** | {r['useful_ratio']:.2f} "
+            f"| {r['roofline_fraction']:.1%} |")
+    return "\n".join(lines)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--in", dest="inp", default="dryrun_results.json")
+    ap.add_argument("--out", default="roofline_report.json")
+    ap.add_argument("--markdown", default=None)
+    args = ap.parse_args(argv)
+
+    recs = json.load(open(args.inp))
+    rows = [analyse_cell(r) for r in recs
+            if r.get("ok") and len(r["mesh"]) == 2 and "roofline" in r]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    with open(args.out, "w") as f:
+        json.dump(rows, f, indent=1)
+    md = markdown_table(rows)
+    print(md)
+    worst = sorted(rows, key=lambda r: r["roofline_fraction"])[:5]
+    print("\nworst roofline fraction:")
+    for r in worst:
+        print(f"  {r['arch']} x {r['shape']}: {r['roofline_fraction']:.1%} "
+              f"({r['dominant']}-bound)")
+    coll = sorted(rows, key=lambda r: -(r["t_collective_s"]
+                                        / max(r["t_compute_s"], 1e-12)))[:5]
+    print("most collective-bound (vs compute):")
+    for r in coll:
+        print(f"  {r['arch']} x {r['shape']}: coll/comp = "
+              f"{r['t_collective_s'] / max(r['t_compute_s'], 1e-12):.2f}")
+    if args.markdown:
+        with open(args.markdown, "w") as f:
+            f.write(md + "\n")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

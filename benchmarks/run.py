@@ -1,0 +1,86 @@
+"""Benchmark aggregator (deliverable d): one harness per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig13,fig15,...]
+
+| key       | paper artefact | module |
+|-----------|----------------|--------|
+| fig13_14  | Fig. 13 throughput + Fig. 14 switches | bench_throughput |
+| fig15_16  | Fig. 15/16 ablation breakdown          | bench_ablation   |
+| fig17     | Fig. 17 executor-count sweep           | bench_executors  |
+| fig18     | Fig. 18 decay-window memory allocation | bench_memory_alloc |
+| fig19     | Fig. 19 scheduling/management overhead | bench_overhead   |
+| fig5_12   | Fig. 5/12 batch-latency linearity      | bench_batch_latency |
+| kernels   | Pallas kernels vs oracles              | bench_kernels    |
+| roofline  | EXPERIMENTS.md §Roofline (from dry-run)| roofline         |
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+from benchmarks import (bench_ablation, bench_batch_latency, bench_executors,
+                        bench_memory_alloc, bench_overhead, bench_throughput,
+                        bench_kernels)
+
+SUITES = {
+    "fig13_14": bench_throughput.run,
+    "fig15_16": bench_ablation.run,
+    "fig17": bench_executors.run,
+    "fig18": bench_memory_alloc.run,
+    "fig19": bench_overhead.run,
+    "fig5_12": bench_batch_latency.run,
+    "kernels": bench_kernels.run,
+}
+
+
+def _roofline(quick: bool = False):
+    from benchmarks import roofline
+    path = "dryrun_results.json"
+    if not os.path.exists(path):
+        return {"skipped": f"{path} not found — run "
+                "`python -m repro.launch.dryrun --sweep --both-meshes` first"}
+    rows = roofline.main(["--in", path, "--out", "roofline_report.json"])
+    return {"cells": len(rows),
+            "dominant": {d: sum(1 for r in rows if r["dominant"] == d)
+                         for d in ("compute", "memory", "collective")}}
+
+
+SUITES["roofline"] = _roofline
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite keys")
+    ap.add_argument("--out", default="bench_results.json")
+    args = ap.parse_args(argv)
+
+    keys = args.only.split(",") if args.only else list(SUITES)
+    results, failures = {}, 0
+    for key in keys:
+        t0 = time.perf_counter()
+        print(f"\n=== {key} {'(quick)' if args.quick else ''} ===",
+              flush=True)
+        try:
+            res = SUITES[key](quick=args.quick)
+            results[key] = res
+            print(json.dumps(res, indent=1, default=str))
+        except Exception as e:  # noqa: BLE001 — report and continue
+            failures += 1
+            results[key] = {"error": f"{type(e).__name__}: {e}"}
+            import traceback
+            traceback.print_exc()
+        print(f"[{key}] {time.perf_counter() - t0:.1f}s")
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=1, default=str)
+    print(f"\n{len(keys) - failures}/{len(keys)} suites ok -> {args.out}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""The paper's production workload end to end: circuit-board defect
+inspection with 350+ experts on a memory-constrained edge device.
+
+Runs Task A1 (2,500 component images, one every 4 ms) on the NUMA device
+profile under every system from the paper's evaluation, prints the Fig. 13/14
+comparison, and shows the offline decay-window memory search (Fig. 18).
+
+  PYTHONPATH=src python examples/circuit_board_inspection.py [--fast]
+"""
+import argparse
+
+from repro.core import (COSERVE, COSERVE_EM, COSERVE_EM_RA, COSERVE_NONE,
+                        SAMBA, SAMBA_FIFO, SAMBA_PARALLEL, CoServeSystem,
+                        Simulation)
+from repro.core.memory import NUMA
+from repro.core.profiler import (decay_window_search,
+                                 pool_split_from_expert_count)
+from repro.core.workload import (BOARD_A, build_board_coe,
+                                 make_executor_specs, make_task_requests)
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--fast", action="store_true", help="1,000-request variant")
+args = ap.parse_args()
+N = 1000 if args.fast else 2500
+
+coe = build_board_coe(BOARD_A)
+print(f"CoE model: {len(coe)} experts, "
+      f"{coe.total_bytes() / 2**30:.1f} GiB of parameters; device pool "
+      f"{NUMA.device_bytes / 2**30:.0f} GiB -> experts must switch\n")
+
+def run(policy, gpu_pool_bytes=None):
+    n_gpu, n_cpu = (1, 0) if policy.assign == "single" else (3, 1)
+    pools, specs = make_executor_specs(NUMA, n_gpu, n_cpu,
+                                       gpu_pool_bytes=gpu_pool_bytes)
+    system = CoServeSystem(coe, specs, pools, policy=policy, tier=NUMA)
+    sim = Simulation(system)
+    sim.submit(make_task_requests(BOARD_A, N))
+    return sim.run()
+
+print(f"=== Task A1 ({N} requests), NUMA device (Fig. 13/14) ===")
+rows = [("Samba-CoE", SAMBA), ("Samba-CoE FIFO", SAMBA_FIFO),
+        ("Samba-CoE Parallel", SAMBA_PARALLEL),
+        ("CoServe None", COSERVE_NONE), ("CoServe EM", COSERVE_EM),
+        ("CoServe EM+RA", COSERVE_EM_RA), ("CoServe (casual)", COSERVE)]
+base = None
+for name, pol in rows:
+    m = run(pol)
+    if name == "Samba-CoE":
+        base = m.throughput
+    print(f"  {name:20s} {m.throughput:7.1f} req/s "
+          f"({m.throughput / base:4.1f}x) | {m.switches:4d} switches")
+
+print("\n=== Offline decay-window memory search (Fig. 18) ===")
+def throughput_fn(n_experts):
+    pool, _ = pool_split_from_expert_count(coe, n_experts, NUMA.device_bytes)
+    return run(COSERVE, gpu_pool_bytes=pool).throughput
+
+res = decay_window_search(throughput_fn, max_experts=len(coe),
+                          initial_window=15, error_margin=0.05)
+for n, thr in res.history:
+    print(f"  {n:3d} experts loaded -> {thr:7.1f} req/s")
+print(f"  window {res.window}, chosen n={res.n_experts} "
+      f"(linear error {res.linear_error:.1%})")
+pool, _ = pool_split_from_expert_count(coe, res.n_experts, NUMA.device_bytes)
+m = run(COSERVE, gpu_pool_bytes=pool)
+print(f"\nCoServe Best: {m.throughput:7.1f} req/s "
+      f"({m.throughput / base:4.1f}x Samba-CoE) | {m.switches} switches")

@@ -1,0 +1,31 @@
+"""CoServe core: the paper's contribution (scheduling, expert management,
+offline profiling, serving runtime) as a composable library."""
+from repro.core.coe import CoEModel, ExpertSpec, Request, RoutingModule
+from repro.core.scheduler import (Group, RequestScheduler, SchedulerPolicy,
+                                  max_executable_batch, split_batch)
+from repro.core.expert_manager import ExpertManager
+from repro.core.memory import (NUMA, TPU_V5E, UMA, HostCache, ModelPool,
+                               TierSpec, load_latency)
+from repro.core.profiler import (ArchProfile, DeviceProfile,
+                                 decay_window_search, find_max_batch,
+                                 fit_latency_line, microbenchmark_arch,
+                                 pool_split_from_expert_count)
+from repro.core.serving import (COSERVE, COSERVE_EM, COSERVE_EM_RA,
+                                COSERVE_NONE, SAMBA, SAMBA_FIFO,
+                                SAMBA_PARALLEL, CoServeSystem, ExecutorSpec,
+                                Metrics, SystemPolicy)
+from repro.core.simulator import Simulation, run_real
+from repro.core.engines import HostStore, RealEngine, SimEngine
+
+__all__ = [
+    "CoEModel", "ExpertSpec", "Request", "RoutingModule",
+    "Group", "RequestScheduler", "SchedulerPolicy", "max_executable_batch",
+    "split_batch", "ExpertManager", "NUMA", "UMA", "TPU_V5E", "HostCache",
+    "ModelPool", "TierSpec", "load_latency", "ArchProfile", "DeviceProfile",
+    "decay_window_search", "find_max_batch", "fit_latency_line",
+    "microbenchmark_arch", "pool_split_from_expert_count", "COSERVE",
+    "COSERVE_EM", "COSERVE_EM_RA", "COSERVE_NONE", "SAMBA", "SAMBA_FIFO",
+    "SAMBA_PARALLEL", "CoServeSystem", "ExecutorSpec", "Metrics",
+    "SystemPolicy", "Simulation", "run_real", "HostStore", "RealEngine",
+    "SimEngine",
+]

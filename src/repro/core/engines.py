@@ -1,0 +1,170 @@
+"""Execution engines behind the executor state machine.
+
+``SimEngine`` — latencies from offline profiles + tier model; drives the
+event-driven simulator at the paper's scale (hundreds of experts) on this
+CPU-only box. ``RealEngine`` — actually loads JAX expert params across
+host/disk tiers and runs jitted forwards, measuring wall time. Scheduler and
+expert-manager behaviour (and therefore switch counts) are engine-independent.
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.coe import CoEModel, Request
+from repro.core.memory import HostCache, TierSpec
+
+
+class SimEngine:
+    """Profiled-latency engine (paper-scale simulation)."""
+
+    def __init__(self, coe: CoEModel, tier: TierSpec,
+                 host_cache: Optional[HostCache] = None):
+        self.coe = coe
+        self.tier = tier
+        self.host_cache = host_cache   # NUMA: evicted experts cached in DRAM
+
+    # --- latency model ------------------------------------------------- #
+    def load_latency(self, ex, expert_id: str) -> float:
+        spec = self.coe.spec(expert_id)
+        t = self.tier
+        if ex.device in ("host", "cpu"):
+            return t.disk_overhead + spec.mem_bytes / t.disk_bw
+        if t.unified or self.host_cache is None or expert_id not in self.host_cache:
+            # disk -> (host) -> device
+            lat = t.disk_overhead + t.host_overhead + spec.mem_bytes / t.disk_bw
+            if not t.unified:
+                lat += spec.mem_bytes / t.host_to_device_bw
+            return lat
+        return t.host_overhead + spec.mem_bytes / t.host_to_device_bw
+
+    def exec_latency(self, ex, expert_id: str, n: int) -> float:
+        prof = ex.profile(self.coe.spec(expert_id).arch)
+        return prof.exec_latency(n)
+
+    # --- side effects --------------------------------------------------- #
+    def load(self, ex, expert_id: str) -> float:
+        lat = self.load_latency(ex, expert_id)
+        if self.host_cache is not None and ex.device not in ("host", "cpu"):
+            # the transfer passes through (and populates) the DRAM cache
+            self.host_cache.insert(expert_id)
+            self.host_cache.touch(expert_id)
+        return lat
+
+    def unload(self, ex, expert_id: str) -> None:
+        if self.host_cache is not None and ex.device not in ("host", "cpu"):
+            self.host_cache.insert(expert_id)
+
+    def execute(self, ex, expert_id: str, batch: List[Request]
+                ) -> Tuple[Optional[list], float]:
+        # outcome is carried by the synthetic request payload (drives routing)
+        outputs = [None if r.data is None else r.data.get("outcome")
+                   for r in batch]
+        return outputs, self.exec_latency(ex, expert_id, len(batch))
+
+
+class HostStore:
+    """Host-DRAM + disk parameter store for the real backend.
+
+    Experts start on 'disk' (.npz files) or in host memory; loads into an
+    executor deserialize + ``jax.device_put`` the pytree — the real analogue
+    of the paper's SSD -> DRAM -> GPU expert switching.
+    """
+
+    def __init__(self, root: Optional[str] = None):
+        self.host: Dict[str, Any] = {}
+        self.disk: Dict[str, str] = {}
+        self.root = root
+
+    def put_host(self, expert_id: str, params: Any):
+        self.host[expert_id] = params
+
+    def put_disk(self, expert_id: str, params: Any):
+        import jax
+        assert self.root, "HostStore needs a root dir for disk tier"
+        os.makedirs(self.root, exist_ok=True)
+        path = os.path.join(self.root, f"{expert_id}.npz")
+        leaves, treedef = jax.tree.flatten(params)
+        np.savez(path, *[np.asarray(l) for l in leaves])
+        self.disk[expert_id] = path
+        self._treedefs = getattr(self, "_treedefs", {})
+        self._treedefs[expert_id] = treedef
+
+    def fetch(self, expert_id: str) -> Tuple[Any, str]:
+        """Returns (host-side params, source tier)."""
+        import jax
+        if expert_id in self.host:
+            return self.host[expert_id], "host"
+        path = self.disk[expert_id]
+        with np.load(path) as z:
+            leaves = [z[k] for k in z.files]
+        params = jax.tree.unflatten(self._treedefs[expert_id], leaves)
+        self.host[expert_id] = params          # disk read populates host cache
+        return params, "disk"
+
+
+class RealEngine:
+    """Runs real JAX experts; latencies are measured wall time.
+
+    ``apply_fns[arch]``: jitted fn (params, batch_array) -> outputs. Expert
+    payloads supply ``make_batch(requests) -> array`` and
+    ``interpret(outputs) -> list`` hooks via the CoE expert payload dict.
+    """
+
+    def __init__(self, coe: CoEModel, store: HostStore, apply_fns: Dict[str, Any]):
+        self.coe = coe
+        self.store = store
+        self.apply_fns = apply_fns
+        self.device_params: Dict[str, Any] = {}
+
+    def load_latency(self, ex, expert_id: str) -> float:
+        # prediction for scheduling: profiled value
+        spec = self.coe.spec(expert_id)
+        prof = ex.profile(spec.arch)
+        return prof.load_latency_host if expert_id in self.store.host \
+            else prof.load_latency_disk
+
+    def exec_latency(self, ex, expert_id: str, n: int) -> float:
+        prof = ex.profile(self.coe.spec(expert_id).arch)
+        return prof.exec_latency(n)
+
+    def load(self, ex, expert_id: str) -> float:
+        import jax
+        t0 = time.perf_counter()
+        host_params, _ = self.store.fetch(expert_id)
+        dev = jax.tree.map(lambda a: jax.device_put(np.asarray(a)), host_params)
+        jax.block_until_ready(jax.tree.leaves(dev))
+        self.device_params[expert_id] = dev
+        return time.perf_counter() - t0
+
+    def unload(self, ex, expert_id: str) -> None:
+        self.device_params.pop(expert_id, None)
+
+    def warm_place(self, pool, expert_id: str) -> None:
+        """Initial placement (system-init phase): transfer without timing."""
+        self.load(None, expert_id)
+
+    def execute(self, ex, expert_id: str, batch: List[Request]
+                ) -> Tuple[list, float]:
+        import jax
+        spec = self.coe.spec(expert_id)
+        payload = spec.payload or {}
+        t0 = time.perf_counter()
+        params = self.device_params[expert_id]
+        make_batch = payload["make_batch"]
+        interpret = payload.get("interpret", lambda o: list(o))
+        x = make_batch(batch)
+        # pad the batch dim to a power-of-two bucket: one XLA compile per
+        # bucket instead of one per group size (production bucketing)
+        n = x.shape[0]
+        bucket = 1 << (n - 1).bit_length()
+        if bucket != n:
+            pad = np.zeros((bucket - n,) + x.shape[1:], x.dtype)
+            x = np.concatenate([x, pad], axis=0)
+        out = self.apply_fns[spec.arch](params, x)
+        out = jax.block_until_ready(out)
+        lat = time.perf_counter() - t0
+        return interpret(np.asarray(out)[:n]), lat

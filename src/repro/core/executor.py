@@ -1,0 +1,179 @@
+"""Inference executors (paper §4.1): queue + shared model pool + exec/load.
+
+An executor owns a request queue (list of same-expert groups) and two
+resources: the execution unit and a load channel. The model pool is *shared*
+between executors on the same memory domain (the paper's 3 GPU executors on
+one 12 GB device): an expert loaded by one executor serves them all. Load of
+the next group's expert overlaps execution of the current batch (the paper's
+condition (b): "loaded during the processing of a preceding request"). Both
+the event-driven simulator and the real-JAX backend drive the same state
+machine, so switch counts are backend-independent.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time as _time
+from typing import Any, List, Optional, Set, Tuple
+
+from repro.core.coe import CoEModel, Request
+from repro.core.expert_manager import ExpertManager
+from repro.core.memory import ModelPool
+from repro.core.profiler import ArchProfile, DeviceProfile
+from repro.core.scheduler import Group, max_executable_batch, split_batch
+
+
+@dataclasses.dataclass
+class ExecStats:
+    switches: int = 0            # expert loads into the device pool (post-init)
+    evictions: int = 0
+    completed: int = 0
+    busy_time: float = 0.0
+    load_time: float = 0.0
+    mgmt_time: float = 0.0       # wall time spent in eviction decisions
+
+
+class Executor:
+    def __init__(self, ex_id: str, device: str, coe: CoEModel,
+                 device_profile: DeviceProfile, pool: ModelPool,
+                 batch_bytes: int, manager: ExpertManager, engine,
+                 prefetch: bool = True, protect_queued: bool = True):
+        self.id = ex_id
+        self.device = device                      # "tpu"/"gpu" | "host"/"cpu"
+        self.coe = coe
+        self.device_profile = device_profile
+        self.pool = pool                          # SHARED memory-domain pool
+        self.batch_bytes = batch_bytes
+        self.manager = manager
+        self.engine = engine
+        self.prefetch = prefetch
+        self.protect_queued = protect_queued
+
+        pool.users = getattr(pool, "users", [])
+        pool.users.append(self)
+
+        self.queue: List[Group] = []
+        self.busy_until: float = 0.0
+        self.current: Optional[Tuple[str, List[Request], Any]] = None
+        self.load_in_flight: Optional[Tuple[str, float]] = None  # (expert, done)
+        self.stats = ExecStats()
+        self.alive = True
+
+    # ------------------------------------------------------------------ #
+    # profile / latency helpers
+    # ------------------------------------------------------------------ #
+    def profile(self, arch: str) -> ArchProfile:
+        return self.device_profile.arch_profiles[arch]
+
+    def load_latency(self, expert_id: str) -> float:
+        return self.engine.load_latency(self, expert_id)
+
+    def exec_latency(self, expert_id: str, n: int) -> float:
+        return self.engine.exec_latency(self, expert_id, n)
+
+    def max_batch_for(self, expert_id: str) -> int:
+        prof = self.profile(self.coe.spec(expert_id).arch)
+        return max_executable_batch(prof, self.batch_bytes)
+
+    # ------------------------------------------------------------------ #
+    # pending time (paper §4.2: queue total inference-time prediction)
+    # ------------------------------------------------------------------ #
+    def pending_time(self, now: float) -> float:
+        total = max(0.0, self.busy_until - now)
+        seen: Set[str] = set(self.pool.resident)
+        for g in self.queue:
+            prof = self.profile(self.coe.spec(g.expert_id).arch)
+            if g.expert_id not in seen:
+                total += self.load_latency(g.expert_id)
+                seen.add(g.expert_id)
+            total += prof.exec_latency(len(g))
+        return total
+
+    def queued_requests(self) -> int:
+        return sum(len(g) for g in self.queue)
+
+    # ------------------------------------------------------------------ #
+    # load path (eviction via the dependency-aware manager)
+    # ------------------------------------------------------------------ #
+    def start_load(self, expert_id: str, now: float,
+                   strict: bool = False) -> Optional[float]:
+        """Begin transferring an expert; returns completion time or None if it
+        cannot start (un-evictable residents or busy load channel). ``strict``
+        (prefetch path) refuses to displace experts with queued work."""
+        if self.load_in_flight is not None or expert_id in self.pool:
+            return None
+        t0 = _time.perf_counter()
+        protected: Set[str] = set()
+        if self.protect_queued or strict:
+            # protect experts referenced by ANY executor sharing this pool —
+            # evicting a peer's queued expert ping-pongs loads across streams
+            for peer in getattr(self.pool, "users", [self]):
+                protected.update(g.expert_id for g in peer.queue)
+                if peer.current is not None:
+                    protected.add(peer.current[0])
+            protected.discard(expert_id)
+        victims = self.manager.ensure_loadable(
+            self.pool, expert_id, load_cost_fn=self.load_latency,
+            protected=protected, strict=strict)
+        self.stats.mgmt_time += _time.perf_counter() - t0
+        if victims is None:
+            if not self.pool.fits(expert_id):
+                raise MemoryError(
+                    f"expert {expert_id} larger than pool {self.pool.group}")
+            return None  # everything evictable is pinned/loading; retry later
+        for v in victims:
+            self.engine.unload(self, v)
+            self.stats.evictions += 1
+        self.pool.add(expert_id)
+        lat = self.engine.load(self, expert_id)   # sim: predicted; real: runs
+        self.pool.loading[expert_id] = now + lat
+        self.load_in_flight = (expert_id, now + lat)
+        self.stats.switches += 1
+        self.stats.load_time += lat
+        return now + lat
+
+    def finish_load(self, expert_id: str):
+        assert self.load_in_flight and self.load_in_flight[0] == expert_id
+        self.load_in_flight = None
+        self.pool.loading.pop(expert_id, None)
+        self.pool.ready.add(expert_id)
+
+    # ------------------------------------------------------------------ #
+    # execution path
+    # ------------------------------------------------------------------ #
+    def can_execute_head(self) -> bool:
+        return bool(self.queue) and self.queue[0].expert_id in self.pool.ready
+
+    def start_next_batch(self, now: float) -> Optional[float]:
+        """Pop a batch from the head group and execute; returns finish time."""
+        if self.current is not None or not self.can_execute_head():
+            return None
+        head = self.queue[0]
+        eid = head.expert_id
+        batch = split_batch(head, self.max_batch_for(eid))
+        if not head.requests:
+            self.queue.pop(0)
+        outputs, lat = self.engine.execute(self, eid, batch)
+        self.pool.pin(eid)
+        self.pool.touch(eid)
+        self.current = (eid, batch, outputs)
+        self.busy_until = now + lat
+        self.stats.busy_time += lat
+        return self.busy_until
+
+    def finish_batch(self, now: float) -> Tuple[str, List[Request], Any]:
+        eid, batch, outputs = self.current
+        self.current = None
+        self.pool.unpin(eid)
+        self.stats.completed += len(batch)
+        for i, r in enumerate(batch):
+            r.done_time = now
+            r.result = outputs[i] if outputs is not None else None
+        return eid, batch, outputs
+
+    # next expert worth prefetching: first queued group whose expert is not
+    # resident (the shared pool tracks in-flight loads from peers)
+    def prefetch_candidate(self) -> Optional[str]:
+        for g in self.queue:
+            if g.expert_id not in self.pool:
+                return g.expert_id
+        return None

@@ -1,0 +1,141 @@
+"""Dependency-aware request scheduling (paper §4.2).
+
+Four stages, exactly as the paper defines them:
+  1. *Prediction* — additional latency of placing a request on each queue:
+     execution is the linear model K·n+B (K if it joins an existing group);
+     switching is zero if the expert is resident (a) or already queued (b),
+     else the profiled load latency.
+  2. *Assigning* — minimise the makespan over executor queues; ties broken by
+     the smallest added latency for the new request (Fig. 8).
+  3. *Arranging* — place the request directly behind queued requests that use
+     the same expert, so an expert loads at most once per group (Fig. 9).
+  4. *Splitting* — batches capped by min(profiled max batch, memory-bound
+     batch) at execution time (Fig. 9, right).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, TYPE_CHECKING
+
+from repro.core.coe import Request
+
+if TYPE_CHECKING:  # pragma: no cover
+    from repro.core.executor import Executor
+
+
+@dataclasses.dataclass
+class Group:
+    """Consecutive same-expert requests in a queue (batched together)."""
+    expert_id: str
+    requests: List[Request]
+
+    def __len__(self):
+        return len(self.requests)
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerPolicy:
+    assign: str = "makespan"     # makespan | round_robin | single
+    arrange: bool = True         # group same-expert requests (paper §4.2)
+    lookahead: int = 0           # beyond-paper: dequeue-time window re-sort
+
+
+class RequestScheduler:
+    """Assigns arriving requests to executor queues and arranges them."""
+
+    def __init__(self, executors: Sequence["Executor"],
+                 policy: SchedulerPolicy = SchedulerPolicy()):
+        self.executors = list(executors)
+        self.policy = policy
+        self._rr = 0
+
+    # ------------------------------------------------------------------ #
+    # prediction (paper §4.2 "Prediction of additional inference latency")
+    # ------------------------------------------------------------------ #
+    def additional_latency(self, ex: "Executor", req: Request) -> float:
+        spec = ex.coe.spec(req.expert_id)
+        prof = ex.profile(spec.arch)
+        queued_same = any(g.expert_id == req.expert_id for g in ex.queue)
+        if queued_same and self.policy.arrange:
+            exec_lat = prof.k                      # joins an existing batch
+        else:
+            exec_lat = prof.k + prof.b
+        if req.expert_id in ex.pool or queued_same:
+            switch_lat = 0.0                       # conditions (a) / (b)
+        else:
+            switch_lat = ex.load_latency(req.expert_id)
+        return exec_lat + switch_lat
+
+    # ------------------------------------------------------------------ #
+    # assigning (paper §4.2 "Request assigning")
+    # ------------------------------------------------------------------ #
+    def assign(self, req: Request, now: float) -> "Executor":
+        if self.policy.assign == "single" or len(self.executors) == 1:
+            ex = self.executors[0]
+        elif self.policy.assign == "round_robin":
+            ex = self.executors[self._rr % len(self.executors)]
+            self._rr += 1
+        else:
+            ex = self._assign_makespan(req, now)
+        self._arrange(ex, req)
+        return ex
+
+    def _assign_makespan(self, req: Request, now: float) -> "Executor":
+        pending = [ex.pending_time(now) for ex in self.executors]
+        adds = [self.additional_latency(ex, req) for ex in self.executors]
+        best, best_key = None, None
+        for i, ex in enumerate(self.executors):
+            new_total = pending[i] + adds[i]
+            makespan = max([new_total] + [pending[j] for j in range(len(pending))
+                                          if j != i])
+            key = (makespan, adds[i], i)
+            if best_key is None or key < best_key:
+                best, best_key = ex, key
+        return best
+
+    # ------------------------------------------------------------------ #
+    # arranging (paper §4.2 "Request arranging")
+    # ------------------------------------------------------------------ #
+    def _arrange(self, ex: "Executor", req: Request):
+        if self.policy.arrange:
+            for g in reversed(ex.queue):
+                if g.expert_id == req.expert_id:
+                    g.requests.append(req)
+                    return
+        elif ex.queue and ex.queue[-1].expert_id == req.expert_id:
+            # FCFS baselines still batch *consecutive* same-expert arrivals
+            ex.queue[-1].requests.append(req)
+            return
+        ex.queue.append(Group(expert_id=req.expert_id, requests=[req]))
+
+    # ------------------------------------------------------------------ #
+    # beyond-paper: bounded lookahead re-sort at dequeue time — pull a
+    # same-expert group from within the window to the head when the head
+    # expert is not resident but a later one is (saves a switch).
+    # ------------------------------------------------------------------ #
+    def reorder_head(self, ex: "Executor"):
+        w = self.policy.lookahead
+        if not w or len(ex.queue) < 2:
+            return
+        head = ex.queue[0]
+        if head.expert_id in ex.pool:
+            return
+        for i in range(1, min(w + 1, len(ex.queue))):
+            if ex.queue[i].expert_id in ex.pool:
+                ex.queue.insert(0, ex.queue.pop(i))
+                return
+
+
+def split_batch(group: Group, max_exec_batch: int) -> List[Request]:
+    """Pop at most ``max_exec_batch`` requests from the group head
+    (paper §4.2 "Request splitting")."""
+    take = min(len(group.requests), max(1, max_exec_batch))
+    batch = group.requests[:take]
+    del group.requests[:take]
+    return batch
+
+
+def max_executable_batch(profile, batch_bytes_available: int) -> int:
+    """min(profiled max batch, what activation memory accommodates)."""
+    by_mem = batch_bytes_available // max(1, profile.act_bytes_per_item)
+    return max(1, min(profile.max_batch, by_mem))

@@ -1,0 +1,248 @@
+"""CoServe system facade (paper §4.1): offline -> init -> online phases.
+
+``CoServeSystem`` wires the CoE model, offline profiles, executors, the
+dependency-aware scheduler and expert manager. ``SystemPolicy`` presets
+reproduce the paper's systems:
+
+  CoServe        : makespan assign + arranging + two-stage eviction + overlap
+  CoServe None   : FIFO eviction, no arranging, round-robin assign (ablation)
+  Samba-CoE      : single executor, FCFS, LRU (tiered DRAM cache on NUMA)
+  Samba-CoE FIFO : FIFO eviction variant
+  Samba-CoE Par. : N executors, round-robin FCFS, LRU
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Sequence
+
+from repro.core.coe import CoEModel, Request
+from repro.core.engines import SimEngine
+from repro.core.executor import Executor
+from repro.core.expert_manager import ExpertManager
+from repro.core.memory import HostCache, ModelPool, TierSpec
+from repro.core.profiler import DeviceProfile
+from repro.core.scheduler import RequestScheduler, SchedulerPolicy
+
+
+@dataclasses.dataclass(frozen=True)
+class SystemPolicy:
+    name: str = "coserve"
+    assign: str = "makespan"          # makespan | round_robin | single
+    arrange: bool = True
+    evict: str = "dependency_prob"    # dependency_prob | lru | fifo | prob | cost_benefit
+    prefetch: bool = True             # overlap loads with execution
+    protect_queued: bool = True       # demand loads evict queue-referenced
+    #                                   experts only as a last resort
+    host_cache_policy: str = "prob"
+    work_stealing: bool = False       # beyond-paper straggler mitigation
+    lookahead: int = 0                # beyond-paper dequeue-time window
+
+
+COSERVE = SystemPolicy()
+COSERVE_NONE = SystemPolicy(name="coserve_none", assign="round_robin",
+                            arrange=False, evict="fifo", prefetch=True,
+                            protect_queued=False)
+COSERVE_EM = SystemPolicy(name="coserve_em", assign="round_robin",
+                          arrange=False, evict="dependency_prob", prefetch=True)
+COSERVE_EM_RA = SystemPolicy(name="coserve_em_ra", assign="round_robin",
+                             arrange=True, evict="dependency_prob", prefetch=True)
+SAMBA = SystemPolicy(name="samba_coe", assign="single", arrange=False,
+                     evict="lru", prefetch=False, protect_queued=False,
+                     host_cache_policy="lru")
+SAMBA_FIFO = SystemPolicy(name="samba_coe_fifo", assign="single",
+                          arrange=False, evict="fifo", prefetch=False,
+                          protect_queued=False, host_cache_policy="lru")
+SAMBA_PARALLEL = SystemPolicy(name="samba_coe_parallel", assign="round_robin",
+                              arrange=False, evict="lru", prefetch=False,
+                              protect_queued=False, host_cache_policy="lru")
+
+
+@dataclasses.dataclass
+class Metrics:
+    completed: int = 0
+    switches: int = 0
+    evictions: int = 0
+    makespan: float = 0.0
+    throughput: float = 0.0
+    avg_latency: float = 0.0
+    sched_time: float = 0.0           # wall time in scheduling (overhead, Fig.19)
+    mgmt_time: float = 0.0            # wall time in expert management
+    per_executor: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class ExecutorSpec:
+    device: str                        # "tpu"/"gpu" | "host"/"cpu"
+    profile: DeviceProfile
+    batch_bytes: int
+    pool_group: str = ""               # memory domain; defaults to ``device``
+
+
+class CoServeSystem:
+    def __init__(self, coe: CoEModel, executor_specs: Sequence[ExecutorSpec],
+                 pools: Dict[str, int],
+                 policy: SystemPolicy = COSERVE, tier: Optional[TierSpec] = None,
+                 engine=None):
+        """``pools`` maps memory-domain name -> expert-pool bytes. Executors
+        with the same ``pool_group`` share one ModelPool (one physical
+        device's memory), as in the paper's multi-executor single-GPU setup.
+        """
+        self.coe = coe
+        self.policy = policy
+        self.tier = tier
+        self.host_cache = None
+        if tier is not None and not tier.unified and tier.host_cache_bytes > 0:
+            self.host_cache = HostCache(tier.host_cache_bytes, coe,
+                                        policy=policy.host_cache_policy)
+        self.engine = engine or SimEngine(coe, tier, self.host_cache)
+        self.manager = ExpertManager(coe, policy=policy.evict)
+        self.pools: Dict[str, ModelPool] = {
+            g: ModelPool(b, coe, group=g) for g, b in pools.items()}
+        self.executors: List[Executor] = []
+        for i, spec in enumerate(executor_specs):
+            group = spec.pool_group or spec.device
+            self.executors.append(Executor(
+                ex_id=f"{spec.device}{i}", device=spec.device, coe=coe,
+                device_profile=spec.profile, pool=self.pools[group],
+                batch_bytes=spec.batch_bytes, manager=self.manager,
+                engine=self.engine, prefetch=policy.prefetch,
+                protect_queued=policy.protect_queued))
+        self.scheduler = RequestScheduler(
+            self.executors,
+            SchedulerPolicy(assign=policy.assign, arrange=policy.arrange,
+                            lookahead=policy.lookahead))
+        self.sched_time = 0.0
+        self._initial_placement()
+
+    # ------------------------------------------------------------------ #
+    # system initialisation (paper §4.1 steps 1–3): round-robin expert
+    # placement by descending usage probability until pools are full.
+    # ------------------------------------------------------------------ #
+    def _initial_placement(self):
+        pools = list(self.pools.values())
+        if not pools:
+            return
+        i = 0
+        for spec in self.coe.by_usage():
+            for j in range(len(pools)):
+                pool = pools[(i + j) % len(pools)]
+                if spec.id not in pool and spec.mem_bytes <= pool.free_bytes():
+                    pool.add(spec.id)
+                    pool.ready.add(spec.id)
+                    if hasattr(self.engine, "warm_place"):
+                        self.engine.warm_place(pool, spec.id)
+                    i = (i + j + 1) % len(pools)
+                    break
+            # pools full / expert too large: stays on lower tiers
+
+    # ------------------------------------------------------------------ #
+    def live_executors(self) -> List[Executor]:
+        return [e for e in self.executors if e.alive]
+
+    def assign(self, req: Request, now: float) -> Executor:
+        t0 = time.perf_counter()
+        ex = self.scheduler.assign(req, now)
+        self.sched_time += time.perf_counter() - t0
+        return ex
+
+    def route_followup(self, req: Request, expert_id: str, output) -> Optional[Request]:
+        nxt = self.coe.routing.next_expert(req, expert_id, output)
+        if nxt is None:
+            return None
+        return Request(id=-req.id - 1_000_000, expert_id=nxt,
+                       arrival_time=req.arrival_time, task_id=req.task_id,
+                       data=req.data, parent_id=req.id)
+
+    # --- fault tolerance / elasticity ---------------------------------- #
+    def fail_executor(self, ex: Executor, now: float) -> List[Request]:
+        """Mark dead; return orphaned requests for re-scheduling."""
+        ex.alive = False
+        orphans: List[Request] = []
+        if ex.current is not None:
+            eid, batch, _ = ex.current
+            orphans.extend(batch)
+            ex.current = None
+            ex.pool.unpin(eid)
+        if ex.load_in_flight is not None:
+            # roll the half-finished transfer out of the shared pool —
+            # otherwise peers wait forever on an expert that never turns ready
+            eid, _ = ex.load_in_flight
+            ex.load_in_flight = None
+            ex.pool.loading.pop(eid, None)
+            if eid in ex.pool and eid not in ex.pool.ready:
+                ex.pool.remove(eid)
+        for g in ex.queue:
+            orphans.extend(g.requests)
+        ex.queue.clear()
+        if getattr(ex.pool, "users", None) and ex in ex.pool.users:
+            ex.pool.users.remove(ex)
+        self.scheduler.executors = self.live_executors()
+        return orphans
+
+    def add_executor(self, spec: ExecutorSpec) -> Executor:
+        group = spec.pool_group or spec.device
+        if group not in self.pools:
+            raise KeyError(f"unknown pool group {group!r}")
+        ex = Executor(
+            ex_id=f"{spec.device}{len(self.executors)}", device=spec.device,
+            coe=self.coe, device_profile=spec.profile,
+            pool=self.pools[group], batch_bytes=spec.batch_bytes,
+            manager=self.manager, engine=self.engine,
+            prefetch=self.policy.prefetch,
+            protect_queued=self.policy.protect_queued)
+        self.executors.append(ex)
+        self.scheduler.executors = self.live_executors()
+        return ex
+
+    # --- beyond-paper: work stealing ------------------------------------ #
+    def try_steal(self, thief: Executor, now: float) -> bool:
+        """Cost-aware stealing: an idle executor takes a whole group from the
+        most-loaded queue only when its own cost (execution + any expert load)
+        is smaller than BOTH the time removed from the victim and the idle
+        gap — a blind tail-steal un-does the dependency-aware grouping by
+        paying a switch the victim would not have paid."""
+        if not self.policy.work_stealing or thief.queue:
+            return False
+        cands = [e for e in self.live_executors()
+                 if e is not thief and len(e.queue) >= 2]
+        if not cands:
+            return False
+        victim = max(cands, key=lambda e: e.pending_time(now))
+        gap = victim.pending_time(now) - thief.pending_time(now)
+        if gap <= 0:
+            return False
+        best, best_cost = None, None
+        for i in range(len(victim.queue) - 1, 0, -1):   # never steal the head
+            g = victim.queue[i]
+            arch = self.coe.spec(g.expert_id).arch
+            cost = thief.profile(arch).exec_latency(len(g))
+            if g.expert_id not in thief.pool:
+                cost += thief.load_latency(g.expert_id)
+            saved = victim.profile(arch).exec_latency(len(g))
+            if g.expert_id not in victim.pool:
+                saved += victim.load_latency(g.expert_id)
+            if cost < saved and cost < gap \
+                    and (best_cost is None or cost < best_cost):
+                best, best_cost = i, cost
+        if best is None:
+            return False
+        thief.queue.append(victim.queue.pop(best))
+        return True
+
+    # ------------------------------------------------------------------ #
+    def collect_metrics(self, completed: List[Request], makespan: float) -> Metrics:
+        m = Metrics()
+        m.completed = len(completed)
+        m.switches = sum(e.stats.switches for e in self.executors)
+        m.evictions = sum(e.stats.evictions for e in self.executors)
+        m.makespan = makespan
+        m.throughput = m.completed / makespan if makespan > 0 else 0.0
+        lats = [r.done_time - r.arrival_time for r in completed
+                if r.done_time is not None]
+        m.avg_latency = sum(lats) / len(lats) if lats else 0.0
+        m.sched_time = self.sched_time
+        m.mgmt_time = sum(e.stats.mgmt_time for e in self.executors)
+        m.per_executor = {
+            e.id: dataclasses.asdict(e.stats) for e in self.executors}
+        return m

@@ -1,0 +1,157 @@
+"""Event-driven serving simulator (virtual clock).
+
+Drives the CoServeSystem state machine over an arrival stream: ARRIVAL events
+run the dependency-aware scheduler; executors interleave LOAD_DONE/EXEC_DONE
+events with single-load-channel overlap (prefetch). Chained experts (routing
+follow-ups) re-enter as arrivals at completion time. Also supports failure /
+elastic-scaling injections for the fault-tolerance tests.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.coe import Request
+from repro.core.executor import Executor
+from repro.core.serving import CoServeSystem, Metrics
+
+ARRIVAL, EXEC_DONE, LOAD_DONE, INJECT = range(4)
+
+
+class Simulation:
+    def __init__(self, system: CoServeSystem):
+        self.system = system
+        self.heap: List[Tuple[float, int, int, Any]] = []
+        self._seq = itertools.count()
+        self.completed: List[Request] = []
+        self.now = 0.0
+
+    # ------------------------------------------------------------------ #
+    def push(self, t: float, kind: int, payload: Any):
+        heapq.heappush(self.heap, (t, next(self._seq), kind, payload))
+
+    def submit(self, requests: Sequence[Request]):
+        for r in requests:
+            self.push(r.arrival_time, ARRIVAL, r)
+
+    def inject(self, t: float, fn: Callable[["Simulation"], None]):
+        """Schedule a fault/elasticity injection at time t."""
+        self.push(t, INJECT, fn)
+
+    # ------------------------------------------------------------------ #
+    def run(self) -> Metrics:
+        sys = self.system
+        while self.heap:
+            t, _, kind, payload = heapq.heappop(self.heap)
+            self.now = t
+            if kind == ARRIVAL:
+                ex = sys.assign(payload, t)
+                self.kick(ex, t)
+            elif kind == LOAD_DONE:
+                ex, eid = payload
+                if not ex.alive:
+                    continue
+                ex.finish_load(eid)
+                # the pool is shared: peers waiting on this expert wake too
+                for peer in sys.live_executors():
+                    if peer.pool is ex.pool:
+                        self.kick(peer, t)
+            elif kind == EXEC_DONE:
+                ex = payload
+                if not ex.alive or ex.current is None:
+                    continue
+                eid, batch, outputs = ex.finish_batch(t)
+                for i, req in enumerate(batch):
+                    out = outputs[i] if outputs else None
+                    follow = sys.route_followup(req, eid, out)
+                    if follow is None:
+                        self.completed.append(req)
+                    else:
+                        follow.arrival_time = t
+                        self.push(t, ARRIVAL, follow)
+                self.kick(ex, t)
+                # a finished batch unpins its expert: pool-sharing peers whose
+                # pending load was blocked on that pin can now proceed
+                for peer in sys.live_executors():
+                    if peer is not ex and peer.pool is ex.pool:
+                        self.kick(peer, t)
+                # idle peers may steal from the longest queue
+                for peer in sys.live_executors():
+                    if peer is not ex and not peer.queue and peer.current is None:
+                        if sys.try_steal(peer, t):
+                            self.kick(peer, t)
+            else:  # INJECT
+                payload(self)
+        makespan = max((r.done_time or 0.0) for r in self.completed) \
+            if self.completed else 0.0
+        return sys.collect_metrics(self.completed, makespan)
+
+    # ------------------------------------------------------------------ #
+    def kick(self, ex: Executor, now: float):
+        """Advance one executor: start loads and/or the next batch."""
+        if not ex.alive:
+            return
+        self.system.scheduler.reorder_head(ex)
+        # start executing if the head group's expert is ready
+        if ex.current is None:
+            if not ex.queue and self.system.try_steal(ex, now):
+                pass
+            done = ex.start_next_batch(now)
+            if done is not None:
+                self.push(done, EXEC_DONE, ex)
+            elif ex.queue and ex.load_in_flight is None:
+                head = ex.queue[0].expert_id
+                if head not in ex.pool:
+                    t_done = ex.start_load(head, now)
+                    if t_done is not None:
+                        self.push(t_done, LOAD_DONE, (ex, head))
+        # overlap: prefetch the next missing expert while executing — strict
+        # mode never displaces experts that still have queued groups
+        if ex.prefetch and ex.current is not None and ex.load_in_flight is None:
+            cand = ex.prefetch_candidate()
+            if cand is not None:
+                t_done = ex.start_load(cand, now, strict=True)
+                if t_done is not None:
+                    self.push(t_done, LOAD_DONE, (ex, cand))
+
+    # ------------------------------------------------------------------ #
+    def fail_executor_at(self, t: float, index: int):
+        def _fail(sim: "Simulation"):
+            sys = sim.system
+            ex = sys.executors[index]
+            if not ex.alive:
+                return
+            orphans = sys.fail_executor(ex, sim.now)
+            for r in orphans:   # at-most-once re-queue of in-flight work
+                sim.push(sim.now, ARRIVAL, r)
+            # peers may have been waiting on the dead executor's load channel
+            for peer in sys.live_executors():
+                sim.kick(peer, sim.now)
+        self.inject(t, _fail)
+
+    def add_executor_at(self, t: float, spec):
+        def _add(sim: "Simulation"):
+            sim.system.add_executor(spec)
+        self.inject(t, _add)
+
+
+def run_real(system: CoServeSystem, requests: Sequence[Request]) -> Metrics:
+    """Drive the same state machine with the RealEngine in wall-clock time.
+
+    Arrivals are replayed in order (timestamps compressed); executors are
+    drained cooperatively in one process. Switch counts match the simulator
+    for identical scheduling decisions.
+    """
+    import time
+    t0 = time.perf_counter()
+    sim = Simulation(system)
+    now = 0.0
+    for r in requests:
+        r.arrival_time = now
+        sim.push(now, ARRIVAL, r)
+    metrics = sim.run()
+    metrics.makespan = time.perf_counter() - t0
+    metrics.throughput = metrics.completed / metrics.makespan \
+        if metrics.makespan > 0 else 0.0
+    return metrics

@@ -1,0 +1,51 @@
+"""Jit'd kernel entry points with backend selection.
+
+On TPU the Pallas kernels lower natively; elsewhere (this CPU container) they
+run in ``interpret=True`` mode. ``impl="xla"`` falls back to the pure-jnp
+reference (used by the dry-run, where only XLA ops lower for the host
+platform). Models call these through ``cfg.attn_impl``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.mamba_scan import mamba_scan
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention_op(q, k, v, *, causal=True, window=0, impl="pallas",
+                       block_q=128, block_k=128):
+    """q: [B,H,S,D]; k,v: [B,Hkv,T,D]."""
+    if impl == "xla":
+        return ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    return flash_attention(q, k, v, causal=causal, window=window,
+                           block_q=block_q, block_k=block_k,
+                           interpret=_interpret())
+
+
+def decode_attention_op(q, k_cache, v_cache, pos, *, window=0, impl="pallas",
+                        block_k=256):
+    """q: [B,H,D]; caches: [B,Hkv,W,D]."""
+    if impl == "xla":
+        return ref.decode_attention_ref(q, k_cache, v_cache, pos,
+                                        window=window)
+    return decode_attention(q, k_cache, v_cache, pos, window=window,
+                            block_k=block_k, interpret=_interpret())
+
+
+def mamba_scan_op(x, dt, b_mat, c_mat, a, d_vec, *, impl="pallas",
+                  block_d=128, block_s=128):
+    """Returns (y [B,S,D], h_final [B,D,N])."""
+    if impl == "xla":
+        return ref.mamba_scan_ref(x, dt, b_mat, c_mat, a, d_vec)
+    return mamba_scan(x, dt, b_mat, c_mat, a, d_vec,
+                      block_d=block_d, block_s=block_s,
+                      interpret=_interpret())

@@ -1,0 +1,81 @@
+"""Pure-jnp oracles for every Pallas kernel (independent, naive math)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """Naive attention. q: [B,H,S,D]; k,v: [B,Hkv,T,D]; GQA by repetition."""
+    b, h, s, d = q.shape
+    hkv, t = k.shape[1], k.shape[2]
+    g = h // hkv
+    k = jnp.repeat(k, g, axis=1)
+    v = jnp.repeat(v, g, axis=1)
+    scores = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / (d ** 0.5)
+    q_pos = jnp.arange(s)[:, None]
+    k_pos = jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask &= q_pos + (t - s) >= k_pos          # right-aligned causality
+    if window:
+        mask &= (q_pos + (t - s) - k_pos) < window
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhst,bhtd->bhsd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, pos, *, window: int = 0):
+    """Single-token GQA attention vs a ring cache.
+
+    q: [B,H,D]; caches: [B,Hkv,W,D]; ``pos`` absolute position of the new
+    token (cache slot i holds absolute position pos - ((pos - i) mod W))."""
+    b, h, d = q.shape
+    hkv, w = k_cache.shape[1], k_cache.shape[2]
+    g = h // hkv
+    k = jnp.repeat(k_cache, g, axis=1)
+    v = jnp.repeat(v_cache, g, axis=1)
+    scores = jnp.einsum("bhd,bhwd->bhw", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / (d ** 0.5)
+    slots = jnp.arange(w)
+    abs_pos = pos - jnp.mod(pos - slots, w)
+    valid = abs_pos >= 0
+    if window:
+        valid &= (pos - abs_pos) < window
+    scores = jnp.where(valid[None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhw,bhwd->bhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def mamba_scan_ref(x, dt, b_mat, c_mat, a, d_vec, h0=None):
+    """Naive sequential selective scan.
+
+    x, dt: [B,S,D]; b_mat, c_mat: [B,S,N]; a: [D,N]; d_vec: [D].
+    Returns (y [B,S,D], h_final [B,D,N])."""
+    bsz, s, d = x.shape
+    n = b_mat.shape[-1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    bf = b_mat.astype(jnp.float32)
+    cf = c_mat.astype(jnp.float32)
+    af = a.astype(jnp.float32)
+    h = jnp.zeros((bsz, d, n), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp
+        da = jnp.exp(dt_t[:, :, None] * af[None])            # [B,D,N]
+        dbx = (dt_t * x_t)[:, :, None] * b_t[:, None, :]     # [B,D,N]
+        h = da * h + dbx
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    h, ys = jax.lax.scan(
+        step, h, (xf.swapaxes(0, 1), dtf.swapaxes(0, 1),
+                  bf.swapaxes(0, 1), cf.swapaxes(0, 1)))
+    y = ys.swapaxes(0, 1) + xf * d_vec.astype(jnp.float32)[None, None]
+    return y.astype(x.dtype), h

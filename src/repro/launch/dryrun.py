@@ -1,0 +1,157 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware:
+``.lower().compile()`` must succeed on the single-pod 16x16 mesh and the
+2x16x16 multi-pod mesh for every assigned cell; ``memory_analysis()`` proves
+the per-device footprint fits, ``cost_analysis()`` + the HLO collective sweep
+feed EXPERIMENTS.md SSRoofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch starcoder2_3b --shape train_4k
+  python -m repro.launch.dryrun --sweep [--multi-pod] [--out out.json]
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax  # noqa: E402  (must come after XLA_FLAGS)
+
+from repro.configs import ARCH_IDS, applicable_shapes, get_config  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.specs import build_cell, lower_cell  # noqa: E402
+
+
+COLLECTIVE_RE = re.compile(
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)")
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> dict:
+    """Sum operand bytes of every collective op in the optimized HLO."""
+    from repro.launch.hlo import parse_collective_bytes
+    return parse_collective_bytes(hlo_text)
+
+
+def _compile_stats(arch, shape, mesh, n_periods=None) -> dict:
+    t0 = time.time()
+    cell = build_cell(arch, shape, mesh, n_periods=n_periods)
+    lowered = lower_cell(cell, mesh)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    coll = collective_bytes_from_hlo(compiled.as_text())
+    return {
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "flops": cost.get("flops", 0.0),
+        "bytes_accessed": cost.get("bytes accessed", 0.0),
+        "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+        "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+        "peak_bytes": getattr(mem, "peak_memory_in_bytes", 0),
+        "collective_bytes": coll,
+        "n_periods": n_periods,
+    }
+
+
+def run_cell(arch: str, shape: str, mesh, verbose: bool = True,
+             with_roofline: bool = True) -> dict:
+    """Full-depth compile (validates sharding + memory) and, optionally,
+    1-/2-period compiles to extrapolate true per-period costs (XLA counts a
+    while-loop body once regardless of trip count)."""
+    full = _compile_stats(arch, shape, mesh)
+    cfg = get_config(arch)
+    result = {"arch": arch, "shape": shape,
+              "mesh": list(mesh.devices.shape), "ok": True, **full}
+
+    if with_roofline:
+        p1 = _compile_stats(arch, shape, mesh, n_periods=1)
+        p2 = _compile_stats(arch, shape, mesh, n_periods=2)
+        n = cfg.num_periods()
+
+        def extrap(key):
+            if key == "collective_bytes":
+                kinds = set(p1[key]) | set(p2[key])
+                return {k: p1[key].get(k, 0.0)
+                        + (p2[key].get(k, 0.0) - p1[key].get(k, 0.0)) * (n - 1)
+                        for k in kinds}
+            return p1[key] + (p2[key] - p1[key]) * (n - 1)
+
+        result["roofline"] = {
+            "flops": extrap("flops"),
+            "bytes_accessed": extrap("bytes_accessed"),
+            "collective_bytes": extrap("collective_bytes"),
+            "n_periods": n,
+            "p1_flops": p1["flops"], "p2_flops": p2["flops"],
+        }
+
+    if verbose:
+        r = result.get("roofline", full)
+        coll = r["collective_bytes"]
+        print(f"[{arch} x {shape} x {'x'.join(map(str, mesh.devices.shape))}] "
+              f"ok: compile {full['compile_s']:.0f}s | "
+              f"flops/dev {r['flops']:.3g} | "
+              f"args {full['argument_bytes']/2**30:.2f} GiB | "
+              f"temp {full['temp_bytes']/2**30:.2f} GiB | "
+              f"coll {sum(coll.values())/2**20:.1f} MiB")
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--sweep", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="dryrun_results.json")
+    args = ap.parse_args()
+
+    meshes = []
+    if args.both_meshes:
+        meshes = [make_production_mesh(multi_pod=False),
+                  make_production_mesh(multi_pod=True)]
+    else:
+        meshes = [make_production_mesh(multi_pod=args.multi_pod)]
+
+    results = []
+    # incremental persistence: a crashed cell loses nothing
+    def save():
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+
+    if args.sweep:
+        cells = [(a, s) for a in ARCH_IDS
+                 for s in applicable_shapes(get_config(a))]
+    else:
+        cells = [(args.arch, args.shape)]
+
+    failures = 0
+    for mesh in meshes:
+        single_pod = len(mesh.devices.shape) == 2
+        for arch, shape in cells:
+            try:
+                results.append(run_cell(arch, shape, mesh,
+                                        with_roofline=single_pod))
+            except Exception as e:  # noqa: BLE001 — record and continue
+                failures += 1
+                results.append({
+                    "arch": arch, "shape": shape,
+                    "mesh": list(mesh.devices.shape), "ok": False,
+                    "error": f"{type(e).__name__}: {e}"})
+                print(f"[{arch} x {shape}] FAILED: {e}")
+                traceback.print_exc()
+            save()
+    print(f"\n{len(results) - failures}/{len(results)} cells ok -> {args.out}")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

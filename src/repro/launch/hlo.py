@@ -1,0 +1,59 @@
+"""Optimized-HLO analysis: per-collective byte accounting for the roofline.
+
+``cost_analysis()`` does not report collective traffic, so we parse the
+compiled module text and sum operand sizes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute instruction. Shapes are read
+from the instruction's result type (for reduce-scatter we scale back up by
+the shard count where it matters; operand-side accounting keeps this simple
+and consistent across op kinds).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+# e.g.  %all-gather.3 = bf16[16,1024,512]{2,1,0} all-gather(...)
+#       ROOT %r = (f32[8,128]{1,0}, f32[8,128]{1,0}) all-reduce(...)
+_INSTR_RE = re.compile(
+    r"=\s*(?P<type>\([^)]*\)|[a-z0-9]+\[[^\]]*\](?:\{[^}]*\})?)\s*"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)[\s(]")
+
+_SHAPE_RE = re.compile(r"(?P<dtype>[a-z]+[0-9]+|pred)\[(?P<dims>[0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt = m.group("dtype")
+        dims = m.group("dims")
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def parse_collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Bytes moved per collective kind (result-shape accounting, per device)."""
+    out: Dict[str, float] = {}
+    for m in _INSTR_RE.finditer(hlo_text):
+        op = m.group("op")
+        b = _shape_bytes(m.group("type"))
+        out[op] = out.get(op, 0.0) + b
+    return out
+
+
+def count_collectives(hlo_text: str) -> Dict[str, int]:
+    out: Dict[str, int] = {}
+    for m in _INSTR_RE.finditer(hlo_text):
+        op = m.group("op")
+        out[op] = out.get(op, 0) + 1
+    return out

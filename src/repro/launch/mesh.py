@@ -1,0 +1,31 @@
+"""Production mesh construction.
+
+A function (not a module constant) so importing never touches jax device
+state. Single pod: 16x16 = 256 chips over ("data", "model"); multi-pod:
+2x16x16 = 512 over ("pod", "data", "model"). The dry-run provides 512 host
+placeholder devices via XLA_FLAGS before any jax import.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, found {len(devices)} — the "
+            "dry-run must set XLA_FLAGS=--xla_force_host_platform_device_count"
+            "=512 before importing jax")
+    return jax.make_mesh(shape, axes, devices=devices[:n])
+
+
+def make_local_mesh():
+    """1x1 mesh for CPU smoke tests and examples."""
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         devices=jax.devices()[:1])

@@ -1,0 +1,217 @@
+"""Serving driver (deliverable b): the CoServe system end to end.
+
+Two backends behind the SAME scheduler/manager code:
+
+  --mode sim   paper-scale circuit-board workload (352 experts, 2500+ reqs)
+               on the event-driven engine — reproduces the paper's numbers.
+  --mode real  actually loads JAX expert params across host/disk tiers and
+               runs jitted forwards on the local device, with measured wall
+               time (scaled-down pool so experts really switch).
+
+  PYTHONPATH=src python -m repro.launch.serve --mode sim  --board A --requests 2500
+  PYTHONPATH=src python -m repro.launch.serve --mode real --requests 200
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import tempfile
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import (COSERVE, COSERVE_NONE, SAMBA, SAMBA_FIFO,
+                        SAMBA_PARALLEL, CoEModel, CoServeSystem, DeviceProfile,
+                        ExecutorSpec, ExpertSpec, HostStore, RealEngine,
+                        Request, RoutingModule, Simulation, SystemPolicy,
+                        TierSpec, microbenchmark_arch, run_real)
+from repro.core.memory import NUMA, UMA
+from repro.core.workload import (BOARD_A, BOARD_B, build_board_coe,
+                                 make_executor_specs, make_task_requests)
+
+POLICIES: Dict[str, SystemPolicy] = {
+    "coserve": COSERVE,
+    "coserve_none": COSERVE_NONE,
+    "samba": SAMBA,
+    "samba_fifo": SAMBA_FIFO,
+    "samba_parallel": SAMBA_PARALLEL,
+}
+
+
+# --------------------------------------------------------------------------- #
+# sim mode — the paper's full-scale workload
+# --------------------------------------------------------------------------- #
+
+def run_sim(args) -> dict:
+    board = BOARD_A if args.board == "A" else BOARD_B
+    tier = NUMA if args.tier == "numa" else UMA
+    coe = build_board_coe(board)
+    n_gpu, n_cpu = args.executors
+    if POLICIES[args.policy].assign == "single":
+        n_gpu, n_cpu = 1, 0
+    pools, specs = make_executor_specs(tier, n_gpu, n_cpu)
+    system = CoServeSystem(coe, specs, pools, policy=POLICIES[args.policy],
+                           tier=tier)
+    sim = Simulation(system)
+    sim.submit(make_task_requests(board, args.requests))
+    m = sim.run()
+    return {"mode": "sim", "board": board.name, "tier": tier.name,
+            "policy": args.policy, "completed": m.completed,
+            "throughput": round(m.throughput, 2), "switches": m.switches,
+            "makespan_s": round(m.makespan, 2),
+            "avg_latency_s": round(m.avg_latency, 4)}
+
+
+# --------------------------------------------------------------------------- #
+# real mode — tiny JAX experts, actual loads + jitted execution
+# --------------------------------------------------------------------------- #
+
+def _tiny_apply_fns():
+    import jax
+    import jax.numpy as jnp
+
+    def mlp(params, x):
+        h = jnp.tanh(x @ params["w1"] + params["b1"])
+        return h @ params["w2"] + params["b2"]
+
+    return {"tiny_cls": jax.jit(mlp), "tiny_det": jax.jit(mlp)}
+
+
+def _tiny_params(key, d_in: int, d_h: int, d_out: int):
+    import jax
+    ks = jax.random.split(key, 2)
+    return {"w1": jax.random.normal(ks[0], (d_in, d_h)) * 0.1,
+            "b1": np.zeros((d_h,), np.float32),
+            "w2": jax.random.normal(ks[1], (d_h, d_out)) * 0.1,
+            "b2": np.zeros((d_out,), np.float32)}
+
+
+def build_real_system(n_components: int = 24, n_detection: int = 4,
+                      pool_experts: int = 6, n_executors: int = 2,
+                      store_root: Optional[str] = None,
+                      policy: SystemPolicy = COSERVE,
+                      d_hidden: int = 256,
+                      ) -> Tuple[CoServeSystem, CoEModel]:
+    """A small CoE of real JAX MLP experts over host+disk tiers."""
+    import jax
+
+    apply_fns = _tiny_apply_fns()
+    store = HostStore(root=store_root or tempfile.mkdtemp(prefix="coserve_"))
+    rng = np.random.RandomState(0)
+    det_assign = rng.randint(0, n_detection, n_components)
+    needs_det = rng.rand(n_components) < 0.5
+
+    payload = {
+        "make_batch": lambda reqs: np.stack([r.data["x"] for r in reqs]),
+        "interpret": lambda out: ["ok" if o == 0 else "defect"
+                                  for o in np.argmax(out, -1)],
+    }
+    experts: List[ExpertSpec] = []
+    key = jax.random.PRNGKey(0)
+    keys = jax.random.split(key, n_components + n_detection)
+    mem = (64 * d_hidden + d_hidden * 2 + d_hidden + 2) * 4
+    for c in range(n_components):
+        eid = f"cls{c:03d}"
+        params = _tiny_params(keys[c], 64, d_hidden, 2)
+        # half the catalog starts on the disk tier, half in host DRAM
+        (store.put_disk if c % 2 else store.put_host)(eid, params)
+        experts.append(ExpertSpec(
+            id=eid, arch="tiny_cls", mem_bytes=mem, payload=payload,
+            usage_prob=1.0 / n_components))
+    for dnum in range(n_detection):
+        eid = f"det{dnum:02d}"
+        params = _tiny_params(keys[n_components + dnum], 64, d_hidden, 2)
+        store.put_disk(eid, params)
+        ups = tuple(f"cls{c:03d}" for c in range(n_components)
+                    if needs_det[c] and det_assign[c] == dnum)
+        experts.append(ExpertSpec(
+            id=eid, arch="tiny_det", mem_bytes=mem, payload=payload,
+            depends_on=ups, usage_prob=0.2))
+
+    def first_expert(data) -> str:
+        return f"cls{data['component']:03d}"
+
+    def next_expert(req: Request, eid: str, output) -> Optional[str]:
+        if eid.startswith("cls") and req.data.get("needs_detection") \
+                and output == "ok":
+            return f"det{req.data['det_expert']:02d}"
+        return None
+
+    coe = CoEModel(experts, RoutingModule(first_expert, next_expert))
+    engine = RealEngine(coe, store, apply_fns)
+
+    # offline profiling with the real runner (paper §4.5)
+    import time as _t
+
+    def run_batch_factory(arch_params):
+        def run_batch(n: int) -> float:
+            x = np.zeros((n, 64), np.float32)
+            fn = apply_fns["tiny_cls"]
+            fn(arch_params, x)  # warm
+            t0 = _t.perf_counter()
+            jax.block_until_ready(fn(arch_params, x))
+            return _t.perf_counter() - t0
+        return run_batch
+
+    tier = TierSpec(name="local", unified=True, host_cache_bytes=0,
+                    device_bytes=pool_experts * mem + 4 * mem)
+    sample = _tiny_params(jax.random.PRNGKey(9), 64, d_hidden, 2)
+    prof = microbenchmark_arch("tiny_cls", run_batch_factory(sample), mem,
+                               act_bytes_per_item=64 * 4, tier=tier,
+                               batch_sizes=(1, 2, 4, 8), repeats=2)
+    det_prof = dataclasses.replace(prof, arch="tiny_det")
+    dev_prof = DeviceProfile(device="gpu", tier=tier,
+                             arch_profiles={"tiny_cls": prof,
+                                            "tiny_det": det_prof})
+    pools = {"gpu": pool_experts * mem}
+    specs = [ExecutorSpec("gpu", dev_prof, 4 * mem, "gpu")
+             for _ in range(n_executors)]
+    system = CoServeSystem(coe, specs, pools, policy=policy, tier=tier,
+                           engine=engine)
+    return system, coe
+
+
+def run_real_mode(args) -> dict:
+    system, coe = build_real_system(policy=POLICIES[args.policy])
+    rng = np.random.RandomState(1)
+    n_components = sum(1 for e in coe.experts if e.startswith("cls"))
+    det_assign = np.random.RandomState(0).randint(
+        0, sum(1 for e in coe.experts if e.startswith("det")), n_components)
+    needs_det = np.random.RandomState(0).rand(n_components) < 0.5
+    reqs = []
+    for i in range(args.requests):
+        c = int(rng.randint(n_components))
+        reqs.append(Request(
+            id=i, expert_id=f"cls{c:03d}",
+            data={"component": c, "x": rng.randn(64).astype(np.float32),
+                  "needs_detection": bool(needs_det[c]),
+                  "det_expert": int(det_assign[c])}))
+    m = run_real(system, reqs)
+    return {"mode": "real", "policy": args.policy, "completed": m.completed,
+            "throughput": round(m.throughput, 2), "switches": m.switches,
+            "makespan_s": round(m.makespan, 3)}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", default="sim", choices=["sim", "real"])
+    ap.add_argument("--board", default="A", choices=["A", "B"])
+    ap.add_argument("--tier", default="numa", choices=["numa", "uma"])
+    ap.add_argument("--policy", default="coserve", choices=list(POLICIES))
+    ap.add_argument("--requests", type=int, default=2500)
+    ap.add_argument("--executors", type=lambda s: tuple(map(int, s.split(","))),
+                    default=(3, 1), help="n_gpu,n_cpu")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    result = run_sim(args) if args.mode == "sim" else run_real_mode(args)
+    print(json.dumps(result, indent=2))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(result, f, indent=2)
+    return result
+
+
+if __name__ == "__main__":
+    main()

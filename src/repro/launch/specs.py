@@ -1,0 +1,259 @@
+"""Lowerable (function, abstract inputs, shardings) per (arch x shape x mesh).
+
+Every assigned cell becomes a ``LoweredSpec``: the step function
+(train / prefill / decode), ShapeDtypeStruct stand-ins for all inputs (no
+allocation), and NamedShardings resolved through the logical rule tables.
+``build_cell`` is what both the dry-run and the roofline pass call.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, applicable_shapes, get_config
+from repro.configs.base import shape_overrides
+from repro.models import encdec, kvcache, transformer
+from repro.models.config import ModelConfig
+from repro.sharding.logical import rules_for, use_rules
+from repro.sharding.partition import param_shardings
+from repro.training.optimizer import adamw_init
+from repro.training.train_loop import make_train_step, make_whisper_train_step
+
+OPT_AXES_STEP = ((),)  # scalar step
+
+
+@dataclasses.dataclass
+class LoweredSpec:
+    arch: str
+    shape: str
+    fn: Callable
+    abstract_args: Tuple[Any, ...]
+    in_shardings: Tuple[Any, ...]
+    donate_argnums: Tuple[int, ...]
+    cfg: ModelConfig
+    rules: Any
+
+
+def _named(mesh, spec_tree, axes_tree, rules):
+    return param_shardings(spec_tree, axes_tree, mesh, rules)
+
+
+def _tokens_spec(batch, seq):
+    return jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+
+
+def _serve_cfg(cfg: ModelConfig) -> ModelConfig:
+    return dataclasses.replace(cfg, param_dtype="bfloat16", remat=False)
+
+
+def _positions_spec(cfg, batch, seq):
+    if cfg.mrope_sections:
+        return jax.ShapeDtypeStruct((3, batch, seq), jnp.int32)
+    return None
+
+
+def _ep_split(cfg: ModelConfig, mesh: Mesh) -> int:
+    """Virtual-expert EP split (SSPerf B4): when the expert count does not
+    divide the model axis but a half-width split does, split each expert into
+    half-ff virtual experts so expert parallelism applies exactly (mixtral 8e
+    on a 16-way axis -> split 2). SwiGLU is elementwise in ff -> exact."""
+    import os
+    # Measured net-negative under GSPMD (dispatch/combine gathers lower to
+    # mask+all-reduce that outweighs the removed partial-sum ARs — §Perf B4,
+    # refuted): exact + tested, but opt-in until a custom all-to-all dispatch
+    # lands.
+    if not cfg.moe_num_experts or not os.environ.get("REPRO_EP_SPLIT"):
+        return 1
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    model_n = sizes.get("model", 1)
+    e, ff = cfg.moe_num_experts, (cfg.moe_d_ff or cfg.d_ff)
+    if model_n <= 1 or e % model_n == 0:
+        return 1
+    if model_n % e == 0:
+        split = model_n // e
+        if ff % split == 0 and (ff // split) % 128 == 0:  # lane-aligned
+            return split
+    return 1
+
+
+def build_cell(arch: str, shape: str, mesh: Mesh,
+               n_periods: Optional[int] = None) -> LoweredSpec:
+    """``n_periods`` overrides the depth (in scan periods) — the roofline
+    pass lowers 1- and 2-period variants and extrapolates per-period costs,
+    because XLA's cost_analysis counts a while-loop body once regardless of
+    trip count."""
+    cfg = get_config(arch)
+    if shape not in applicable_shapes(cfg):
+        raise ValueError(f"{arch} x {shape}: skipped "
+                         "(see DESIGN.md SSArch-applicability)")
+    cfg = shape_overrides(cfg, shape)
+    cfg = dataclasses.replace(cfg, moe_ep_split=_ep_split(cfg, mesh))
+    if n_periods is not None:
+        # unrolled shallow variant: XLA cost_analysis counts a while body
+        # once, so per-period costs must come from unrolled 1- vs 2-period
+        # compiles (the full-depth scan compile validates memory/sharding)
+        cfg = dataclasses.replace(
+            cfg, num_layers=cfg.period() * n_periods, scan_layers=False,
+            encoder_layers=n_periods if cfg.is_encoder_decoder else 0)
+    spec = SHAPES[shape]
+    b, s = spec.global_batch, spec.seq_len
+    mode = spec.kind                       # "train" | "prefill" | "decode"
+    if mode != "train":
+        cfg = _serve_cfg(cfg)
+    rules = rules_for(cfg, mesh, mode)
+
+    if cfg.is_encoder_decoder:
+        return _build_encdec_cell(arch, shape, cfg, mesh, rules, spec)
+
+    p_axes = transformer.param_axes(cfg)
+    abstract = transformer.abstract_params(cfg)
+    p_shard = _named(mesh, abstract, p_axes, rules)
+
+    batch_axes = {"tokens": ("batch", None), "labels": ("batch", None)}
+    if cfg.mrope_sections:
+        batch_axes["positions"] = (None, "batch", None)
+
+    if spec.kind == "train":
+        step = make_train_step(cfg)
+        opt = jax.eval_shape(lambda p: adamw_init(p), abstract)
+        opt_axes = type(opt)(step=(), mu=p_axes, nu=p_axes)
+        opt_shard = _named(mesh, opt, opt_axes, rules)
+        batch = {"tokens": _tokens_spec(b, s), "labels": _tokens_spec(b, s)}
+        if cfg.mrope_sections:
+            batch["positions"] = _positions_spec(cfg, b, s)
+        b_shard = _named(mesh, batch, batch_axes, rules)
+        return LoweredSpec(arch, shape, step, (abstract, opt, batch),
+                           (p_shard, opt_shard, b_shard), (0, 1), cfg, rules)
+
+    if spec.kind == "prefill":
+        width = kvcache.cache_width(cfg, s)
+
+        def prefill_fn(params, tokens, positions=None):
+            return transformer.prefill(params, tokens, cfg, width,
+                                       positions=positions)
+
+        args = [abstract, _tokens_spec(b, s)]
+        shards = [p_shard,
+                  NamedSharding(mesh, _resolve(mesh, (b, s),
+                                               ("batch", None), rules))]
+        if cfg.mrope_sections:
+            args.append(_positions_spec(cfg, b, s))
+            shards.append(NamedSharding(
+                mesh, _resolve(mesh, (3, b, s), (None, "batch", None), rules)))
+        return LoweredSpec(arch, shape, prefill_fn, tuple(args),
+                           tuple(shards), (), cfg, rules)
+
+    # decode
+    width = kvcache.cache_width(cfg, s)
+    cache = jax.eval_shape(lambda: kvcache.init_cache(cfg, b, width))
+    c_axes = kvcache.cache_axes(cfg)
+    c_shard = _named(mesh, cache, c_axes, rules)
+
+    def decode_fn(params, token, pos, cache, positions=None):
+        return transformer.decode_step(params, token, pos, cache, cfg,
+                                       positions=positions)
+
+    args = [abstract, _tokens_spec(b, 1),
+            jax.ShapeDtypeStruct((), jnp.int32), cache]
+    shards = [p_shard,
+              NamedSharding(mesh, _resolve(mesh, (b, 1), ("batch", None), rules)),
+              NamedSharding(mesh, P()), c_shard]
+    if cfg.mrope_sections:
+        args.append(_positions_spec(cfg, b, 1))
+        shards.append(NamedSharding(
+            mesh, _resolve(mesh, (3, b, 1), (None, "batch", None), rules)))
+    return LoweredSpec(arch, shape, decode_fn, tuple(args), tuple(shards),
+                       (3,), cfg, rules)
+
+
+def _resolve(mesh, shape, axes, rules):
+    from repro.sharding.logical import resolve_spec
+    return resolve_spec(shape, axes, mesh, rules)
+
+
+# --------------------------------------------------------------------------- #
+# whisper (enc-dec)
+# --------------------------------------------------------------------------- #
+
+def _build_encdec_cell(arch, shape, cfg, mesh, rules, spec) -> LoweredSpec:
+    b, s = spec.global_batch, spec.seq_len
+    p_axes = encdec.param_axes(cfg)
+    abstract = encdec.abstract_params(cfg)
+    p_shard = _named(mesh, abstract, p_axes, rules)
+    f, d = cfg.encoder_seq, cfg.d_model
+    audio = jax.ShapeDtypeStruct((b, f, d), jnp.bfloat16)
+    audio_shard = NamedSharding(
+        mesh, _resolve(mesh, (b, f, d), ("batch", None, None), rules))
+    tok_shard = NamedSharding(
+        mesh, _resolve(mesh, (b, s), ("batch", None), rules))
+
+    if spec.kind == "train":
+        step = make_whisper_train_step(cfg)
+        opt = jax.eval_shape(lambda p: adamw_init(p), abstract)
+        opt_axes = type(opt)(step=(), mu=p_axes, nu=p_axes)
+        opt_shard = _named(mesh, opt, opt_axes, rules)
+        batch = {"tokens": _tokens_spec(b, s), "labels": _tokens_spec(b, s),
+                 "audio_embeds": audio}
+        b_shard = {"tokens": tok_shard, "labels": tok_shard,
+                   "audio_embeds": audio_shard}
+        return LoweredSpec(arch, shape, step, (abstract, opt, batch),
+                           (p_shard, opt_shard, b_shard), (0, 1), cfg, rules)
+
+    if spec.kind == "prefill":
+        def prefill_fn(params, tokens, audio_embeds):
+            return encdec.prefill(params, tokens, audio_embeds, cfg,
+                                  cache_width=s)
+        return LoweredSpec(arch, shape, prefill_fn,
+                           (abstract, _tokens_spec(b, s), audio),
+                           (p_shard, tok_shard, audio_shard), (), cfg, rules)
+
+    # decode: self cache (ring of width s) + cross cache (encoder K/V)
+    hd = cfg.resolved_head_dim
+    # self cache is heads-major [L,B,Hkv,W,hd] (see kvcache.slot_cache_axes);
+    # the cross cache keeps the [B,F,H,hd] segment layout chunked_attention
+    # consumes directly
+    self_axes = ("layers", "batch", "kv_heads", "kv_seq", None)
+    kv_axes = ("layers", "batch", "kv_seq", "kv_heads", None)
+    self_cache = {
+        "k": jax.ShapeDtypeStruct((cfg.num_layers, b, cfg.num_kv_heads, s, hd),
+                                  jnp.bfloat16),
+        "v": jax.ShapeDtypeStruct((cfg.num_layers, b, cfg.num_kv_heads, s, hd),
+                                  jnp.bfloat16),
+    }
+    cross_cache = {
+        "k": jax.ShapeDtypeStruct((cfg.num_layers, b, f, cfg.num_kv_heads, hd),
+                                  jnp.bfloat16),
+        "v": jax.ShapeDtypeStruct((cfg.num_layers, b, f, cfg.num_kv_heads, hd),
+                                  jnp.bfloat16),
+    }
+    cache = {"self": self_cache, "cross": cross_cache}
+    c_axes = {"self": {"k": self_axes, "v": self_axes},
+              "cross": {"k": kv_axes, "v": kv_axes}}
+    c_shard = _named(mesh, cache, c_axes, rules)
+
+    def decode_fn(params, token, pos, cache):
+        return encdec.decode_step(params, token, pos, cache, cfg)
+
+    return LoweredSpec(
+        arch, shape, decode_fn,
+        (abstract, _tokens_spec(b, 1), jax.ShapeDtypeStruct((), jnp.int32),
+         cache),
+        (p_shard,
+         NamedSharding(mesh, _resolve(mesh, (b, 1), ("batch", None), rules)),
+         NamedSharding(mesh, P()), c_shard),
+        (3,), cfg, rules)
+
+
+# --------------------------------------------------------------------------- #
+
+def lower_cell(cell: LoweredSpec, mesh: Mesh):
+    """jit + lower under the mesh and the cell's logical rules."""
+    with use_rules(cell.rules, mesh):
+        jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                         donate_argnums=cell.donate_argnums)
+        return jitted.lower(*cell.abstract_args)

@@ -1,0 +1,5 @@
+from repro.models.config import ModelConfig, BlockSlot
+from repro.models import transformer, layers, moe, ssm, kvcache, sampling
+
+__all__ = ["ModelConfig", "BlockSlot", "transformer", "layers", "moe", "ssm",
+           "kvcache", "sampling"]

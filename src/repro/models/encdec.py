@@ -1,0 +1,249 @@
+"""Whisper-style encoder-decoder backbone.
+
+The conv/audio frontend is a STUB per the assignment: ``input_specs`` provides
+precomputed frame embeddings [B, 1500, d]. Encoder = bidirectional attention
+stack; decoder = causal self-attention + cross-attention to the encoded audio.
+Sinusoidal positions (no RoPE), LayerNorm + GELU, MHA (kv == heads).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.sharding.logical import logical_constraint
+
+
+def sinusoidal_positions(length: int, d: int, offset=0):
+    pos = offset + jnp.arange(length)[:, None].astype(jnp.float32)
+    dim = jnp.arange(d // 2)[None, :].astype(jnp.float32)
+    inv = jnp.exp(-np.log(10000.0) * dim / max(1, d // 2 - 1))
+    ang = pos * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# --------------------------------------------------------------------------- #
+# init
+# --------------------------------------------------------------------------- #
+
+def _enc_layer(key, cfg, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm1": L.init_norm(cfg.d_model, "layernorm", dtype),
+        "attn": L.init_attention(k1, cfg, dtype),
+        "norm2": L.init_norm(cfg.d_model, "layernorm", dtype),
+        "mlp": L.init_mlp(k2, cfg.d_model, cfg.d_ff, "gelu", dtype),
+    }
+
+
+def _dec_layer(key, cfg, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "norm1": L.init_norm(cfg.d_model, "layernorm", dtype),
+        "attn": L.init_attention(k1, cfg, dtype),
+        "norm_x": L.init_norm(cfg.d_model, "layernorm", dtype),
+        "xattn": L.init_attention(k2, cfg, dtype),
+        "norm2": L.init_norm(cfg.d_model, "layernorm", dtype),
+        "mlp": L.init_mlp(k3, cfg.d_model, cfg.d_ff, "gelu", dtype),
+    }
+
+
+def init_params(key, cfg: ModelConfig):
+    dtype = jnp.dtype(cfg.param_dtype)
+    ke, kd, kt, kf1, kf2 = jax.random.split(key, 5)
+
+    def stack(maker, key, n):
+        per = [maker(k, cfg, dtype) for k in jax.random.split(key, n)]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *per)
+
+    return {
+        "embed": L.init_embedding(kt, cfg.vocab_size, cfg.d_model, dtype),
+        "encoder": stack(_enc_layer, ke, cfg.encoder_layers),
+        "enc_final": L.init_norm(cfg.d_model, "layernorm", dtype),
+        "decoder": stack(_dec_layer, kd, cfg.num_layers),
+        "dec_final": L.init_norm(cfg.d_model, "layernorm", dtype),
+    }
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+def param_axes(cfg: ModelConfig):
+    def layered(d):
+        return jax.tree.map(lambda t: ("layers",) + t, d,
+                            is_leaf=lambda x: isinstance(x, tuple) and all(
+                                isinstance(e, (str, type(None))) for e in x))
+
+    enc = layered({"norm1": dict(L.NORM_AXES), "attn": dict(L.ATTN_AXES),
+                   "norm2": dict(L.NORM_AXES), "mlp": L.mlp_axes("gelu")})
+    dec = layered({"norm1": dict(L.NORM_AXES), "attn": dict(L.ATTN_AXES),
+                   "norm_x": dict(L.NORM_AXES), "xattn": dict(L.ATTN_AXES),
+                   "norm2": dict(L.NORM_AXES), "mlp": L.mlp_axes("gelu")})
+    return {
+        "embed": dict(L.EMBED_AXES),
+        "encoder": enc,
+        "enc_final": dict(L.NORM_AXES),
+        "decoder": dec,
+        "dec_final": dict(L.NORM_AXES),
+    }
+
+
+
+def _scan_or_loop(body, carry, xs, scan: bool):
+    """lax.scan, or an unrolled python loop (dry-run cost extrapolation)."""
+    if scan:
+        return jax.lax.scan(body, carry, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        carry, y = body(carry, jax.tree.map(lambda a, i=i: a[i], xs))
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+# --------------------------------------------------------------------------- #
+# encoder
+# --------------------------------------------------------------------------- #
+
+def encode(params, audio_embeds, cfg: ModelConfig):
+    """audio_embeds: [B, F, d] precomputed frame embeddings (stub frontend)."""
+    cdtype = jnp.dtype(cfg.compute_dtype)
+    b, f, d = audio_embeds.shape
+    x = audio_embeds.astype(cdtype) + sinusoidal_positions(f, d).astype(cdtype)
+
+    def body(x, lp):
+        h = L.apply_norm(x, lp["norm1"], "layernorm", cfg.norm_eps)
+        out, _ = L.attention_block(lp["attn"], h, cfg, None, causal=False,
+                                   compute_dtype=cdtype)
+        x = x + out
+        h = L.apply_norm(x, lp["norm2"], "layernorm", cfg.norm_eps)
+        x = x + L.mlp_block(lp["mlp"], h, "gelu", cdtype)
+        return x, None
+
+    x, _ = _scan_or_loop(body, x, params["encoder"], cfg.scan_layers)
+    return L.apply_norm(x, params["enc_final"], "layernorm", cfg.norm_eps)
+
+
+def cross_kv(params, enc_out, cfg: ModelConfig):
+    """Precompute per-decoder-layer cross-attention K/V: [L, B, F, H, hd]."""
+    cdtype = jnp.dtype(cfg.compute_dtype)
+    b, f, _ = enc_out.shape
+    hd = cfg.resolved_head_dim
+
+    def body(_, lp):
+        k = (enc_out @ lp["xattn"]["wk"].astype(cdtype)).reshape(
+            b, f, cfg.num_kv_heads, hd)
+        v = (enc_out @ lp["xattn"]["wv"].astype(cdtype)).reshape(
+            b, f, cfg.num_kv_heads, hd)
+        return None, {"k": k, "v": v}
+
+    _, kv = _scan_or_loop(body, None, params["decoder"], cfg.scan_layers)
+    return kv
+
+
+# --------------------------------------------------------------------------- #
+# decoder
+# --------------------------------------------------------------------------- #
+
+def _dec_block(lp, x, cfg, cdtype, self_cache=None, pos=None, xkv=None):
+    h = L.apply_norm(x, lp["norm1"], "layernorm", cfg.norm_eps)
+    out, new_kv = L.attention_block(lp["attn"], h, cfg, None,
+                                    cache=self_cache, pos=pos,
+                                    compute_dtype=cdtype)
+    x = x + out
+    h = L.apply_norm(x, lp["norm_x"], "layernorm", cfg.norm_eps)
+    out, _ = L.attention_block(lp["xattn"], h, cfg, None,
+                               cross_kv=(xkv["k"], xkv["v"]),
+                               causal=False, compute_dtype=cdtype)
+    x = x + out
+    h = L.apply_norm(x, lp["norm2"], "layernorm", cfg.norm_eps)
+    x = x + L.mlp_block(lp["mlp"], h, "gelu", cdtype)
+    return x, new_kv
+
+
+def decode_train(params, tokens, audio_embeds, cfg: ModelConfig):
+    """Teacher-forced decoder over full token sequence. Returns logits."""
+    cdtype = jnp.dtype(cfg.compute_dtype)
+    enc_out = encode(params, audio_embeds, cfg)
+    xkv = cross_kv(params, enc_out, cfg)
+    b, s = tokens.shape
+    x = L.embed(params["embed"], tokens, cdtype)
+    x = x + sinusoidal_positions(s, cfg.d_model).astype(cdtype)
+
+    def body(x, xs):
+        lp, kv = xs
+        x, _ = _dec_block(lp, x, cfg, cdtype, xkv=kv)
+        return x, None
+
+    body_fn = jax.checkpoint(body, prevent_cse=False) if cfg.remat else body
+    x, _ = _scan_or_loop(body_fn, x, (params["decoder"], xkv), cfg.scan_layers)
+    x = L.apply_norm(x, params["dec_final"], "layernorm", cfg.norm_eps)
+    logits = L.unembed(params["embed"], x, cfg.logical_vocab_size, cdtype)
+    return logits
+
+
+def prefill(params, tokens, audio_embeds, cfg: ModelConfig, cache_width: int):
+    """Returns (last-token logits, {"self": ring KV, "cross": KV, "enc_done"})."""
+    cdtype = jnp.dtype(cfg.compute_dtype)
+    enc_out = encode(params, audio_embeds, cfg)
+    xkv = cross_kv(params, enc_out, cfg)
+    b, s = tokens.shape
+    x = L.embed(params["embed"], tokens, cdtype)
+    x = x + sinusoidal_positions(s, cfg.d_model).astype(cdtype)
+
+    def to_ring(k):
+        """[B,S,Hkv,hd] -> heads-major [B,Hkv,W,hd] ring buffer."""
+        k = k.transpose(0, 2, 1, 3)
+        if s >= cache_width:
+            tail = k[:, :, s - cache_width:]
+            return jnp.roll(tail, s % cache_width, axis=2)
+        return jnp.pad(k, ((0, 0), (0, 0), (0, cache_width - s), (0, 0)))
+
+    def body(x, xs):
+        lp, kv = xs
+        x, new_kv = _dec_block(lp, x, cfg, cdtype, xkv=kv)
+        kvdt = jnp.dtype(cfg.kv_dtype)
+        ring = {"k": to_ring(new_kv[0]).astype(kvdt),
+                "v": to_ring(new_kv[1]).astype(kvdt)}
+        return x, ring
+
+    x, self_cache = _scan_or_loop(body, x, (params["decoder"], xkv), cfg.scan_layers)
+    x = L.apply_norm(x[:, -1:], params["dec_final"], "layernorm", cfg.norm_eps)
+    logits = L.unembed(params["embed"], x, cfg.logical_vocab_size, cdtype)[:, 0]
+    return logits, {"self": self_cache, "cross": xkv}
+
+
+def decode_step(params, token, pos, cache, cfg: ModelConfig):
+    """One decoder token against self-cache + cross-cache."""
+    cdtype = jnp.dtype(cfg.compute_dtype)
+    b = token.shape[0]
+    x = L.embed(params["embed"], token, cdtype)
+    x = x + sinusoidal_positions(1, cfg.d_model, offset=pos).astype(cdtype)[None]
+
+    def body(x, xs):
+        lp, self_kv, kv = xs
+        x, new_kv = _dec_block(lp, x, cfg, cdtype,
+                               self_cache=(self_kv["k"], self_kv["v"]),
+                               pos=pos, xkv=kv)
+        return x, {"k": new_kv[0], "v": new_kv[1]}
+
+    x, new_self = _scan_or_loop(
+        body, x, (params["decoder"], cache["self"], cache["cross"]),
+        cfg.scan_layers)
+    x = L.apply_norm(x, params["dec_final"], "layernorm", cfg.norm_eps)
+    logits = L.unembed(params["embed"], x, cfg.logical_vocab_size, cdtype)[:, 0]
+    return logits, {"self": new_self, "cross": cache["cross"]}
+
+
+def init_self_cache(cfg: ModelConfig, batch: int, width: int):
+    hd = cfg.resolved_head_dim
+    shape = (cfg.num_layers, batch, cfg.num_kv_heads, width, hd)
+    kvdt = jnp.dtype(cfg.kv_dtype)
+    return {"k": jnp.zeros(shape, kvdt),
+            "v": jnp.zeros(shape, kvdt)}

@@ -1,0 +1,58 @@
+"""KV-cache / SSM-state construction and logical-axis metadata."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models import ssm as ssm_lib
+
+
+def slot_cache_shape(cfg, slot, batch: int, width: int):
+    """Abstract cache entry for one period-slot (leading dim = n_periods)."""
+    p = cfg.num_periods()
+    hd = cfg.resolved_head_dim
+    kvdt = jnp.dtype(cfg.kv_dtype)
+    if slot.mixer == "attn":
+        # heads-major layout [B, Hkv, W, hd]: the ring update is shard-local
+        # when kv_heads divides the model axis (no cross-shard selects), and
+        # the decode dot needs no transposed cache copy (§Perf iteration A1)
+        shape = (p, batch, cfg.num_kv_heads, width, hd)
+        return {
+            "k": jnp.zeros(shape, kvdt),
+            "v": jnp.zeros(shape, kvdt),
+        }
+    return {
+        "conv": jnp.zeros((p, batch, cfg.ssm_conv_width - 1, cfg.d_inner), kvdt),
+        "ssm": jnp.zeros((p, batch, cfg.d_inner, cfg.ssm_state_dim), jnp.float32),
+    }
+
+
+def slot_cache_axes(slot):
+    if slot.mixer == "attn":
+        # kv_heads dim precedes kv_seq: divisibility fallback gives the model
+        # axis to heads when possible (moonshot 16, minitron 8 on pod meshes),
+        # else to the sequence (starcoder2/qwen2 kv=2)
+        kv = ("layers", "batch", "kv_heads", "kv_seq", None)
+        return {"k": kv, "v": kv}
+    return {
+        "conv": ("layers", "batch", None, "ssm_inner"),
+        "ssm": ("layers", "batch", "ssm_inner", "ssm_state"),
+    }
+
+
+def init_cache(cfg, batch: int, width: int):
+    """Cache pytree: {"slot{i}": per-slot stacked cache}."""
+    pattern = cfg.block_pattern()
+    return {f"slot{i}": slot_cache_shape(cfg, s, batch, width)
+            for i, s in enumerate(pattern)}
+
+
+def cache_axes(cfg):
+    pattern = cfg.block_pattern()
+    return {f"slot{i}": slot_cache_axes(s) for i, s in enumerate(pattern)}
+
+
+def cache_width(cfg, seq_len: int) -> int:
+    """Ring-buffer width for a target context length (SWA bounds it)."""
+    if cfg.sliding_window:
+        return min(seq_len, cfg.sliding_window)
+    return seq_len

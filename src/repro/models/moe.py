@@ -1,0 +1,163 @@
+"""Grouped top-k MoE layer (capacity-based, batched-gather dispatch).
+
+Tokens are split into groups of ``moe_group_size``; dispatch/combine are
+*batched* gathers/scatters over the group dim, so GSPMD partitions them
+index-parallel (the group axis carries the token sharding) — no global
+scatter, no dense [t, E, C] dispatch einsum (zero FLOP overhead). Per-group
+capacity bounds memory exactly as in GShard; overflow tokens are dropped
+(capacity_factor 1.25).
+
+Expert weights carry an "experts" logical axis -> true expert parallelism
+when E divides the model axis (moonshot 64e: groups shard "data", experts
+"model", the buf reshard is the MoE all-to-all); otherwise groups take both
+mesh axes and experts compute group-locally with FSDP+TP weights (mixtral 8e
+on a 16-way axis).
+
+Measured motivation (EXPERIMENTS.md SSPerf): the naive global scatter/gather
+dispatch replicated f32[2M, 6144] token tensors under GSPMD — 48 GiB each,
+216 GiB temp for one mixtral train layer.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+from repro.sharding.logical import logical_constraint
+
+
+def init_moe(key, cfg, dtype):
+    d = cfg.d_model
+    s = cfg.moe_ep_split
+    e = cfg.moe_num_experts * s                      # virtual experts (B4)
+    ff = (cfg.moe_d_ff or cfg.d_ff) // s
+    kr, k1, k3 = jax.random.split(key, 3)
+    return {
+        "router": dense_init(kr, (d, cfg.moe_num_experts), dtype),
+        # gate/up fused along a LOCAL pair dim [e, d, 2, ff]: one einsum and
+        # ONE input-grad partial-sum all-reduce in the TP backward instead of
+        # two, while ff stays cleanly model-sharded (§Perf iteration B3)
+        "w_in": dense_init(k1, (e, d, 2, ff), dtype),
+        "w_down": dense_init(k3, (e, ff, d), dtype, fan_in=ff),
+    }
+
+
+MOE_AXES = {
+    "router": ("embed", None),
+    "w_in": ("experts", "embed", None, "moe_mlp"),
+    "w_down": ("experts", "moe_mlp", "embed"),
+}
+
+GROUP_SIZE = 4096  # tokens per dispatch group
+
+
+def expert_capacity(group_size: int, cfg) -> int:
+    if group_size <= 64:
+        # tiny groups (smoke tests): exactly dropless
+        return group_size
+    # GShard capacity everywhere else — decode groups included: a 128-token
+    # decode batch at cap=group_size made every expert process every token,
+    # e/k x the useful FLOPs (§Perf iteration A3)
+    cap = math.ceil(group_size * cfg.moe_top_k / cfg.moe_num_experts
+                    * cfg.moe_capacity_factor)
+    return max(8, min(group_size, ((cap + 7) // 8) * 8))
+
+
+def moe_block(params, x, cfg, compute_dtype=jnp.bfloat16, router_stats=None):
+    """Returns (out [B,S,d], aux_loss scalar, expert_load [E])."""
+    b, s, d = x.shape
+    t = b * s
+    k = cfg.moe_top_k
+    e = cfg.moe_num_experts
+
+    gsize = min(GROUP_SIZE, t)
+    pad_t = (-t) % gsize
+    xf = x.reshape(t, d)
+    if pad_t:
+        xf = jnp.pad(xf, ((0, pad_t), (0, 0)))
+    g = (t + pad_t) // gsize
+    xg = xf.reshape(g, gsize, d)
+    xg = logical_constraint(xg, "moe_groups", "moe_tokens", "embed_act")
+
+    logits = (xg @ params["router"].astype(compute_dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                     # [g, t, E]
+    top_w, top_i = jax.lax.top_k(probs, k)                      # [g, t, k]
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # --- load-balancing auxiliary loss (Switch-style) ---
+    onehot_top1 = jax.nn.one_hot(top_i[..., 0], e, dtype=jnp.float32)
+    frac_tokens = onehot_top1.reshape(-1, e).mean(axis=0)
+    mean_probs = probs.reshape(-1, e).mean(axis=0)
+    aux = e * jnp.sum(frac_tokens * mean_probs)
+
+    # --- per-group slot assignment: position of each (token, choice) within
+    #     its expert, computed over the group-local flattened (t*k) stream ---
+    cap = expert_capacity(gsize, cfg)
+    oh = jax.nn.one_hot(top_i.reshape(g, gsize * k), e, dtype=jnp.int32)
+    expert_load = oh.sum(axis=(0, 1))                           # [E]
+    pos = jnp.cumsum(oh, axis=1) - 1                            # [g, t*k, E]
+    slot = jnp.sum(pos * oh, axis=-1)                           # [g, t*k]
+    flat_e = top_i.reshape(g, gsize * k)
+    in_cap = slot < cap
+    token_ids = jnp.broadcast_to(
+        jnp.arange(gsize, dtype=jnp.int32)[None, :, None],
+        (g, gsize, k)).reshape(g, gsize * k)
+
+    # --- virtual-expert EP expansion (B4): every (token, choice) goes to all
+    #     s half-width virtual experts of its chosen expert; both halves see
+    #     identical token sets so slots/capacity carry over unchanged ---
+    sp = cfg.moe_ep_split
+    kk = k * sp
+    e_v = e * sp
+    if sp > 1:
+        flat_e = (flat_e[..., None] * sp
+                  + jnp.arange(sp, dtype=jnp.int32)).reshape(g, gsize * kk)
+        slot = jnp.repeat(slot, sp, axis=-1)
+        in_cap = jnp.repeat(in_cap, sp, axis=-1)
+        token_ids = jnp.repeat(token_ids, sp, axis=-1)
+
+    # --- dispatch: build token-id table [g, Ev*cap] then batched-gather ---
+    sentinel = gsize                                            # -> zero row
+    buf_pos = flat_e * cap + jnp.where(in_cap, slot, e_v * cap)  # OOB -> drop
+    table = jnp.full((g, e_v * cap + 1), sentinel, jnp.int32)
+    table = jax.vmap(lambda tb, bp, ti: tb.at[bp].set(ti, mode="drop"))(
+        table, buf_pos, token_ids)[:, :e_v * cap]
+
+    xg_pad = jnp.pad(xg, ((0, 0), (0, 1), (0, 0)))              # zero row
+    buf = jnp.take_along_axis(xg_pad, table[..., None], axis=1)  # [g, Ev*c, d]
+    buf = buf.reshape(g, e_v, cap, d)
+    buf = logical_constraint(buf, "moe_groups", "experts", None, "embed_act")
+
+    # --- expert FFN (batched over experts; EP when E divides the axis) ---
+    from repro.models.layers import cast_param
+    wi = cast_param(params["w_in"], compute_dtype, *MOE_AXES["w_in"])
+    wd = cast_param(params["w_down"], compute_dtype, *MOE_AXES["w_down"])
+    gu = jnp.einsum("gecd,edxf->gecxf", buf, wi)      # [g,e,c,2,ff] fused
+    gu = logical_constraint(gu, "moe_groups", "experts", None, None,
+                            "moe_mlp")
+    h = jax.nn.silu(gu[..., 0, :]) * gu[..., 1, :]
+    h = logical_constraint(h, "moe_groups", "experts", None, "moe_mlp")
+    out_buf = jnp.einsum("gecf,efd->gecd", h, wd)
+    out_buf = logical_constraint(out_buf, "moe_groups", "experts", None,
+                                 "embed_act")
+
+    # --- combine: batched-gather back to token order, weight, sum over k
+    #     (and over the s virtual halves, whose partial outputs add) ---
+    out_flat = out_buf.reshape(g, e_v * cap, d)
+    out_pad = jnp.pad(out_flat, ((0, 0), (0, 1), (0, 0)))       # zero row
+    gather_pos = jnp.where(in_cap, flat_e * cap + slot, e_v * cap)
+    gathered = jnp.take_along_axis(out_pad, gather_pos[..., None], axis=1)
+    w_comb = top_w if sp == 1 else jnp.repeat(top_w, sp, axis=-1)
+    gathered = gathered.reshape(g, gsize, kk, d) \
+        * w_comb[..., None].astype(compute_dtype)
+    yg = gathered.sum(axis=2)                                   # [g, t, d]
+    yg = logical_constraint(yg, "moe_groups", "moe_tokens", "embed_act")
+
+    y = yg.reshape(g * gsize, d)
+    if pad_t:
+        y = y[:t]
+    out = y.reshape(b, s, d)
+    out = logical_constraint(out, "batch", "seq_q", "embed_act")
+    return out, aux, expert_load

@@ -1,0 +1,42 @@
+"""Token sampling and simple autoregressive generation loops."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer
+from repro.models.config import ModelConfig
+
+
+def sample_token(logits, key, temperature: float = 0.0, top_k: int = 0):
+    """logits: [B, V] -> tokens [B]."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / temperature
+    if top_k:
+        vals, _ = jax.lax.top_k(logits, top_k)
+        cutoff = vals[:, -1:]
+        logits = jnp.where(logits < cutoff, -1e30, logits)
+    return jax.random.categorical(key, logits).astype(jnp.int32)
+
+
+def generate(params, prompt, cfg: ModelConfig, max_new_tokens: int,
+             cache_width: int = 0, temperature: float = 0.0, key=None):
+    """Greedy/temperature generation; returns [B, max_new_tokens]."""
+    b, s = prompt.shape
+    width = cache_width or (s + max_new_tokens)
+    key = key if key is not None else jax.random.PRNGKey(0)
+    logits, cache = transformer.prefill(params, prompt, cfg, width)
+    tok = sample_token(logits, key, temperature)
+
+    def body(carry, i):
+        tok, cache, key = carry
+        key, sub = jax.random.split(key)
+        logits, cache = transformer.decode_step(
+            params, tok[:, None], s + i, cache, cfg)
+        nxt = sample_token(logits, sub, temperature)
+        return (nxt, cache, key), nxt
+
+    (_, _, _), toks = jax.lax.scan(body, (tok, cache, key),
+                                   jnp.arange(max_new_tokens - 1))
+    return jnp.concatenate([tok[:, None], toks.T], axis=1)

@@ -1,0 +1,40 @@
+"""Pytree -> NamedSharding resolution and sizing helpers."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+
+from repro.sharding.logical import LogicalRules, resolve_spec
+
+
+def param_shardings(abstract_params: Any, param_axes: Any, mesh: Mesh, rules: LogicalRules):
+    """Resolve a pytree of logical-axis tuples into NamedShardings.
+
+    ``abstract_params`` supplies shapes (arrays or ShapeDtypeStructs);
+    ``param_axes`` is a matching pytree whose leaves are tuples of logical
+    axis names (or None) per dimension.
+    """
+
+    def _one(p, axes):
+        return NamedSharding(mesh, resolve_spec(p.shape, axes, mesh, rules))
+
+    return jax.tree.map(_one, abstract_params, param_axes,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            isinstance(a, (str, type(None))) for a in x))
+
+
+def shape_shardings(abstract_tree: Any, axes_tree: Any, mesh: Mesh, rules: LogicalRules):
+    """Same as param_shardings; alias used for inputs/caches."""
+    return param_shardings(abstract_tree, axes_tree, mesh, rules)
+
+
+def tree_size_bytes(tree: Any) -> int:
+    """Total bytes of all array leaves (works on ShapeDtypeStructs too)."""
+    total = 0
+    for leaf in jax.tree.leaves(tree):
+        if hasattr(leaf, "shape") and hasattr(leaf, "dtype"):
+            total += int(np.prod(leaf.shape)) * jax.dtypes.canonicalize_dtype(leaf.dtype).itemsize
+    return total

@@ -1,0 +1,49 @@
+"""Gradient compression for the DP all-reduce path: int8 + error feedback.
+
+Per-leaf symmetric int8 quantisation with an error-feedback residual carried
+across steps (Karimireddy et al.): quantisation error is added back into the
+next step's gradient, so compression bias vanishes asymptotically. The
+quant/dequant pair sits where the DP all-reduce happens, modelling an 4x
+traffic reduction on the gradient reduce-scatter.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def ef_init(params: Any) -> Any:
+    """Zero residual pytree (fp32)."""
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _quant_dequant(g: jax.Array) -> jax.Array:
+    scale = jnp.max(jnp.abs(g)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q.astype(jnp.float32) * scale
+
+
+def compress_grads(grads: Any, residual: Any) -> Tuple[Any, Any]:
+    """Returns (compressed grads, new residual)."""
+
+    def one(g, r):
+        g = g.astype(jnp.float32) + r
+        gq = _quant_dequant(g)
+        return gq, g - gq
+
+    out = jax.tree.map(one, grads, residual)
+    comp = jax.tree.map(lambda t: t[0], out,
+                        is_leaf=lambda t: isinstance(t, tuple))
+    new_res = jax.tree.map(lambda t: t[1], out,
+                           is_leaf=lambda t: isinstance(t, tuple))
+    return comp, new_res
+
+
+def compressed_bytes(grads: Any) -> int:
+    """Traffic after compression (int8 payload + fp32 scale per leaf)."""
+    total = 0
+    for g in jax.tree.leaves(grads):
+        total += g.size + 4
+    return total

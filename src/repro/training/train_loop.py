@@ -1,0 +1,109 @@
+"""Train-step construction: loss, grad, AdamW, optional grad compression.
+
+``make_train_step(cfg)`` returns a pure function
+``(params, opt_state, batch) -> (params, opt_state, metrics)`` suitable for
+``jax.jit`` under a mesh (remat policy comes from ``cfg.remat`` inside the
+model's period scan; donation is applied by the callers).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, transformer
+from repro.models.config import ModelConfig
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
+
+
+def cross_entropy_loss(logits, labels, logical_vocab: int = 0):
+    """Next-token CE (labels already shifted by the data pipeline)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig = AdamWConfig(),
+                    aux_weight: float = 0.01, compressor=None,
+                    accum_steps: int = 1):
+    """Decoder-LM train step (all non-enc-dec architectures).
+
+    ``accum_steps > 1`` splits the batch into microbatches accumulated via
+    ``lax.scan`` before one optimizer update — the standard lever for
+    fitting a large global batch per chip (activation memory scales with
+    the microbatch while the numerics match the full-batch step).
+    """
+
+    def loss_fn(params, batch):
+        logits, aux = transformer.forward(
+            params, batch["tokens"], cfg,
+            positions=batch.get("positions"), mode="train")
+        ce = cross_entropy_loss(logits, batch["labels"], cfg.logical_vocab_size)
+        return ce + aux_weight * aux, (ce, aux)
+
+    def grads_of(params, batch):
+        (_, (ce, aux)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        return grads, ce, aux
+
+    def train_step(params, opt_state, batch):
+        if accum_steps > 1:
+            def split(t):
+                b = t.shape[0]
+                if b % accum_steps:
+                    raise ValueError(
+                        f"batch {b} not divisible by accum_steps {accum_steps}")
+                return t.reshape(accum_steps, b // accum_steps, *t.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+
+            def body(acc, mb):
+                g_acc, ce_acc, aux_acc = acc
+                g, ce, aux = grads_of(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b_: a + b_.astype(jnp.float32), g_acc, g)
+                return (g_acc, ce_acc + ce, aux_acc + aux), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (g_sum, ce_sum, aux_sum), _ = jax.lax.scan(
+                body, (zeros, jnp.zeros((), jnp.float32),
+                       jnp.zeros((), jnp.float32)), micro)
+            grads = jax.tree.map(lambda g: g / accum_steps, g_sum)
+            ce, aux = ce_sum / accum_steps, aux_sum / accum_steps
+        else:
+            grads, ce, aux = grads_of(params, batch)
+        if compressor is not None:
+            grads, opt_state = compressor(grads, opt_state)
+        params, opt_state, gnorm = adamw_update(grads, opt_state, params, opt_cfg)
+        metrics = {"loss": ce, "aux_loss": aux, "grad_norm": gnorm}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_whisper_train_step(cfg: ModelConfig,
+                            opt_cfg: AdamWConfig = AdamWConfig()):
+    """Enc-dec train step: teacher-forced decoder over audio embeddings."""
+
+    def loss_fn(params, batch):
+        logits = encdec.decode_train(params, batch["tokens"],
+                                     batch["audio_embeds"], cfg)
+        return cross_entropy_loss(logits, batch["labels"],
+                                  cfg.logical_vocab_size)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        params, opt_state, gnorm = adamw_update(grads, opt_state, params, opt_cfg)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step
+
+
+def init_train_state(key, cfg: ModelConfig):
+    init = encdec.init_params if cfg.is_encoder_decoder else transformer.init_params
+    params = init(key, cfg)
+    return params, adamw_init(params)

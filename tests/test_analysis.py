@@ -1,0 +1,135 @@
+"""Analysis-layer tests: HLO collective parser, roofline math, config
+bookkeeping (param counts, block patterns, applicable shapes)."""
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, SHAPES, applicable_shapes, get_config
+from repro.launch.hlo import count_collectives, parse_collective_bytes
+from repro.models.config import ModelConfig
+
+
+HLO_SAMPLE = """
+HloModule jit_step
+ENTRY %main {
+  %p0 = bf16[16,1024,512]{2,1,0} parameter(0)
+  %ag = bf16[16,1024,512]{2,1,0} all-gather(%p0), replica_groups={}
+  %ar = f32[8,128]{1,0} all-reduce(%x), to_apply=%add
+  ROOT %t = (f32[8,128]{1,0}, f32[8,128]{1,0}) all-reduce(%a, %b), to_apply=%add
+  %rs = bf16[2,64]{1,0} reduce-scatter(%y), dimensions={0}
+  %cp = u32[4]{0} collective-permute(%z), source_target_pairs={{0,1}}
+  %a2a = s32[16,16]{1,0} all-to-all(%w), dimensions={0}
+}
+"""
+
+
+def test_parse_collective_bytes_kinds_and_sizes():
+    out = parse_collective_bytes(HLO_SAMPLE)
+    assert out["all-gather"] == 16 * 1024 * 512 * 2
+    assert out["all-reduce"] == 8 * 128 * 4 * 3          # single + tuple pair
+    assert out["reduce-scatter"] == 2 * 64 * 2
+    assert out["collective-permute"] == 4 * 4
+    assert out["all-to-all"] == 16 * 16 * 4
+
+
+def test_count_collectives():
+    c = count_collectives(HLO_SAMPLE)
+    assert c["all-reduce"] == 2
+    assert c["all-gather"] == 1
+
+
+def test_parser_ignores_non_collectives():
+    assert parse_collective_bytes("%d = f32[4]{0} dot(%a, %b)") == {}
+
+
+# --------------------------------------------------------------------------- #
+# roofline math
+# --------------------------------------------------------------------------- #
+
+def test_roofline_analysis_terms():
+    from benchmarks.roofline import analyse_cell
+    rec = {"arch": "starcoder2_3b", "shape": "train_4k", "mesh": [16, 16],
+           "roofline": {"flops": 1.97e14, "bytes_accessed": 819e9,
+                        "collective_bytes": {"all-gather": 50e9}}}
+    row = analyse_cell(rec)
+    assert row["t_compute_s"] == pytest.approx(1.0)
+    assert row["t_memory_s"] == pytest.approx(1.0)
+    assert row["t_collective_s"] == pytest.approx(1.0)
+    assert row["chips"] == 256
+    assert 0 < row["useful_ratio"] < 1
+
+
+def test_model_flops_decode_vs_train():
+    from benchmarks.roofline import model_flops
+    train = model_flops("starcoder2_3b", "train_4k")
+    decode = model_flops("starcoder2_3b", "decode_32k")
+    # train: 6N x 1M tokens; decode: 2N x 128 tokens
+    assert train / decode == pytest.approx(
+        (6 * 4096 * 256) / (2 * 128), rel=1e-6)
+
+
+# --------------------------------------------------------------------------- #
+# config bookkeeping
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("arch,expected_params_b", [
+    ("starcoder2_3b", (2.5, 3.5)),
+    ("mixtral_8x22b", (125, 150)),       # total (all experts)
+    ("falcon_mamba_7b", (6.5, 8.0)),
+    ("minitron_8b", (7.5, 9.5)),
+])
+def test_param_counts_in_published_range(arch, expected_params_b):
+    n = get_config(arch).param_count() / 1e9
+    lo, hi = expected_params_b
+    assert lo <= n <= hi, f"{arch}: {n:.2f}B outside [{lo},{hi}]"
+
+
+def test_mixtral_active_params_much_smaller():
+    cfg = get_config("mixtral_8x22b")
+    assert cfg.param_count(active_only=True) < cfg.param_count() * 0.4
+
+
+def test_jamba_block_pattern():
+    cfg = get_config("jamba_v0_1_52b")
+    pat = cfg.block_pattern()
+    assert len(pat) == 8
+    assert sum(1 for s in pat if s.mixer == "attn") == 1      # 1:7 interleave
+    assert sum(1 for s in pat if s.ffn == "moe") == 4         # every other
+
+
+def test_applicable_shapes_long_context_gating():
+    longs = {a for a in ARCH_IDS
+             if "long_500k" in applicable_shapes(get_config(a))}
+    assert longs == {"jamba_v0_1_52b", "mixtral_8x22b", "falcon_mamba_7b"}
+
+
+def test_all_archs_have_all_base_shapes():
+    for a in ARCH_IDS:
+        shapes = applicable_shapes(get_config(a))
+        assert {"train_4k", "prefill_32k", "decode_32k"} <= set(shapes)
+
+
+def test_layers_divisible_by_period():
+    for a in ARCH_IDS:
+        cfg = get_config(a)
+        assert cfg.num_layers % cfg.period() == 0
+
+
+def test_ep_split_helper():
+    import os
+    from repro.launch.specs import _ep_split
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        devices = np.empty((16, 16))
+
+    mix = get_config("mixtral_8x22b")
+    moon = get_config("moonshot_v1_16b_a3b")
+    dense = get_config("starcoder2_3b")
+    assert _ep_split(dense, FakeMesh()) == 1
+    assert _ep_split(moon, FakeMesh()) == 1       # 64 % 16 == 0: true EP
+    assert _ep_split(mix, FakeMesh()) == 1        # default OFF (GSPMD regress)
+    os.environ["REPRO_EP_SPLIT"] = "1"
+    try:
+        assert _ep_split(mix, FakeMesh()) == 2    # 8e x split 2 = 16
+    finally:
+        del os.environ["REPRO_EP_SPLIT"]

@@ -1,0 +1,181 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True on CPU) vs the
+pure-jnp oracles in kernels/ref.py (deliverable c)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.mamba_scan import mamba_scan
+
+TOL = {jnp.float32: dict(rtol=2e-5, atol=2e-5),
+       jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
+
+
+def _tol(dtype):
+    return TOL[jnp.bfloat16 if jnp.dtype(dtype) == jnp.bfloat16 else jnp.float32]
+
+
+def rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+# --------------------------------------------------------------------------- #
+# flash attention
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,h,hkv,s,t,d", [
+    (1, 4, 4, 128, 128, 64),     # MHA, square
+    (2, 4, 2, 128, 128, 64),     # GQA group 2
+    (1, 8, 2, 256, 256, 64),     # GQA group 4, two q blocks
+    (1, 4, 1, 128, 256, 64),     # MQA, cached prefix (t > s)
+    (2, 4, 4, 128, 128, 128),    # head_dim 128 (MXU width)
+])
+def test_flash_attention_matches_ref(b, h, hkv, s, t, d, dtype):
+    keys = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = rand(keys[0], (b, h, s, d), dtype)
+    k = rand(keys[1], (b, hkv, t, d), dtype)
+    v = rand(keys[2], (b, hkv, t, d), dtype)
+    out = flash_attention(q, k, v, causal=True, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("window", [32, 64, 128])
+def test_flash_attention_sliding_window(window):
+    keys = jax.random.split(jax.random.PRNGKey(1), 3)
+    b, h, s, d = 1, 4, 256, 64
+    q = rand(keys[0], (b, h, s, d), jnp.float32)
+    k = rand(keys[1], (b, h, s, d), jnp.float32)
+    v = rand(keys[2], (b, h, s, d), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, window=window, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("block_q,block_k", [(64, 64), (128, 64), (64, 128)])
+def test_flash_attention_block_shapes(block_q, block_k):
+    keys = jax.random.split(jax.random.PRNGKey(2), 3)
+    b, h, s, d = 1, 2, 256, 64
+    q = rand(keys[0], (b, h, s, d), jnp.float32)
+    k = rand(keys[1], (b, h, s, d), jnp.float32)
+    v = rand(keys[2], (b, h, s, d), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, block_q=block_q,
+                          block_k=block_k, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_noncausal():
+    keys = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = rand(keys[0], (1, 2, 128, 64), jnp.float32)
+    k = rand(keys[1], (1, 2, 128, 64), jnp.float32)
+    v = rand(keys[2], (1, 2, 128, 64), jnp.float32)
+    out = flash_attention(q, k, v, causal=False, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+# --------------------------------------------------------------------------- #
+# decode attention (flash-decoding style, ring cache)
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,h,hkv,w,d,pos", [
+    (1, 4, 4, 128, 64, 64),      # partially-filled cache
+    (2, 4, 2, 128, 64, 127),     # cache exactly full
+    (1, 8, 2, 256, 64, 300),     # ring wrap-around (pos > W)
+    (2, 4, 1, 128, 128, 100),    # MQA, wide head
+])
+def test_decode_attention_matches_ref(b, h, hkv, w, d, pos, dtype):
+    keys = jax.random.split(jax.random.PRNGKey(4), 3)
+    q = rand(keys[0], (b, h, d), dtype)
+    k = rand(keys[1], (b, hkv, w, d), dtype)
+    v = rand(keys[2], (b, hkv, w, d), dtype)
+    out = decode_attention(q, k, v, pos, interpret=True)
+    want = ref.decode_attention_ref(q, k, v, pos)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("window", [32, 96])
+def test_decode_attention_window(window):
+    keys = jax.random.split(jax.random.PRNGKey(5), 3)
+    b, h, w, d, pos = 1, 4, 128, 64, 500
+    q = rand(keys[0], (b, h, d), jnp.float32)
+    k = rand(keys[1], (b, h, w, d), jnp.float32)
+    v = rand(keys[2], (b, h, w, d), jnp.float32)
+    out = decode_attention(q, k, v, pos, window=window, interpret=True)
+    want = ref.decode_attention_ref(q, k, v, pos, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_decode_attention_block_sweep():
+    keys = jax.random.split(jax.random.PRNGKey(6), 3)
+    b, h, w, d, pos = 1, 2, 512, 64, 511
+    q = rand(keys[0], (b, h, d), jnp.float32)
+    k = rand(keys[1], (b, h, w, d), jnp.float32)
+    v = rand(keys[2], (b, h, w, d), jnp.float32)
+    want = ref.decode_attention_ref(q, k, v, pos)
+    for block_k in (128, 256, 512):
+        out = decode_attention(q, k, v, pos, block_k=block_k, interpret=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5,
+                                   err_msg=f"block_k={block_k}")
+
+
+# --------------------------------------------------------------------------- #
+# mamba chunked scan
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,s,d,n,block_s,block_d", [
+    (1, 128, 128, 16, 64, 128),   # two sequence chunks
+    (2, 256, 256, 16, 128, 128),  # two channel blocks
+    (1, 64, 128, 8, 64, 64),      # narrow state / small blocks
+])
+def test_mamba_scan_matches_ref(b, s, d, n, block_s, block_d, dtype):
+    keys = jax.random.split(jax.random.PRNGKey(7), 6)
+    x = rand(keys[0], (b, s, d), dtype)
+    dt = jax.nn.softplus(rand(keys[1], (b, s, d), jnp.float32)).astype(dtype)
+    b_mat = rand(keys[2], (b, s, n), dtype)
+    c_mat = rand(keys[3], (b, s, n), dtype)
+    a = -jnp.exp(rand(keys[4], (d, n), jnp.float32))  # stable (negative) A
+    d_vec = rand(keys[5], (d,), jnp.float32)
+    y, h = mamba_scan(x, dt, b_mat, c_mat, a, d_vec,
+                      block_d=block_d, block_s=block_s, interpret=True)
+    y_ref, h_ref = ref.mamba_scan_ref(x, dt, b_mat, c_mat, a, d_vec)
+    tol = _tol(dtype)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref, np.float32), **tol)
+    np.testing.assert_allclose(np.asarray(h, np.float32),
+                               np.asarray(h_ref, np.float32), **tol)
+
+
+def test_mamba_scan_state_carry_chunk_boundary():
+    """The carried state across chunk boundaries must equal the sequential
+    scan's state — run one long scan vs. the same data with tiny chunks."""
+    keys = jax.random.split(jax.random.PRNGKey(8), 6)
+    b, s, d, n = 1, 96, 64, 16
+    x = rand(keys[0], (b, s, d), jnp.float32)
+    dt = jax.nn.softplus(rand(keys[1], (b, s, d), jnp.float32))
+    b_mat = rand(keys[2], (b, s, n), jnp.float32)
+    c_mat = rand(keys[3], (b, s, n), jnp.float32)
+    a = -jnp.exp(rand(keys[4], (d, n), jnp.float32))
+    d_vec = rand(keys[5], (d,), jnp.float32)
+    y32, h32 = mamba_scan(x, dt, b_mat, c_mat, a, d_vec,
+                          block_d=64, block_s=32, interpret=True)
+    y96, h96 = mamba_scan(x, dt, b_mat, c_mat, a, d_vec,
+                          block_d=64, block_s=96, interpret=True)
+    np.testing.assert_allclose(np.asarray(y32), np.asarray(y96),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(h32), np.asarray(h96),
+                               rtol=1e-5, atol=1e-5)

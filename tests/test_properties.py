@@ -1,0 +1,272 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (COSERVE, CoServeSystem, ExpertSpec, Request,
+                        RoutingModule, Simulation, SystemPolicy, TierSpec)
+from repro.core.coe import CoEModel
+from repro.core.expert_manager import ExpertManager
+from repro.core.memory import ModelPool
+from repro.core.profiler import fit_latency_line
+from repro.core.scheduler import Group, split_batch
+from repro.core.workload import device_profile
+from repro.core.serving import ExecutorSpec
+
+MB = 1 << 20
+TIER = TierSpec(name="prop", unified=False, host_cache_bytes=1 << 30,
+                device_bytes=2 << 30)
+
+
+# --------------------------------------------------------------------------- #
+# CoE model construction helpers (drawn by hypothesis)
+# --------------------------------------------------------------------------- #
+
+def make_coe(n_experts: int, seed: int) -> CoEModel:
+    rng = np.random.RandomState(seed)
+    experts = []
+    arches = ["resnet101", "yolov5m", "yolov5l"]
+    for i in range(n_experts):
+        deps = ()
+        if i >= n_experts // 2 and rng.rand() < 0.5:
+            deps = (f"e{rng.randint(0, n_experts // 2):03d}",)
+        experts.append(ExpertSpec(
+            id=f"e{i:03d}", arch=arches[i % 3],
+            mem_bytes=int(rng.randint(50, 250)) * MB,
+            depends_on=deps, usage_prob=float(rng.rand())))
+    routing = RoutingModule(lambda d: f"e{d % n_experts:03d}")
+    return CoEModel(experts, routing)
+
+
+def make_requests(coe: CoEModel, n: int, seed: int):
+    rng = np.random.RandomState(seed)
+    ids = list(coe.experts)
+    return [Request(id=i, expert_id=ids[rng.randint(len(ids))],
+                    arrival_time=i * 0.004) for i in range(n)]
+
+
+# --------------------------------------------------------------------------- #
+# scheduler invariants
+# --------------------------------------------------------------------------- #
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(8, 40), st.integers(20, 150), st.integers(0, 10_000),
+       st.sampled_from(["makespan", "round_robin"]),
+       st.booleans())
+def test_no_request_lost_or_duplicated(n_experts, n_requests, seed, assign,
+                                       arrange):
+    """Every submitted request completes exactly once under any policy."""
+    coe = make_coe(n_experts, seed)
+    policy = SystemPolicy(name="p", assign=assign, arrange=arrange)
+    prof = device_profile("gpu", TIER)
+    specs = [ExecutorSpec("gpu", prof, 512 * MB, "gpu"),
+             ExecutorSpec("gpu", prof, 512 * MB, "gpu")]
+    system = CoServeSystem(coe, specs, {"gpu": 1 << 30}, policy=policy,
+                           tier=TIER)
+    sim = Simulation(system)
+    reqs = make_requests(coe, n_requests, seed)
+    sim.submit(reqs)
+    m = sim.run()
+    assert m.completed == n_requests
+    done_ids = sorted(r.id for r in sim.completed)
+    assert done_ids == sorted(r.id for r in reqs)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(8, 40), st.integers(20, 120), st.integers(0, 10_000))
+def test_arranging_groups_unique_experts(n_experts, n_requests, seed):
+    """With arranging ON, a queue never holds two groups of the same expert
+    (the paper's 'expert loads at most once per group' guarantee)."""
+    coe = make_coe(n_experts, seed)
+    prof = device_profile("gpu", TIER)
+    specs = [ExecutorSpec("gpu", prof, 512 * MB, "gpu")]
+    system = CoServeSystem(coe, specs, {"gpu": 1 << 30}, policy=COSERVE,
+                           tier=TIER)
+    for r in make_requests(coe, n_requests, seed):
+        ex = system.scheduler.assign(r, 0.0)
+        seen = [g.expert_id for g in ex.queue]
+        assert len(seen) == len(set(seen)), "duplicate same-expert groups"
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(1, 64), st.integers(1, 16))
+def test_split_batch_caps_and_preserves_order(n, cap):
+    reqs = [Request(id=i, expert_id="e") for i in range(n)]
+    group = Group(expert_id="e", requests=list(reqs))
+    batches = []
+    while group.requests:
+        batches.append(split_batch(group, cap))
+    assert all(len(b) <= max(1, cap) for b in batches)
+    flat = [r.id for b in batches for r in b]
+    assert flat == [r.id for r in reqs]            # order preserved, no loss
+
+
+# --------------------------------------------------------------------------- #
+# expert-manager invariants
+# --------------------------------------------------------------------------- #
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(6, 30), st.integers(0, 10_000),
+       st.sampled_from(["dependency_prob", "prob", "lru", "fifo",
+                        "cost_benefit"]))
+def test_eviction_frees_enough_and_never_incoming(n_experts, seed, policy):
+    coe = make_coe(n_experts, seed)
+    rng = np.random.RandomState(seed)
+    pool = ModelPool(1 << 30, coe, group="gpu")
+    for eid in list(coe.experts)[: n_experts // 2]:
+        if coe.spec(eid).mem_bytes <= pool.free_bytes():
+            pool.add(eid)
+            pool.ready.add(eid)
+    mgr = ExpertManager(coe, policy=policy)
+    incoming = list(coe.experts)[-1]
+    free_before = pool.free_bytes()
+    victims = mgr.pick_victims(pool, incoming,
+                               load_cost_fn=lambda e: 1.0)
+    if victims is None:
+        return  # impossible to fit: acceptable outcome
+    assert incoming not in victims
+    freed = sum(coe.spec(v).mem_bytes for v in victims)
+    assert free_before + freed >= coe.spec(incoming).mem_bytes
+    # minimality-ish: removing the last victim must leave a shortfall
+    if victims:
+        assert (free_before + freed - coe.spec(victims[-1]).mem_bytes
+                < coe.spec(incoming).mem_bytes)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(6, 30), st.integers(0, 10_000))
+def test_strict_mode_never_evicts_protected(n_experts, seed):
+    coe = make_coe(n_experts, seed)
+    pool = ModelPool(1 << 30, coe, group="gpu")
+    resident = []
+    for eid in list(coe.experts)[: n_experts // 2]:
+        if coe.spec(eid).mem_bytes <= pool.free_bytes():
+            pool.add(eid)
+            pool.ready.add(eid)
+            resident.append(eid)
+    mgr = ExpertManager(coe, policy="dependency_prob")
+    protected = set(resident[: len(resident) // 2])
+    incoming = list(coe.experts)[-1]
+    victims = mgr.pick_victims(pool, incoming, protected=protected,
+                               strict=True)
+    if victims is not None:
+        assert not (set(victims) & protected)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(6, 30), st.integers(0, 10_000))
+def test_two_stage_order_stage1_before_stage2(n_experts, seed):
+    """Dependency-stage victims (blocked downstream experts) always precede
+    probability-stage victims in the eviction order."""
+    coe = make_coe(n_experts, seed)
+    pool = ModelPool(1 << 62, coe, group="gpu")
+    for eid in coe.experts:
+        pool.add(eid)
+        pool.ready.add(eid)
+    mgr = ExpertManager(coe, policy="dependency_prob")
+    incoming = list(coe.experts)[0]
+    order = mgr._eviction_order(pool, incoming)
+    resident = set(pool.resident) | {incoming}
+    def blocked(eid):
+        s = coe.spec(eid)
+        return s.is_dependent and not any(u in resident for u in s.depends_on)
+    flags = [blocked(e) for e in order]
+    # all True flags must come before any False flag
+    assert flags == sorted(flags, reverse=True)
+
+
+# --------------------------------------------------------------------------- #
+# profiler invariants
+# --------------------------------------------------------------------------- #
+
+@settings(max_examples=50, deadline=None)
+@given(st.floats(1e-4, 1.0), st.floats(0.0, 1.0),
+       st.lists(st.integers(1, 64), min_size=2, max_size=10, unique=True))
+def test_fit_latency_line_recovers_kb(k, b, batches):
+    lats = [k * n + b for n in batches]
+    k2, b2 = fit_latency_line(batches, lats)
+    assert abs(k2 - k) < 1e-6 + 1e-3 * k
+    assert abs(b2 - b) < 1e-6 + 1e-3 * max(b, k)
+
+
+# --------------------------------------------------------------------------- #
+# CoE probability assessment
+# --------------------------------------------------------------------------- #
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(4, 24), st.integers(0, 10_000))
+def test_usage_probabilities_conserve_mass(n_experts, seed):
+    """First-expert probabilities sum to the input-distribution mass (1.0);
+    chained probabilities are each <= their upstream's probability."""
+    coe = make_coe(n_experts, seed)
+    dist = {i: 1.0 / n_experts for i in range(n_experts)}
+    coe2 = coe.assess_usage_probabilities(dist)
+    firsts = [coe2.spec(f"e{i:03d}").usage_prob for i in range(n_experts)]
+    assert all(p >= 0 for p in firsts)
+    total_first = sum(dist.values())
+    assert sum(firsts) >= total_first - 1e-9     # chains only add mass
+
+
+def test_dependency_cycle_detected():
+    a = ExpertSpec(id="a", arch="resnet101", mem_bytes=MB, depends_on=("b",))
+    b = ExpertSpec(id="b", arch="resnet101", mem_bytes=MB, depends_on=("a",))
+    coe = CoEModel([a, b], RoutingModule(lambda d: "a",
+                                         chain_prob={"a": {"b": 1.0},
+                                                     "b": {"a": 1.0}}))
+    with pytest.raises(ValueError, match="cycle"):
+        coe.assess_usage_probabilities({0: 1.0})
+
+
+# --------------------------------------------------------------------------- #
+# sharding: divisibility fallback
+# --------------------------------------------------------------------------- #
+
+class _FakeMesh:
+    """resolve_spec only reads axis_names + devices.shape — emulate the
+    production 16x16 (and 2x16x16) meshes without 512 devices."""
+    def __init__(self, shape, names):
+        self.devices = np.empty(shape)
+        self.axis_names = names
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(1, 4096), st.integers(1, 4096), st.booleans(),
+       st.booleans())
+def test_resolve_spec_only_divisible(dim0, dim1, use_model, multi_pod):
+    from repro.sharding.logical import resolve_spec
+    mesh = _FakeMesh((2, 16, 16), ("pod", "data", "model")) if multi_pod \
+        else _FakeMesh((16, 16), ("data", "model"))
+    rules = {"a": ("pod", "data"), "b": ("model",) if use_model else ("data",)}
+    spec = resolve_spec((dim0, dim1), ("a", "b"), mesh, rules)
+    # every named axis in the spec must divide its dim, each axis used once
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    used = []
+    for dim, entry in zip((dim0, dim1), tuple(spec) + (None,) * 2):
+        if entry is None:
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        shard = 1
+        for ax in axes:
+            shard *= sizes[ax]
+            used.append(ax)
+        assert dim % shard == 0
+    assert len(used) == len(set(used))
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.sampled_from([24, 32, 48, 16, 12, 8]), st.booleans())
+def test_head_dim_fallback_consistency(heads, multi_pod):
+    """Heads that 16 does not divide must fall back to replication (not
+    crash, not mis-shard) — the starcoder2 (24H) / qwen2 (12H) cases."""
+    from repro.sharding.logical import resolve_spec
+    mesh = _FakeMesh((2, 16, 16), ("pod", "data", "model")) if multi_pod \
+        else _FakeMesh((16, 16), ("data", "model"))
+    spec = resolve_spec((heads, 128), ("heads", None), mesh,
+                        {"heads": ("model",)})
+    entry = tuple(spec)[0] if len(tuple(spec)) else None
+    if heads % 16 == 0:
+        assert entry == "model"
+    else:
+        assert entry is None

@@ -1,0 +1,204 @@
+"""End-to-end behaviour tests: the paper's serving claims on a scaled-down
+circuit-board workload, plus fault-tolerance / elasticity / work-stealing
+(deliverable c, integration tier)."""
+import dataclasses
+
+import pytest
+
+from repro.core import (COSERVE, COSERVE_EM, COSERVE_EM_RA, COSERVE_NONE,
+                        SAMBA, SAMBA_FIFO, SAMBA_PARALLEL, CoServeSystem,
+                        Simulation, SystemPolicy, TierSpec)
+from repro.core.workload import (BOARD_A, BoardSpec, build_board_coe,
+                                 make_executor_specs, make_task_requests)
+
+# scaled-down board: enough experts that the pool thrashes under FCFS+LRU,
+# small enough that every policy simulates in well under a second
+TEST_BOARD = BoardSpec(name="T", n_components=80, n_active=48,
+                       avg_quantity=3.0, n_detection=10, zipf_s=1.6)
+TEST_TIER = TierSpec(name="test_numa", disk_bw=530e6, host_to_device_bw=12e9,
+                     unified=False, host_cache_bytes=2 << 30,
+                     device_bytes=4 << 30)
+
+
+def run_policy(policy: SystemPolicy, n_requests: int = 600, n_gpu: int = 3,
+               n_cpu: int = 1, board: BoardSpec = TEST_BOARD,
+               tier: TierSpec = TEST_TIER, injections=None):
+    coe = build_board_coe(board)
+    if policy.assign == "single":
+        n_gpu, n_cpu = 1, 0
+    pools, specs = make_executor_specs(tier, n_gpu, n_cpu)
+    system = CoServeSystem(coe, specs, pools, policy=policy, tier=tier)
+    sim = Simulation(system)
+    sim.submit(make_task_requests(board, n_requests))
+    if injections:
+        injections(sim, specs)
+    return sim.run()
+
+
+@pytest.fixture(scope="module")
+def metrics():
+    """Run every policy once; individual tests assert on the shared result."""
+    return {p.name: run_policy(p)
+            for p in (COSERVE, COSERVE_NONE, COSERVE_EM, COSERVE_EM_RA,
+                      SAMBA, SAMBA_FIFO, SAMBA_PARALLEL)}
+
+
+# --------------------------------------------------------------------------- #
+# paper §5.2 — headline claims
+# --------------------------------------------------------------------------- #
+
+def test_all_requests_complete(metrics):
+    for name, m in metrics.items():
+        assert m.completed >= 600, f"{name}: {m.completed} < 600 submitted"
+
+
+def test_throughput_beats_samba(metrics):
+    """Paper: 4.5x–12x over Samba-CoE. The scaled-down board is gentler on
+    FCFS+LRU, so require >= 3x here; the full-scale benchmark reproduces the
+    paper's range."""
+    ratio = metrics["coserve"].throughput / metrics["samba_coe"].throughput
+    assert ratio >= 3.0, f"CoServe only {ratio:.2f}x over Samba-CoE"
+
+
+def test_throughput_beats_samba_parallel(metrics):
+    ratio = (metrics["coserve"].throughput
+             / metrics["samba_coe_parallel"].throughput)
+    assert ratio > 1.3, f"CoServe only {ratio:.2f}x over Samba-CoE Parallel"
+
+
+def test_switch_reduction(metrics):
+    """Paper Fig. 14: 78.5%–93.87% fewer expert switches than Samba-CoE
+    Parallel (the executor-matched baseline)."""
+    base = metrics["samba_coe_parallel"].switches
+    ours = metrics["coserve"].switches
+    red = 1 - ours / base
+    assert red >= 0.5, f"switch reduction only {red:.0%} ({base}->{ours})"
+
+
+def test_ablation_ordering(metrics):
+    """Paper Fig. 15/16: None -> +EM -> +EM+RA -> full. Every step removes
+    expert switches; throughput grows (the EM step's throughput contribution
+    is workload-noise-level when prefetch hides the saved loads, so it gets a
+    small tolerance — its switch reduction is the direct mechanism)."""
+    t = {k: metrics[k].throughput for k in metrics}
+    s = {k: metrics[k].switches for k in metrics}
+    assert s["coserve_em"] < s["coserve_none"]
+    assert s["coserve_em_ra"] < s["coserve_em"]
+    assert s["coserve"] <= s["coserve_em_ra"]
+    assert t["coserve_em"] >= t["coserve_none"] * 0.95
+    assert t["coserve_em_ra"] >= t["coserve_em"] * 1.1
+    assert t["coserve"] >= t["coserve_em_ra"] * 1.1
+    assert t["coserve"] > t["coserve_none"] * 1.5
+
+
+def test_scheduling_overhead_small(metrics):
+    """Paper Fig. 19: scheduling+management wall time is a small fraction of
+    the (virtual) inference makespan — here just assert it is sub-second for
+    600 requests (<3% of even a 30s task)."""
+    m = metrics["coserve"]
+    assert m.sched_time < 1.0
+    assert m.mgmt_time < 1.0
+
+
+def test_uma_tier_also_improves():
+    uma = TierSpec(name="test_uma", disk_bw=3000e6, host_to_device_bw=40e9,
+                   host_overhead=0.030, unified=True, host_cache_bytes=0,
+                   device_bytes=6 << 30)
+    co = run_policy(COSERVE, n_gpu=2, n_cpu=1, tier=uma)
+    sam = run_policy(SAMBA, tier=uma)
+    assert co.throughput / sam.throughput >= 2.0
+
+
+# --------------------------------------------------------------------------- #
+# scheduling invariants on the live system
+# --------------------------------------------------------------------------- #
+
+def test_chained_requests_follow_up():
+    """Classification 'ok' outcomes on detection-marked components must spawn
+    detection-expert requests (the CoE dependency chain); the chain completes
+    as ONE request whose final hop carries a parent_id."""
+    coe = build_board_coe(TEST_BOARD)
+    pools, specs = make_executor_specs(TEST_TIER, 3, 1)
+    system = CoServeSystem(coe, specs, pools, policy=COSERVE, tier=TEST_TIER)
+    sim = Simulation(system)
+    sim.submit(make_task_requests(TEST_BOARD, 200))
+    m = sim.run()
+    assert m.completed == 200                      # each chain completes once
+    chained = [r for r in sim.completed if r.parent_id is not None]
+    expected = [r for r in make_task_requests(TEST_BOARD, 200)
+                if r.data["needs_detection"] and r.data["outcome"] == "ok"]
+    assert len(chained) == len(expected)           # every ok+flagged chains
+
+
+def test_switch_counts_deterministic():
+    a = run_policy(COSERVE, n_requests=300)
+    b = run_policy(COSERVE, n_requests=300)
+    assert a.switches == b.switches
+    assert a.makespan == b.makespan
+
+
+# --------------------------------------------------------------------------- #
+# fault tolerance / elasticity / straggler mitigation
+# --------------------------------------------------------------------------- #
+
+def test_executor_failure_requeues_work():
+    def inject(sim, specs):
+        sim.fail_executor_at(1.0, 0)   # kill a GPU executor mid-task
+
+    m = run_policy(COSERVE, n_requests=400, injections=inject)
+    assert m.completed >= 400          # no request lost
+
+
+def test_failure_of_all_but_one_still_completes():
+    def inject(sim, specs):
+        sim.fail_executor_at(0.5, 0)
+        sim.fail_executor_at(0.7, 1)
+        sim.fail_executor_at(0.9, 3)   # leaves one GPU executor
+
+    m = run_policy(COSERVE, n_requests=300, injections=inject)
+    assert m.completed >= 300
+
+
+def test_elastic_add_executor_helps():
+    def inject(sim, specs):
+        sim.add_executor_at(0.5, specs[0])   # scale out with one more GPU exec
+
+    base = run_policy(COSERVE, n_requests=500, n_gpu=2)
+    elastic = run_policy(COSERVE, n_requests=500, n_gpu=2, injections=inject)
+    assert elastic.completed >= 500
+    assert elastic.makespan <= base.makespan * 1.05
+
+
+def test_work_stealing_no_loss_and_not_slower():
+    steal = dataclasses.replace(COSERVE, work_stealing=True)
+    m_steal = run_policy(steal, n_requests=500)
+    m_base = run_policy(COSERVE, n_requests=500)
+    assert m_steal.completed >= 500
+    assert m_steal.makespan <= m_base.makespan * 1.10
+
+
+def test_lookahead_reordering_no_loss():
+    look = dataclasses.replace(COSERVE, lookahead=4)
+    m = run_policy(look, n_requests=500)
+    assert m.completed >= 500
+
+
+# --------------------------------------------------------------------------- #
+# beyond-paper: cost-benefit eviction
+# --------------------------------------------------------------------------- #
+
+def test_cost_benefit_eviction_runs_clean():
+    cb = dataclasses.replace(COSERVE, evict="cost_benefit")
+    m = run_policy(cb, n_requests=500)
+    assert m.completed >= 500
+
+
+def test_full_scale_board_a_smoke():
+    """One full-scale paper task (Board A, 352 experts) through the simulator
+    — the benchmark harness runs all four tasks; this guards the scale path."""
+    m = run_policy(COSERVE, n_requests=1000, board=BOARD_A,
+                   tier=TierSpec(name="numa", unified=False,
+                                 host_cache_bytes=16 << 30,
+                                 device_bytes=12 << 30))
+    assert m.completed >= 1000
+    assert m.throughput > 0

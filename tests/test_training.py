@@ -1,0 +1,237 @@
+"""Training substrate tests: checkpoint fault-tolerance, grad compression,
+data pipeline determinism, and a short loss-goes-down run."""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke_config
+from repro.data import make_batch_for
+from repro.data.pipeline import SyntheticLMDataset
+from repro.models import transformer
+from repro.training import adamw_init
+from repro.training.checkpoint import (AsyncCheckpointer, restore_latest,
+                                       save_checkpoint)
+from repro.training.compression import (compress_grads, compressed_bytes,
+                                        ef_init)
+from repro.training.optimizer import AdamWConfig
+from repro.training.train_loop import make_train_step
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = smoke_config(get_config("starcoder2_3b"))
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+# --------------------------------------------------------------------------- #
+# checkpointing (fault tolerance)
+# --------------------------------------------------------------------------- #
+
+def test_checkpoint_roundtrip(tmp_path, tiny):
+    cfg, params = tiny
+    opt = adamw_init(params)
+    save_checkpoint(str(tmp_path), 7, params, opt, extra={"lr": 3e-4})
+    out = restore_latest(str(tmp_path), params, opt)
+    assert out is not None
+    step, p2, o2, extra = out
+    assert step == 7
+    assert extra == {"lr": 3e-4}
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert int(o2.step) == int(opt.step)
+
+
+def test_restore_latest_picks_newest(tmp_path, tiny):
+    cfg, params = tiny
+    opt = adamw_init(params)
+    for step in (3, 12, 8):
+        save_checkpoint(str(tmp_path), step, params, opt)
+    step, *_ = restore_latest(str(tmp_path), params, opt)
+    assert step == 12
+
+
+def test_partial_write_never_corrupts(tmp_path, tiny):
+    """A stale .tmp directory (simulated crash mid-write) must be invisible
+    to restore_latest — the atomic-rename commit protocol."""
+    cfg, params = tiny
+    opt = adamw_init(params)
+    save_checkpoint(str(tmp_path), 1, params, opt)
+    crash = tmp_path / "step_00000009.tmp"
+    crash.mkdir()
+    (crash / "garbage").write_text("partial")
+    step, *_ = restore_latest(str(tmp_path), params, opt)
+    assert step == 1
+
+
+def test_restore_empty_dir_returns_none(tmp_path, tiny):
+    cfg, params = tiny
+    assert restore_latest(str(tmp_path / "nope"), params, adamw_init(params)) \
+        is None
+
+
+def test_async_checkpointer(tmp_path, tiny):
+    cfg, params = tiny
+    opt = adamw_init(params)
+    ck = AsyncCheckpointer(str(tmp_path))
+    ck.save(1, params, opt)
+    ck.save(2, params, opt)   # waits for the in-flight write first
+    ck.wait()
+    step, *_ = restore_latest(str(tmp_path), params, opt)
+    assert step == 2
+    assert ck.last_committed.endswith("step_00000002")
+
+
+def test_restart_resumes_training(tmp_path, tiny):
+    """Kill-and-restart: training continues from the latest checkpoint with
+    bit-identical state to an uninterrupted run."""
+    cfg, params = tiny
+    step_fn = jax.jit(make_train_step(cfg))
+    opt = adamw_init(params)
+    batches = [
+        {k: jnp.asarray(v) for k, v in make_batch_for(cfg, 2, 16, step=i).items()}
+        for i in range(4)]
+
+    p, o = params, opt
+    for i in range(2):
+        p, o, _ = step_fn(p, o, batches[i])
+    save_checkpoint(str(tmp_path), 2, p, o)
+    for i in range(2, 4):
+        p, o, _ = step_fn(p, o, batches[i])   # uninterrupted reference
+
+    _, rp, ro, _ = restore_latest(str(tmp_path), params, opt)
+    for i in range(2, 4):
+        rp, ro, _ = step_fn(rp, ro, batches[i])
+    for a, b in zip(jax.tree.leaves(p), jax.tree.leaves(rp)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-6, atol=1e-6)
+
+
+# --------------------------------------------------------------------------- #
+# gradient compression (int8 + error feedback)
+# --------------------------------------------------------------------------- #
+
+def test_compression_bounded_error():
+    g = {"w": jnp.asarray(np.random.RandomState(0).randn(64, 64), jnp.float32)}
+    res = ef_init(g)
+    comp, new_res = compress_grads(g, res)
+    err = np.abs(np.asarray(comp["w"]) - np.asarray(g["w"]))
+    scale = float(jnp.max(jnp.abs(g["w"]))) / 127.0
+    assert err.max() <= scale * 0.5 + 1e-6
+
+
+def test_error_feedback_unbiased_over_steps():
+    """Sum of compressed gradients converges to the sum of raw gradients —
+    the EF residual carries quantisation error forward."""
+    rng = np.random.RandomState(1)
+    g_raw = [jnp.asarray(rng.randn(32, 32) * (i + 1), jnp.float32)
+             for i in range(20)]
+    res = ef_init({"w": g_raw[0]})
+    total_comp = np.zeros((32, 32), np.float32)
+    for g in g_raw:
+        comp, res = compress_grads({"w": g}, res)
+        total_comp += np.asarray(comp["w"])
+    total_raw = sum(np.asarray(g) for g in g_raw)
+    # residual bounds the cumulative discrepancy
+    resid = np.abs(np.asarray(res["w"]))
+    np.testing.assert_allclose(total_comp + np.asarray(res["w"]), total_raw,
+                               rtol=1e-4, atol=1e-4)
+    assert resid.max() < np.abs(total_raw).max()
+
+
+def test_compressed_traffic_is_quarter():
+    g = {"w": jnp.zeros((128, 128), jnp.float32)}
+    assert compressed_bytes(g) < 128 * 128 * 4 / 3.9
+
+
+# --------------------------------------------------------------------------- #
+# data pipeline
+# --------------------------------------------------------------------------- #
+
+def test_pipeline_deterministic():
+    ds = SyntheticLMDataset(vocab_size=512, seq_len=32, global_batch=8, seed=3)
+    a, b = ds.batch(5), ds.batch(5)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    np.testing.assert_array_equal(a["labels"], b["labels"])
+    c = ds.batch(6)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_pipeline_label_shift():
+    ds = SyntheticLMDataset(vocab_size=512, seq_len=32, global_batch=4)
+    b = ds.batch(0)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_pipeline_host_sharding_partitions():
+    full = SyntheticLMDataset(vocab_size=512, seq_len=16, global_batch=8)
+    shards = [SyntheticLMDataset(vocab_size=512, seq_len=16, global_batch=8,
+                                 host_index=i, host_count=4) for i in range(4)]
+    assert all(s.local_batch == 2 for s in shards)
+    for s in shards:
+        assert s.batch(0)["tokens"].shape == (2, 17 - 1)
+
+
+def test_pipeline_rejects_indivisible_batch():
+    with pytest.raises(ValueError):
+        SyntheticLMDataset(vocab_size=512, seq_len=16, global_batch=7,
+                           host_count=4)
+
+
+# --------------------------------------------------------------------------- #
+# loss goes down (micro-scale e2e)
+# --------------------------------------------------------------------------- #
+
+def test_loss_decreases_30_steps(tiny):
+    cfg, params = tiny
+    cfg = dataclasses.replace(cfg, remat=False)
+    ds = SyntheticLMDataset(vocab_size=cfg.vocab_size, seq_len=32,
+                            global_batch=8, seed=0, branching=2)
+    step_fn = jax.jit(make_train_step(
+        cfg, AdamWConfig(lr=1e-3, warmup_steps=10)))
+    p, o = transformer.init_params(jax.random.PRNGKey(1), cfg), None
+    o = adamw_init(p)
+    losses = []
+    for i in range(30):
+        batch = {k: jnp.asarray(v) for k, v in ds.batch(i).items()}
+        p, o, m = step_fn(p, o, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.5, f"no learning: {losses[0]:.3f} -> {losses[-1]:.3f}"
+    assert np.isfinite(losses).all()
+
+
+# --------------------------------------------------------------------------- #
+# gradient accumulation (microbatching)
+# --------------------------------------------------------------------------- #
+
+def test_grad_accum_matches_full_batch(tiny):
+    """accum_steps=4 must produce the same update as the full-batch step
+    (same mean gradient; scan-accumulated in fp32)."""
+    cfg, params = tiny
+    cfg = dataclasses.replace(cfg, remat=False)
+    batch = {k: jnp.asarray(v) for k, v in make_batch_for(cfg, 8, 16).items()}
+    opt = adamw_init(params)
+    full = jax.jit(make_train_step(cfg))
+    accum = jax.jit(make_train_step(cfg, accum_steps=4))
+    p1, o1, m1 = full(params, opt, batch)
+    p2, o2, m2 = accum(params, adamw_init(params), batch)
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                               rtol=1e-5, atol=1e-5)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=5e-4, atol=5e-4)
+
+
+def test_grad_accum_rejects_indivisible(tiny):
+    cfg, params = tiny
+    cfg = dataclasses.replace(cfg, remat=False)
+    batch = {k: jnp.asarray(v) for k, v in make_batch_for(cfg, 6, 16).items()}
+    step = make_train_step(cfg, accum_steps=4)
+    with pytest.raises(ValueError, match="not divisible"):
+        step(params, adamw_init(params), batch)
