@@ -1,0 +1,96 @@
+"""Online serving benchmark: throughput + tail latency at fixed offered load.
+
+Three scenarios over the multi-tenant gateway (BOARD_A + BOARD_B, NUMA
+fleet), each at a fixed offered load so future PRs get a comparable perf
+trajectory for the online path:
+
+  steady     — Poisson arrivals near capacity, static fleet
+  autoscale  — same load, elastic fleet (queue/SLO-driven scaling)
+  overload   — 3x capacity with queue-depth admission vs unbounded baseline
+
+Emits ``BENCH_online.json`` (also returned for benchmarks.run aggregation).
+"""
+from __future__ import annotations
+
+import json
+
+from repro.core import COSERVE, CoServeSystem
+from repro.core.memory import NUMA
+from repro.core.workload import BOARD_A, BOARD_B, make_executor_specs
+from repro.serve import (AdmissionConfig, AdmissionController, Autoscaler,
+                         AutoscalerConfig, OnlineGateway, TenantSpec,
+                         build_multi_board_coe)
+
+OUT_PATH = "BENCH_online.json"
+
+
+def _tenants(rate_a: float, rate_b: float):
+    return [
+        TenantSpec(name="A", board=BOARD_A, rate=rate_a, process="poisson",
+                   slo_seconds=2.0, seed=1),
+        TenantSpec(name="B", board=BOARD_B, rate=rate_b, process="bursty",
+                   slo_seconds=4.0, seed=2),
+    ]
+
+
+def _system(tenants):
+    coe = build_multi_board_coe([t.board for t in tenants],
+                                weights=[t.rate for t in tenants])
+    pools, specs = make_executor_specs(NUMA, 3, 1)
+    system = CoServeSystem(coe, specs, pools, policy=COSERVE, tier=NUMA)
+    return system, specs
+
+
+def _row(report, offered_rps: float) -> dict:
+    m = report.metrics
+    return {
+        "offered_rps": offered_rps,
+        "completed": m.completed,
+        "shed": report.telemetry["shed"],
+        "throughput_rps": round(m.throughput, 3),
+        "p50_s": round(m.p50_latency, 4),
+        "p99_s": round(m.p99_latency, 4),
+        "slo_violation_rate": report.telemetry["violation_rate"],
+        "max_queue_depth": report.telemetry["queue"]["max_depth"],
+        "switches": m.switches,
+    }
+
+
+def run(quick: bool = False) -> dict:
+    n = 800 if quick else 2400
+    rate_a, rate_b = 25.0, 12.0
+    offered = rate_a + rate_b
+    out = {}
+
+    tenants = _tenants(rate_a, rate_b)
+    system, _ = _system(tenants)
+    out["steady"] = _row(OnlineGateway(system, tenants).run(n), offered)
+
+    tenants = _tenants(rate_a, rate_b)
+    system, specs = _system(tenants)
+    asc = Autoscaler(AutoscalerConfig(spec=specs[0], min_executors=4,
+                                      max_executors=8))
+    report = OnlineGateway(system, tenants, autoscaler=asc).run(n)
+    out["autoscale"] = _row(report, offered)
+    out["autoscale"]["scale_ups"] = report.autoscaler["scale_ups"]
+    out["autoscale"]["scale_downs"] = report.autoscaler["scale_downs"]
+
+    hot_a, hot_b = 3.0 * rate_a, 3.0 * rate_b
+    tenants = _tenants(hot_a, hot_b)
+    system, _ = _system(tenants)
+    out["overload_baseline"] = _row(
+        OnlineGateway(system, tenants).run(n), hot_a + hot_b)
+    tenants = _tenants(hot_a, hot_b)
+    system, _ = _system(tenants)
+    adm = AdmissionController(AdmissionConfig(policy="queue_depth",
+                                              max_queue=150))
+    out["overload_admission"] = _row(
+        OnlineGateway(system, tenants, admission=adm).run(n), hot_a + hot_b)
+
+    with open(OUT_PATH, "w") as f:
+        json.dump(out, f, indent=1)
+    return out
+
+
+if __name__ == "__main__":
+    print(json.dumps(run(quick=True), indent=1))

@@ -12,6 +12,7 @@
 | fig5_12   | Fig. 5/12 batch-latency linearity      | bench_batch_latency |
 | kernels   | Pallas kernels vs oracles              | bench_kernels    |
 | roofline  | EXPERIMENTS.md §Roofline (from dry-run)| roofline         |
+| online    | online gateway thr/p99 @ fixed load    | bench_online     |
 """
 from __future__ import annotations
 
@@ -22,8 +23,8 @@ import sys
 import time
 
 from benchmarks import (bench_ablation, bench_batch_latency, bench_executors,
-                        bench_memory_alloc, bench_overhead, bench_throughput,
-                        bench_kernels)
+                        bench_memory_alloc, bench_online, bench_overhead,
+                        bench_throughput, bench_kernels)
 
 SUITES = {
     "fig13_14": bench_throughput.run,
@@ -33,6 +34,7 @@ SUITES = {
     "fig19": bench_overhead.run,
     "fig5_12": bench_batch_latency.run,
     "kernels": bench_kernels.run,
+    "online": bench_online.run,
 }
 
 

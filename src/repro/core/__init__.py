@@ -13,7 +13,7 @@ from repro.core.profiler import (ArchProfile, DeviceProfile,
 from repro.core.serving import (COSERVE, COSERVE_EM, COSERVE_EM_RA,
                                 COSERVE_NONE, SAMBA, SAMBA_FIFO,
                                 SAMBA_PARALLEL, CoServeSystem, ExecutorSpec,
-                                Metrics, SystemPolicy)
+                                Metrics, SystemPolicy, latency_percentiles)
 from repro.core.simulator import Simulation, run_real
 from repro.core.engines import HostStore, RealEngine, SimEngine
 
@@ -27,5 +27,5 @@ __all__ = [
     "COSERVE_EM", "COSERVE_EM_RA", "COSERVE_NONE", "SAMBA", "SAMBA_FIFO",
     "SAMBA_PARALLEL", "CoServeSystem", "ExecutorSpec", "Metrics",
     "SystemPolicy", "Simulation", "run_real", "HostStore", "RealEngine",
-    "SimEngine",
+    "SimEngine", "latency_percentiles",
 ]

@@ -38,6 +38,17 @@ class Request:
     parent_id: Optional[int] = None    # set for chained (follow-up) requests
     done_time: Optional[float] = None
     result: Any = None
+    # --- online serving metadata (repro.serve) ------------------------- #
+    tenant: str = ""                   # multi-tenant attribution key
+    deadline: Optional[float] = None   # absolute SLO deadline (arrival + SLO)
+    root_arrival_time: Optional[float] = None  # first arrival of the chain:
+    #                                    follow-ups inherit it so end-to-end
+    #                                    latency spans the whole expert chain
+
+    def e2e_arrival(self) -> float:
+        """Arrival time of the chain root (end-to-end latency anchor)."""
+        return self.root_arrival_time \
+            if self.root_arrival_time is not None else self.arrival_time
 
 
 class RoutingModule:

@@ -15,7 +15,7 @@ Four stages, exactly as the paper defines them:
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, TYPE_CHECKING
+from typing import Callable, List, Optional, Sequence, TYPE_CHECKING
 
 from repro.core.coe import Request
 
@@ -28,6 +28,7 @@ class Group:
     """Consecutive same-expert requests in a queue (batched together)."""
     expert_id: str
     requests: List[Request]
+    deadline: Optional[float] = None   # earliest member deadline (SLO mode)
 
     def __len__(self):
         return len(self.requests)
@@ -48,6 +49,10 @@ class RequestScheduler:
         self.executors = list(executors)
         self.policy = policy
         self._rr = 0
+        # optional SLO hook (repro.serve): maps a request to its absolute
+        # deadline. When set, new groups are placed earliest-deadline-first
+        # within the queue instead of appended; None preserves paper order.
+        self.priority_fn: Optional[Callable[[Request], float]] = None
 
     # ------------------------------------------------------------------ #
     # prediction (paper §4.2 "Prediction of additional inference latency")
@@ -97,16 +102,34 @@ class RequestScheduler:
     # arranging (paper §4.2 "Request arranging")
     # ------------------------------------------------------------------ #
     def _arrange(self, ex: "Executor", req: Request):
+        deadline = self.priority_fn(req) if self.priority_fn else None
         if self.policy.arrange:
             for g in reversed(ex.queue):
                 if g.expert_id == req.expert_id:
                     g.requests.append(req)
+                    if deadline is not None:
+                        g.deadline = deadline if g.deadline is None \
+                            else min(g.deadline, deadline)
                     return
         elif ex.queue and ex.queue[-1].expert_id == req.expert_id:
             # FCFS baselines still batch *consecutive* same-expert arrivals
             ex.queue[-1].requests.append(req)
+            if deadline is not None:
+                g = ex.queue[-1]
+                g.deadline = deadline if g.deadline is None \
+                    else min(g.deadline, deadline)
             return
-        ex.queue.append(Group(expert_id=req.expert_id, requests=[req]))
+        group = Group(expert_id=req.expert_id, requests=[req],
+                      deadline=deadline)
+        if deadline is not None:
+            # earliest-deadline-first insertion; stable among equal deadlines
+            # (deadline-less groups sort last), so urgent tenants overtake
+            # slack ones without starving them
+            for i, g in enumerate(ex.queue):
+                if g.deadline is None or g.deadline > deadline:
+                    ex.queue.insert(i, group)
+                    return
+        ex.queue.append(group)
 
     # ------------------------------------------------------------------ #
     # beyond-paper: bounded lookahead re-sort at dequeue time — pull a

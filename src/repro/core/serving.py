@@ -13,6 +13,7 @@ reproduce the paper's systems:
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from typing import Any, Dict, List, Optional, Sequence
 
@@ -58,6 +59,21 @@ SAMBA_PARALLEL = SystemPolicy(name="samba_coe_parallel", assign="round_robin",
                               protect_queued=False, host_cache_policy="lru")
 
 
+def nearest_rank(sorted_xs: Sequence[float], q: float) -> float:
+    """Nearest-rank quantile: element ceil(q*n) (1-indexed) of sorted data."""
+    n = len(sorted_xs)
+    return sorted_xs[min(n - 1, max(0, math.ceil(q * n) - 1))]
+
+
+def latency_percentiles(latencies: Sequence[float]) -> Dict[str, float]:
+    """Exact p50/p95/p99 over a finished run (nearest-rank)."""
+    if not latencies:
+        return {"p50": 0.0, "p95": 0.0, "p99": 0.0}
+    xs = sorted(latencies)
+    return {"p50": nearest_rank(xs, 0.50), "p95": nearest_rank(xs, 0.95),
+            "p99": nearest_rank(xs, 0.99)}
+
+
 @dataclasses.dataclass
 class Metrics:
     completed: int = 0
@@ -66,9 +82,13 @@ class Metrics:
     makespan: float = 0.0
     throughput: float = 0.0
     avg_latency: float = 0.0
+    p50_latency: float = 0.0
+    p95_latency: float = 0.0
+    p99_latency: float = 0.0
     sched_time: float = 0.0           # wall time in scheduling (overhead, Fig.19)
     mgmt_time: float = 0.0            # wall time in expert management
     per_executor: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    per_tenant: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
 
 @dataclasses.dataclass
@@ -140,6 +160,11 @@ class CoServeSystem:
     def live_executors(self) -> List[Executor]:
         return [e for e in self.executors if e.alive]
 
+    def queue_depth(self) -> int:
+        """Total queued requests across live executors — the one definition
+        shared by telemetry, admission control and the autoscaler."""
+        return sum(e.queued_requests() for e in self.live_executors())
+
     def assign(self, req: Request, now: float) -> Executor:
         t0 = time.perf_counter()
         ex = self.scheduler.assign(req, now)
@@ -150,9 +175,15 @@ class CoServeSystem:
         nxt = self.coe.routing.next_expert(req, expert_id, output)
         if nxt is None:
             return None
+        # root_arrival_time propagates verbatim: online requests (stamped by
+        # the gateway) measure end-to-end across the chain; offline requests
+        # keep the seed's per-stage anchor so paper-reproduction latency
+        # numbers are unchanged
         return Request(id=-req.id - 1_000_000, expert_id=nxt,
                        arrival_time=req.arrival_time, task_id=req.task_id,
-                       data=req.data, parent_id=req.id)
+                       data=req.data, parent_id=req.id,
+                       tenant=req.tenant, deadline=req.deadline,
+                       root_arrival_time=req.root_arrival_time)
 
     # --- fault tolerance / elasticity ---------------------------------- #
     def fail_executor(self, ex: Executor, now: float) -> List[Request]:
@@ -238,9 +269,23 @@ class CoServeSystem:
         m.evictions = sum(e.stats.evictions for e in self.executors)
         m.makespan = makespan
         m.throughput = m.completed / makespan if makespan > 0 else 0.0
-        lats = [r.done_time - r.arrival_time for r in completed
+        lats = [r.done_time - r.e2e_arrival() for r in completed
                 if r.done_time is not None]
         m.avg_latency = sum(lats) / len(lats) if lats else 0.0
+        pct = latency_percentiles(lats)
+        m.p50_latency = pct["p50"]
+        m.p95_latency = pct["p95"]
+        m.p99_latency = pct["p99"]
+        by_tenant: Dict[str, List[float]] = {}
+        for r in completed:
+            if r.done_time is not None:
+                by_tenant.setdefault(r.tenant, []).append(
+                    r.done_time - r.e2e_arrival())
+        m.per_tenant = {
+            t: {"completed": len(ls),
+                "avg_latency": sum(ls) / len(ls),
+                **latency_percentiles(ls)}
+            for t, ls in by_tenant.items()}
         m.sched_time = self.sched_time
         m.mgmt_time = sum(e.stats.mgmt_time for e in self.executors)
         m.per_executor = {

@@ -5,18 +5,29 @@ run the dependency-aware scheduler; executors interleave LOAD_DONE/EXEC_DONE
 events with single-load-channel overlap (prefetch). Chained experts (routing
 follow-ups) re-enter as arrivals at completion time. Also supports failure /
 elastic-scaling injections for the fault-tolerance tests.
+
+Online extensions (repro.serve): arrivals can come from a lazy *source*
+generator instead of a pre-materialized list (one pending SOURCE event at a
+time, so unbounded streams cost O(1) heap space), TICK events drive periodic
+telemetry/control callbacks, and hooks observe admissions and completions:
+
+  ``admission(sim, req) -> bool``  gate on SOURCE arrivals (False = shed);
+  ``on_complete(sim, req, now)``   every finished chain-terminal request;
+  ``on_stage(sim, req, expert_id, now)``  every finished batch member,
+  including intermediate chain stages (per-expert telemetry).
 """
 from __future__ import annotations
 
 import heapq
 import itertools
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, Iterable, Iterator, List, Optional, \
+    Sequence, Tuple
 
 from repro.core.coe import Request
 from repro.core.executor import Executor
 from repro.core.serving import CoServeSystem, Metrics
 
-ARRIVAL, EXEC_DONE, LOAD_DONE, INJECT = range(4)
+ARRIVAL, EXEC_DONE, LOAD_DONE, INJECT, SOURCE, TICK = range(6)
 
 
 class Simulation:
@@ -26,9 +37,22 @@ class Simulation:
         self._seq = itertools.count()
         self.completed: List[Request] = []
         self.now = 0.0
+        # --- online hooks (all optional; None = offline behaviour) ------ #
+        self._source: Optional[Iterator[Request]] = None
+        self.admission: Optional[Callable[["Simulation", Request], bool]] = None
+        self.on_complete: Optional[Callable[["Simulation", Request, float],
+                                            None]] = None
+        self.on_stage: Optional[Callable[["Simulation", Request, str, float],
+                                         None]] = None
+        self.shed = 0     # count only: retaining Request objects would grow
+        #                   without bound on long overloaded streams
+        self._work_events = 0     # non-TICK events in the heap: ticks stop
+        #                           rescheduling once only ticks remain
 
     # ------------------------------------------------------------------ #
     def push(self, t: float, kind: int, payload: Any):
+        if kind != TICK:
+            self._work_events += 1
         heapq.heappush(self.heap, (t, next(self._seq), kind, payload))
 
     def submit(self, requests: Sequence[Request]):
@@ -40,14 +64,60 @@ class Simulation:
         self.push(t, INJECT, fn)
 
     # ------------------------------------------------------------------ #
+    # online arrival source + periodic ticks
+    # ------------------------------------------------------------------ #
+    def set_source(self, requests: Iterable[Request]):
+        """Feed arrivals lazily from a generator of Requests (monotone
+        ``arrival_time``). Only the next arrival is ever materialized."""
+        self._source = iter(requests)
+        self._pull_source()
+
+    def _pull_source(self):
+        if self._source is None:
+            return
+        try:
+            req = next(self._source)
+        except StopIteration:
+            self._source = None
+            return
+        self.push(req.arrival_time, SOURCE, req)
+
+    def add_ticker(self, interval: float,
+                   fn: Callable[["Simulation", float], None],
+                   start: Optional[float] = None):
+        """Call ``fn(sim, now)`` every ``interval`` sim-seconds while work
+        remains (ticks never keep an otherwise-drained simulation alive)."""
+        if interval <= 0.0:
+            raise ValueError(f"ticker interval must be positive, "
+                             f"got {interval}")  # 0 would re-arm at the same
+        #                                          time and stall the clock
+        t0 = self.now + interval if start is None else start
+        self.push(t0, TICK, (interval, fn))
+
+    # ------------------------------------------------------------------ #
     def run(self) -> Metrics:
         sys = self.system
         while self.heap:
             t, _, kind, payload = heapq.heappop(self.heap)
             self.now = t
+            if kind != TICK:
+                self._work_events -= 1
             if kind == ARRIVAL:
                 ex = sys.assign(payload, t)
                 self.kick(ex, t)
+            elif kind == SOURCE:
+                req = payload
+                if self.admission is None or self.admission(self, req):
+                    ex = sys.assign(req, t)
+                    self.kick(ex, t)
+                else:
+                    self.shed += 1
+                self._pull_source()
+            elif kind == TICK:
+                interval, fn = payload
+                fn(self, t)
+                if self._work_events > 0 or self._source is not None:
+                    self.push(t + interval, TICK, (interval, fn))
             elif kind == LOAD_DONE:
                 ex, eid = payload
                 if not ex.alive:
@@ -64,9 +134,13 @@ class Simulation:
                 eid, batch, outputs = ex.finish_batch(t)
                 for i, req in enumerate(batch):
                     out = outputs[i] if outputs else None
+                    if self.on_stage is not None:
+                        self.on_stage(self, req, eid, t)
                     follow = sys.route_followup(req, eid, out)
                     if follow is None:
                         self.completed.append(req)
+                        if self.on_complete is not None:
+                            self.on_complete(self, req, t)
                     else:
                         follow.arrival_time = t
                         self.push(t, ARRIVAL, follow)

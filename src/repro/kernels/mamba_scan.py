@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import CompilerParams
+
 
 def _scan_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, d_ref, y_ref, hout_ref,
                  h_ref, *, block_s, seq_len, n_chunks):
@@ -100,7 +102,7 @@ def mamba_scan(x, dt, b_mat, c_mat, a, d_vec, *, block_d: int = 128,
             jax.ShapeDtypeStruct((bsz, d, n), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((block_d, n), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, dt, b_mat, c_mat, a, d_vec.reshape(1, d))

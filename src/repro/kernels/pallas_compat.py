@@ -1,0 +1,13 @@
+"""Version-compat shim for the Pallas TPU compiler-params rename.
+
+Newer JAX releases expose ``pltpu.CompilerParams``; 0.4.x releases only have
+the ``TPUCompilerParams`` spelling (and future ones may drop it). Kernels
+import ``CompilerParams`` from here so they lower on either side of the
+rename.
+"""
+from jax.experimental.pallas import tpu as pltpu
+
+if hasattr(pltpu, "CompilerParams"):
+    CompilerParams = pltpu.CompilerParams
+else:
+    CompilerParams = pltpu.TPUCompilerParams

@@ -1,15 +1,23 @@
 """Serving driver (deliverable b): the CoServe system end to end.
 
-Two backends behind the SAME scheduler/manager code:
+Three modes behind the SAME scheduler/manager code:
 
-  --mode sim   paper-scale circuit-board workload (352 experts, 2500+ reqs)
-               on the event-driven engine — reproduces the paper's numbers.
-  --mode real  actually loads JAX expert params across host/disk tiers and
-               runs jitted forwards on the local device, with measured wall
-               time (scaled-down pool so experts really switch).
+  --mode sim     paper-scale circuit-board workload (352 experts, 2500+ reqs)
+                 on the event-driven engine — reproduces the paper's numbers.
+  --mode real    actually loads JAX expert params across host/disk tiers and
+                 runs jitted forwards on the local device, with measured wall
+                 time (scaled-down pool so experts really switch).
+  --mode online  streaming multi-tenant front-end (repro.serve): generator
+                 arrivals, per-tenant SLO telemetry (p50/p95/p99), optional
+                 admission control and queue/SLO-driven autoscaling.
+                 ``--engine real`` drives the same gateway over real JAX
+                 experts instead of the profile-driven simulator.
 
   PYTHONPATH=src python -m repro.launch.serve --mode sim  --board A --requests 2500
   PYTHONPATH=src python -m repro.launch.serve --mode real --requests 200
+  PYTHONPATH=src python -m repro.launch.serve --mode online --tenants A,B \
+      --arrival poisson --requests 2000 --rates 25,12 --slos 2.0,4.0 \
+      --admission queue_depth --autoscale 2,8
 """
 from __future__ import annotations
 
@@ -87,6 +95,17 @@ def _tiny_params(key, d_in: int, d_h: int, d_out: int):
             "b2": np.zeros((d_out,), np.float32)}
 
 
+def _real_board_layout(n_components: int, n_detection: int):
+    """Deterministic component->detection wiring of the tiny real-JAX CoE.
+    One seeded stream, drawn in this exact order — request generators must
+    use this helper (not fresh RandomState(0) draws) to match the catalog's
+    declared dependencies."""
+    rng = np.random.RandomState(0)
+    det_assign = rng.randint(0, n_detection, n_components)
+    needs_det = rng.rand(n_components) < 0.5
+    return needs_det, det_assign
+
+
 def build_real_system(n_components: int = 24, n_detection: int = 4,
                       pool_experts: int = 6, n_executors: int = 2,
                       store_root: Optional[str] = None,
@@ -98,9 +117,7 @@ def build_real_system(n_components: int = 24, n_detection: int = 4,
 
     apply_fns = _tiny_apply_fns()
     store = HostStore(root=store_root or tempfile.mkdtemp(prefix="coserve_"))
-    rng = np.random.RandomState(0)
-    det_assign = rng.randint(0, n_detection, n_components)
-    needs_det = rng.rand(n_components) < 0.5
+    needs_det, det_assign = _real_board_layout(n_components, n_detection)
 
     payload = {
         "make_batch": lambda reqs: np.stack([r.data["x"] for r in reqs]),
@@ -176,9 +193,8 @@ def run_real_mode(args) -> dict:
     system, coe = build_real_system(policy=POLICIES[args.policy])
     rng = np.random.RandomState(1)
     n_components = sum(1 for e in coe.experts if e.startswith("cls"))
-    det_assign = np.random.RandomState(0).randint(
-        0, sum(1 for e in coe.experts if e.startswith("det")), n_components)
-    needs_det = np.random.RandomState(0).rand(n_components) < 0.5
+    needs_det, det_assign = _real_board_layout(
+        n_components, sum(1 for e in coe.experts if e.startswith("det")))
     reqs = []
     for i in range(args.requests):
         c = int(rng.randint(n_components))
@@ -193,9 +209,190 @@ def run_real_mode(args) -> dict:
             "makespan_s": round(m.makespan, 3)}
 
 
+# --------------------------------------------------------------------------- #
+# online mode — streaming multi-tenant serving (repro.serve)
+# --------------------------------------------------------------------------- #
+
+def _parse_tenants(args):
+    """``--tenants A,B`` (or ``gold:A,batch:B``) + per-tenant rate/SLO/arrival
+    lists (singletons broadcast)."""
+    from repro.serve import BOARDS, TenantSpec
+
+    tokens = [t.strip() for t in args.tenants.split(",") if t.strip()]
+
+    def broadcast(raw, cast):
+        vals = [cast(v) for v in str(raw).split(",")]
+        if len(vals) == 1:
+            vals *= len(tokens)
+        if len(vals) != len(tokens):
+            raise SystemExit(f"expected 1 or {len(tokens)} values, got {raw!r}")
+        return vals
+
+    names = [t.partition(":")[0] for t in tokens]
+    if len(set(names)) != len(names):
+        raise SystemExit(f"duplicate tenant names in {args.tenants!r} — "
+                         "per-tenant SLOs and telemetry are keyed by name")
+    rates = broadcast(args.rates, float)
+    slos = broadcast(args.slos, float)
+    procs = broadcast(args.arrival, str)
+    classes = broadcast(args.request_class, str)
+    tenants = []
+    for i, tok in enumerate(tokens):
+        name, _, board_key = tok.partition(":")
+        board_key = board_key or name
+        if board_key not in BOARDS:
+            raise SystemExit(f"unknown board {board_key!r} in tenant {tok!r}")
+        try:
+            tenants.append(TenantSpec(
+                name=name, board=BOARDS[board_key], rate=rates[i],
+                process=procs[i], request_class=classes[i],
+                slo_seconds=slos[i], seed=args.seed + i))
+        except ValueError as e:
+            raise SystemExit(str(e))
+    return tenants
+
+
+def _admission_from_args(args, mean_rate: float):
+    """Shared ``--admission`` wiring. The token bucket defaults its refill
+    to the tenant mix's mean per-tenant rate, so the policy actually bites
+    under a burst instead of idling at its library default."""
+    from repro.serve import AdmissionConfig, AdmissionController
+
+    if args.admission == "none":
+        return None
+    bucket_rate = args.bucket_rate if args.bucket_rate is not None \
+        else mean_rate
+    return AdmissionController(AdmissionConfig(
+        policy=args.admission, max_queue=args.max_queue,
+        bucket_rate=bucket_rate, bucket_burst=args.bucket_burst))
+
+
+def _autoscaler_from_args(args, scale_spec: ExecutorSpec, fleet: int):
+    """Shared ``--autoscale`` parsing for both online engines."""
+    from repro.serve import Autoscaler, AutoscalerConfig
+
+    if args.autoscale == "none":
+        return None
+    if args.autoscale == "auto":
+        lo, hi = fleet, 2 * fleet
+    else:
+        try:
+            lo, hi = map(int, args.autoscale.split(","))
+        except ValueError:
+            raise SystemExit(
+                f"--autoscale expects 'min,max', 'auto' or 'none', "
+                f"got {args.autoscale!r}")
+    return Autoscaler(AutoscalerConfig(
+        spec=scale_spec, min_executors=lo, max_executors=hi))
+
+
+def run_online(args) -> dict:
+    from repro.serve import OnlineGateway, build_multi_board_coe
+
+    tenants = _parse_tenants(args)
+    tier = NUMA if args.tier == "numa" else UMA
+    coe = build_multi_board_coe([t.board for t in tenants],
+                                weights=[t.rate for t in tenants])
+    n_gpu, n_cpu = args.executors
+    single = POLICIES[args.policy].assign == "single"
+    if single:   # same fleet normalization as run_sim
+        n_gpu, n_cpu = 1, 0
+    pools, specs = make_executor_specs(tier, n_gpu, n_cpu)
+    system = CoServeSystem(coe, specs, pools, policy=POLICIES[args.policy],
+                           tier=tier)
+
+    admission = _admission_from_args(
+        args, mean_rate=sum(t.rate for t in tenants) / len(tenants))
+    # single-assign policies route everything to executor 0: scaling the
+    # fleet could never receive work, so the autoscaler is disabled
+    autoscaler = None if single \
+        else _autoscaler_from_args(args, specs[0], len(specs))
+
+    gw = OnlineGateway(system, tenants, admission=admission,
+                       autoscaler=autoscaler,
+                       slo_priority=not args.no_slo_priority,
+                       tick_interval=args.tick)
+    report = gw.run(max_requests=args.requests)
+    out = {"mode": "online", "engine": "sim", "tier": tier.name,
+           "policy": args.policy,
+           "tenants": {t.name: {"board": t.board.name, "rate_rps": t.rate,
+                                "process": t.process,
+                                "slo_s": t.slo_seconds} for t in tenants}}
+    out.update(report.to_json())
+    return out
+
+
+def run_online_real(args) -> dict:
+    """The same gateway over the RealEngine: actual JAX expert loads and
+    jitted forwards advance the clock by measured wall time."""
+    import numpy as np
+
+    from repro.core.coe import Request
+    from repro.serve import OnlineGateway, TenantSpec, make_gaps
+    from repro.core.workload import BOARD_A
+
+    if any("," in str(v) for v in (args.rates, args.slos, args.arrival)):
+        raise SystemExit(
+            "--engine real serves a single tenant over the tiny local CoE: "
+            "pass scalar --rates/--slos/--arrival (multi-tenant mixes need "
+            "--engine sim); --tenants is ignored here")
+    if args.request_class not in ("scan", "random"):
+        raise SystemExit(f"unknown request class {args.request_class!r}")
+    # the real engine's source always draws uniformly at random — "random"
+    # is served as asked; the default "scan" has no board-scan analogue on
+    # the tiny local CoE and also gets the uniform stream
+    system, coe = build_real_system(policy=POLICIES[args.policy])
+    n_components = sum(1 for e in coe.experts if e.startswith("cls"))
+    n_detection = sum(1 for e in coe.experts if e.startswith("det"))
+    needs_det, det_assign = _real_board_layout(n_components, n_detection)
+    try:
+        tenant = TenantSpec(name="local", board=BOARD_A,
+                            rate=float(args.rates),
+                            process=args.arrival,
+                            request_class="random",   # what the source does
+                            slo_seconds=float(args.slos),
+                            seed=args.seed)
+    except ValueError as e:
+        raise SystemExit(str(e))
+
+    def source():
+        rng = np.random.RandomState(args.seed)
+        gaps = make_gaps(tenant.process, tenant.rate, rng)
+        t = 0.0
+        for i in range(args.requests):
+            t += next(gaps)
+            c = int(rng.randint(n_components))
+            yield Request(
+                id=i, expert_id=f"cls{c:03d}", arrival_time=t,
+                task_id="local", tenant="local",
+                deadline=t + tenant.slo_seconds, root_arrival_time=t,
+                data={"component": c, "x": rng.randn(64).astype(np.float32),
+                      "needs_detection": bool(needs_det[c]),
+                      "det_expert": int(det_assign[c])})
+
+    admission = _admission_from_args(args, mean_rate=tenant.rate)
+    ex0 = system.executors[0]
+    scale_spec = ExecutorSpec("gpu", ex0.device_profile, ex0.batch_bytes,
+                              "gpu")
+    autoscaler = _autoscaler_from_args(args, scale_spec,
+                                       len(system.executors))
+    gw = OnlineGateway(system, [tenant], admission=admission,
+                       autoscaler=autoscaler,
+                       slo_priority=not args.no_slo_priority,
+                       tick_interval=args.tick)
+    report = gw.run(source=source())
+    out = {"mode": "online", "engine": "real", "policy": args.policy,
+           "tenants": {"local": {"rate_rps": tenant.rate,
+                                 "process": tenant.process,
+                                 "request_class": tenant.request_class,
+                                 "slo_s": tenant.slo_seconds}}}
+    out.update(report.to_json())
+    return out
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--mode", default="sim", choices=["sim", "real"])
+    ap.add_argument("--mode", default="sim", choices=["sim", "real", "online"])
     ap.add_argument("--board", default="A", choices=["A", "B"])
     ap.add_argument("--tier", default="numa", choices=["numa", "uma"])
     ap.add_argument("--policy", default="coserve", choices=list(POLICIES))
@@ -203,9 +400,45 @@ def main(argv=None):
     ap.add_argument("--executors", type=lambda s: tuple(map(int, s.split(","))),
                     default=(3, 1), help="n_gpu,n_cpu")
     ap.add_argument("--out", default=None)
+    # --- online-mode flags (repro.serve) ------------------------------- #
+    ap.add_argument("--engine", default="sim", choices=["sim", "real"],
+                    help="online mode: event-driven sim or real JAX experts")
+    ap.add_argument("--tenants", default="A,B",
+                    help="comma list of name[:board] tokens, boards A|B")
+    ap.add_argument("--arrival", default="poisson",
+                    help="arrival process per tenant (broadcasts): "
+                         "poisson|bursty|diurnal|step")
+    ap.add_argument("--rates", default="25",
+                    help="mean req/s per tenant (broadcasts)")
+    ap.add_argument("--slos", default="2.0",
+                    help="end-to-end latency SLO seconds per tenant")
+    ap.add_argument("--request-class", default="scan",
+                    help="scan (board-scan locality) | random")
+    ap.add_argument("--admission", default="none",
+                    choices=["none", "queue_depth", "deadline", "token_bucket"])
+    ap.add_argument("--max-queue", type=int, default=200)
+    ap.add_argument("--bucket-rate", type=float, default=None,
+                    help="token_bucket: admitted req/s per tenant "
+                         "(default: the tenant mix's mean per-tenant rate)")
+    ap.add_argument("--bucket-burst", type=float, default=50.0,
+                    help="token_bucket: burst capacity in tokens")
+    ap.add_argument("--autoscale", default="auto",
+                    help="min,max executors; 'auto' = current fleet to 2x; "
+                         "'none' disables scaling")
+    ap.add_argument("--no-slo-priority", action="store_true",
+                    help="disable deadline-EDF queue insertion")
+    ap.add_argument("--tick", type=float, default=0.5,
+                    help="telemetry/autoscaler control interval, sim seconds")
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
-    result = run_sim(args) if args.mode == "sim" else run_real_mode(args)
+    if args.tick <= 0:
+        raise SystemExit(f"--tick must be positive, got {args.tick}")
+    if args.mode == "online":
+        result = run_online(args) if args.engine == "sim" \
+            else run_online_real(args)
+    else:
+        result = run_sim(args) if args.mode == "sim" else run_real_mode(args)
     print(json.dumps(result, indent=2))
     if args.out:
         with open(args.out, "w") as f:

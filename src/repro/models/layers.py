@@ -26,18 +26,37 @@ def dense_init(key, shape, dtype, fan_in=None):
     return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std).astype(dtype)
 
 
+@jax.custom_vjp
+def _sharding_barrier(x):
+    return jax.lax.optimization_barrier(x)
+
+
+def _sharding_barrier_fwd(x):
+    return jax.lax.optimization_barrier(x), None
+
+
+def _sharding_barrier_bwd(_, g):
+    return (g,)
+
+
+_sharding_barrier.defvjp(_sharding_barrier_fwd, _sharding_barrier_bwd)
+
+
 def cast_param(p, compute_dtype, *axes):
     """Cast a (possibly fp32, FSDP-sharded) parameter to the compute dtype
     *before* any gather: the sharding constraint + optimization barrier pin
     the convert to the param's sharding, so XLA's FSDP all-gather moves bf16,
     not fp32 — 2x on weight-gather traffic and peak temp
-    (EXPERIMENTS.md SSPerf)."""
+    (EXPERIMENTS.md SSPerf). ``optimization_barrier`` has no differentiation
+    rule, so the barrier goes through a custom_vjp whose cotangent is the
+    identity — the cast's own grad path (bf16 -> fp32 accumulation) is
+    untouched."""
     if p.dtype == compute_dtype:
         return p
     out = p.astype(compute_dtype)
     if axes:
         out = logical_constraint(out, *axes)
-        out = jax.lax.optimization_barrier(out)
+        out = _sharding_barrier(out)
     return out
 
 

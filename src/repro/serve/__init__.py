@@ -1,0 +1,23 @@
+"""Online serving subsystem: streaming arrivals, multi-tenant SLO telemetry,
+admission control and load-driven autoscaling over the CoServe core."""
+from repro.serve.admission import AdmissionConfig, AdmissionController
+from repro.serve.arrivals import (BOARDS, TenantSpec, board_payload_stream,
+                                  build_multi_board_coe, bursty_gaps,
+                                  diurnal_gaps, make_gaps, merge_streams,
+                                  multi_tenant_stream, poisson_gaps,
+                                  step_gaps, tenant_stream)
+from repro.serve.autoscaler import Autoscaler, AutoscalerConfig, ScaleEvent
+from repro.serve.gateway import OnlineGateway, OnlineReport
+from repro.serve.slo import SLOPolicy, SLOTarget, deadline_priority
+from repro.serve.telemetry import (LatencyTracker, P2Quantile, TelemetryHub,
+                                   WindowRate)
+
+__all__ = [
+    "AdmissionConfig", "AdmissionController", "BOARDS", "TenantSpec",
+    "board_payload_stream", "build_multi_board_coe", "bursty_gaps",
+    "diurnal_gaps", "make_gaps", "merge_streams", "multi_tenant_stream",
+    "poisson_gaps", "step_gaps", "tenant_stream", "Autoscaler",
+    "AutoscalerConfig", "ScaleEvent", "OnlineGateway", "OnlineReport",
+    "SLOPolicy", "SLOTarget", "deadline_priority", "LatencyTracker",
+    "P2Quantile", "TelemetryHub", "WindowRate",
+]

@@ -1,0 +1,298 @@
+"""Online serving subsystem (repro.serve): arrivals, telemetry, SLO
+scheduling, admission control and autoscaling, all on deterministic seeds."""
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core import COSERVE, CoServeSystem, Request
+from repro.core.memory import NUMA
+from repro.core.workload import BoardSpec, make_executor_specs
+from repro.serve import (AdmissionConfig, AdmissionController, Autoscaler,
+                         AutoscalerConfig, OnlineGateway, P2Quantile,
+                         TenantSpec, build_multi_board_coe, make_gaps,
+                         multi_tenant_stream, tenant_stream)
+
+SMALL_A = BoardSpec(name="A", n_components=40, n_active=20, n_detection=4)
+SMALL_B = BoardSpec(name="B", n_components=36, n_active=18, n_detection=4)
+
+
+def build_system(boards, n_gpu=2, n_cpu=1, weights=None):
+    coe = build_multi_board_coe(boards, weights)
+    pools, specs = make_executor_specs(NUMA, n_gpu, n_cpu)
+    return CoServeSystem(coe, specs, pools, policy=COSERVE, tier=NUMA), specs
+
+
+def make_tenants(rate_a=30.0, rate_b=15.0, slo_a=2.0, slo_b=4.0,
+                 process="poisson"):
+    return [
+        TenantSpec(name="gold", board=SMALL_A, rate=rate_a, process=process,
+                   slo_seconds=slo_a, seed=1),
+        TenantSpec(name="batch", board=SMALL_B, rate=rate_b, process=process,
+                   slo_seconds=slo_b, seed=2),
+    ]
+
+
+# --------------------------------------------------------------------------- #
+# arrival processes
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("process", ["poisson", "bursty", "diurnal"])
+def test_arrival_processes_hit_requested_rate(process):
+    rng = np.random.RandomState(0)
+    # short diurnal period so the sample spans many full cycles (a partial
+    # cycle over-weights the daytime peak)
+    kw = {"period_s": 5.0} if process == "diurnal" else {}
+    gaps = list(itertools.islice(make_gaps(process, 50.0, rng, **kw), 4000))
+    rate = len(gaps) / sum(gaps)
+    assert 35.0 < rate < 70.0, f"{process} mean rate {rate}"
+    assert all(g >= 0.0 for g in gaps)
+
+
+def test_step_process_rate_changes_at_step():
+    rng = np.random.RandomState(0)
+    gaps = make_gaps("step", 10.0, rng, rate_after=100.0, t_step=10.0)
+    times = list(itertools.islice(itertools.accumulate(gaps), 3000))
+    before = sum(1 for t in times if t < 10.0) / 10.0
+    after_times = [t for t in times if t >= 10.0]
+    span = after_times[-1] - 10.0
+    after = len(after_times) / span
+    assert after > 4.0 * before
+
+
+def test_tenant_stream_is_deterministic_and_monotone():
+    t1 = list(itertools.islice(
+        tenant_stream(make_tenants()[0], itertools.count()), 200))
+    t2 = list(itertools.islice(
+        tenant_stream(make_tenants()[0], itertools.count()), 200))
+    assert [r.arrival_time for r in t1] == [r.arrival_time for r in t2]
+    assert [r.expert_id for r in t1] == [r.expert_id for r in t2]
+    times = [r.arrival_time for r in t1]
+    assert times == sorted(times)
+    assert all(r.deadline == pytest.approx(r.arrival_time + 2.0) for r in t1)
+
+
+def test_multi_tenant_stream_merges_in_time_order():
+    reqs = list(multi_tenant_stream(make_tenants(), max_requests=300))
+    times = [r.arrival_time for r in reqs]
+    assert times == sorted(times)
+    assert {r.tenant for r in reqs} == {"gold", "batch"}
+    assert len({r.id for r in reqs}) == 300          # globally unique ids
+
+
+# --------------------------------------------------------------------------- #
+# P2 quantile estimator
+# --------------------------------------------------------------------------- #
+
+def test_p2_quantile_tracks_exact_percentiles():
+    rng = np.random.RandomState(3)
+    xs = rng.lognormal(0.0, 0.6, 5000)
+    for q in (0.5, 0.95, 0.99):
+        est = P2Quantile(q)
+        for x in xs:
+            est.add(float(x))
+        exact = float(np.percentile(xs, 100 * q))
+        assert est.value() == pytest.approx(exact, rel=0.15), q
+
+
+# --------------------------------------------------------------------------- #
+# gateway + telemetry
+# --------------------------------------------------------------------------- #
+
+def run_gateway(tenants, n_requests, system=None, specs=None, **kw):
+    if system is None:
+        system, specs = build_system([SMALL_A, SMALL_B],
+                                     weights=[t.rate for t in tenants])
+    gw = OnlineGateway(system, tenants, **kw)
+    return gw.run(max_requests=n_requests)
+
+
+def test_online_percentiles_ordered_and_all_complete():
+    tenants = make_tenants()
+    report = run_gateway(tenants, 600)
+    assert report.metrics.completed == 600
+    assert report.telemetry["shed"] == 0
+    for t in ("gold", "batch"):
+        snap = report.telemetry["per_tenant"][t]
+        assert snap["count"] > 0
+        assert snap["p50"] <= snap["p95"] <= snap["p99"]
+        assert snap["p99"] >= snap["mean"] * 0.5
+    m = report.metrics
+    assert m.p50_latency <= m.p95_latency <= m.p99_latency
+    assert set(m.per_tenant) == {"gold", "batch"}
+
+
+def test_per_expert_breakdown_covers_both_archs():
+    report = run_gateway(make_tenants(), 500)
+    per_expert = report.telemetry["per_expert"]
+    assert "resnet101" in per_expert
+    assert any(a.startswith("yolov5") for a in per_expert)
+
+
+def test_slo_violations_monotone_in_offered_load():
+    counts = []
+    for rate in (10.0, 60.0, 200.0):
+        tenants = [TenantSpec(name="gold", board=SMALL_A, rate=rate,
+                              slo_seconds=1.5, seed=1)]
+        system, _ = build_system([SMALL_A])
+        report = run_gateway(tenants, 500, system=system)
+        assert report.metrics.completed == 500
+        counts.append(sum(report.telemetry["per_tenant"][t]["slo"]["violations"]
+                          for t in report.telemetry["per_tenant"]))
+    assert counts[0] <= counts[1] <= counts[2]
+    assert counts[2] > counts[0]            # overload really violates more
+
+
+def test_deadline_priority_reduces_tight_tenant_latency():
+    """EDF insertion should cut the tight-SLO tenant's tail vs FIFO order."""
+    def tail(slo_priority):
+        tenants = [
+            TenantSpec(name="tight", board=SMALL_A, rate=20.0,
+                       slo_seconds=0.8, seed=1),
+            TenantSpec(name="slack", board=SMALL_B, rate=40.0,
+                       slo_seconds=30.0, seed=2),
+        ]
+        system, _ = build_system([SMALL_A, SMALL_B])
+        report = run_gateway(tenants, 800, system=system,
+                             slo_priority=slo_priority)
+        return report.telemetry["per_tenant"]["tight"]["p95"]
+
+    assert tail(True) <= tail(False) * 1.05
+
+
+# --------------------------------------------------------------------------- #
+# admission control
+# --------------------------------------------------------------------------- #
+
+def test_admission_bounds_queue_growth_under_overload():
+    tenants = [TenantSpec(name="gold", board=SMALL_A, rate=400.0,
+                          slo_seconds=2.0, seed=1)]
+
+    system, _ = build_system([SMALL_A])
+    unbounded = run_gateway(tenants, 1200, system=system)
+    system, _ = build_system([SMALL_A])
+    admission = AdmissionController(AdmissionConfig(policy="queue_depth",
+                                                    max_queue=40))
+    bounded = run_gateway(tenants, 1200, system=system, admission=admission)
+
+    q_unbounded = unbounded.telemetry["queue"]["max_depth"]
+    q_bounded = bounded.telemetry["queue"]["max_depth"]
+    # bound holds up to the in-flight batches admitted before the gate closes
+    assert q_bounded <= 40 + 16
+    assert q_unbounded > 3 * q_bounded      # baseline queue grows without bound
+    assert bounded.telemetry["shed"] > 0
+    assert admission.stats()["rejected"] == bounded.telemetry["shed"]
+    # everything admitted still completes
+    assert bounded.metrics.completed + bounded.telemetry["shed"] == 1200
+
+
+def test_deadline_admission_sheds_doomed_requests():
+    tenants = [TenantSpec(name="gold", board=SMALL_A, rate=300.0,
+                          slo_seconds=0.5, seed=1)]
+
+    system, _ = build_system([SMALL_A])
+    baseline = run_gateway(tenants, 600, system=system)
+    system, _ = build_system([SMALL_A])
+    admission = AdmissionController(AdmissionConfig(policy="deadline"))
+    report = run_gateway(tenants, 600, system=system, admission=admission)
+
+    assert report.telemetry["shed"] > 0
+    # shedding guaranteed-late work leaves the admitted set far better off
+    vr_base = baseline.telemetry["per_tenant"]["gold"]["slo"]["violation_rate"]
+    vr_adm = report.telemetry["per_tenant"]["gold"]["slo"]["violation_rate"]
+    assert vr_adm < vr_base * 0.9
+
+
+def test_token_bucket_caps_one_tenant_without_starving_other():
+    tenants = [
+        TenantSpec(name="greedy", board=SMALL_A, rate=200.0, seed=1),
+        TenantSpec(name="modest", board=SMALL_B, rate=10.0, seed=2),
+    ]
+    system, _ = build_system([SMALL_A, SMALL_B])
+    admission = AdmissionController(AdmissionConfig(
+        policy="token_bucket", bucket_rate=30.0, bucket_burst=10.0))
+    report = run_gateway(tenants, 800, system=system, admission=admission)
+    shed = report.telemetry["per_tenant"]
+    greedy_shed = shed["greedy"]["slo"]["shed"]
+    modest_shed = shed["modest"]["slo"].get("shed", 0)
+    assert greedy_shed > 0
+    assert modest_shed <= greedy_shed * 0.1
+
+
+# --------------------------------------------------------------------------- #
+# autoscaler
+# --------------------------------------------------------------------------- #
+
+def test_autoscaler_scales_up_on_load_step_and_back_down():
+    tenants = [TenantSpec(
+        name="gold", board=SMALL_A, rate=150.0, process="step",
+        slo_seconds=3.0, seed=1,
+        process_kwargs=(("rate_after", 5.0), ("t_step", 6.0)))]
+    system, specs = build_system([SMALL_A], n_gpu=1, n_cpu=0)
+    asc = Autoscaler(AutoscalerConfig(
+        spec=specs[0], min_executors=1, max_executors=5,
+        up_queue_per_executor=8.0, down_queue_per_executor=1.0,
+        cooldown_s=1.0))
+    gw = OnlineGateway(system, tenants, autoscaler=asc, tick_interval=0.25)
+    report = gw.run(max_requests=1100)
+
+    summary = report.autoscaler
+    assert summary["scale_ups"] >= 1, summary
+    assert summary["scale_downs"] >= 1, summary
+    ups = [e for e in summary["events"] if e["action"] == "up"]
+    downs = [e for e in summary["events"] if e["action"] == "down"]
+    assert min(u["t"] for u in ups) < min(d["t"] for d in downs)
+    # no work lost across scale-downs (orphans re-queued at-most-once)
+    assert report.metrics.completed == 1100
+    # fleet returns toward the floor after the step down
+    assert report.timeline[-1]["executors"] <= report.timeline[0]["executors"] + 1
+
+
+def test_autoscaler_respects_max_executors():
+    tenants = [TenantSpec(name="gold", board=SMALL_A, rate=500.0, seed=1)]
+    system, specs = build_system([SMALL_A], n_gpu=1, n_cpu=0)
+    asc = Autoscaler(AutoscalerConfig(
+        spec=specs[0], min_executors=1, max_executors=3,
+        up_queue_per_executor=4.0, cooldown_s=0.5))
+    gw = OnlineGateway(system, tenants, autoscaler=asc, tick_interval=0.25)
+    report = gw.run(max_requests=600)
+    assert max(p["executors"] for p in report.timeline) <= 3
+    assert report.metrics.completed == 600
+
+
+# --------------------------------------------------------------------------- #
+# incremental source plumbing
+# --------------------------------------------------------------------------- #
+
+def test_source_is_pulled_lazily():
+    pulled = []
+
+    def counting_stream():
+        for i, r in enumerate(multi_tenant_stream(make_tenants(), 100)):
+            pulled.append(i)
+            yield r
+
+    system, _ = build_system([SMALL_A, SMALL_B])
+    gw = OnlineGateway(system, make_tenants())
+    stream = counting_stream()
+    gw.sim.set_source(stream)
+    # before run(), exactly one arrival has been materialized
+    assert len(pulled) == 1
+    m = gw.sim.run()
+    assert m.completed == 100
+    assert len(pulled) == 100
+
+
+def test_offline_submit_path_unchanged():
+    """The pre-materialized offline path coexists with online hooks."""
+    from repro.core import Simulation
+    from repro.core.workload import build_board_coe, make_task_requests
+    coe = build_board_coe(SMALL_A)
+    pools, specs = make_executor_specs(NUMA, 2, 1)
+    system = CoServeSystem(coe, specs, pools, policy=COSERVE, tier=NUMA)
+    sim = Simulation(system)
+    sim.submit(make_task_requests(SMALL_A, 300))
+    m = sim.run()
+    assert m.completed == 300
+    assert m.p50_latency <= m.p99_latency
+    assert "" in m.per_tenant          # untagged tenant bucket
