@@ -1,0 +1,128 @@
+"""Memory-hierarchy benchmark: eviction policy x prefetch on NUMA/UMA tiers.
+
+Three experiments over the unified tiered-memory subsystem, each at a fixed
+workload so future PRs (sharded experts, multi-device fleets) get a
+comparable trajectory for the hierarchy:
+
+  policy_sweep — eviction policy x prefetch mode on both tiers: switch
+                 counts, p99 latency, stall time, promotion stats
+  contention   — 1 vs 2 executors on one shared SSD: per-load latency and
+                 channel queueing (the acceptance check that contention is
+                 modeled at all)
+  prefetch     — dependency-aware cross-tier prefetch vs --prefetch off on a
+                 detector-spill workload: total expert-switch stall time
+
+Emits ``BENCH_memory.json`` (also returned for benchmarks.run aggregation).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+
+from repro.core import COSERVE, CoServeSystem, Simulation, SystemPolicy
+from repro.core.workload import (BoardSpec, build_board_coe,
+                                 make_executor_specs, make_task_requests)
+from repro.memory import POLICY_NAMES, TierSpec
+
+OUT_PATH = "BENCH_memory.json"
+
+# scaled-down board that thrashes the pool (same shape as the system tests)
+SWEEP_BOARD = BoardSpec(name="M", n_components=80, n_active=48,
+                        avg_quantity=3.0, n_detection=10, zipf_s=1.6)
+# detector-heavy board: classifiers fit on device, detectors spill to disk —
+# the regime where disk->host promotion has downstream traffic to hide
+DET_BOARD = BoardSpec(name="D", n_components=80, n_active=20,
+                      avg_quantity=4.0, n_detection=20,
+                      detection_fraction=1.0, ok_prob=0.98, zipf_s=0.8)
+
+TIERS = {
+    "numa": TierSpec(name="numa_s", disk_bw=530e6, host_to_device_bw=12e9,
+                     unified=False, host_cache_bytes=2 << 30,
+                     device_bytes=4 << 30),
+    "uma": TierSpec(name="uma_s", disk_bw=3000e6, host_to_device_bw=40e9,
+                    host_overhead=0.030, unified=True, host_cache_bytes=0,
+                    device_bytes=6 << 30),
+}
+# prefetch experiment: host tier sized so promoted detectors survive until
+# their demand load (classifier pass-through traffic evicts them otherwise)
+DET_TIER = TierSpec(name="numa_det", disk_bw=530e6, host_to_device_bw=12e9,
+                    unified=False, host_cache_bytes=4 << 30,
+                    device_bytes=4 << 30)
+
+PREFETCH_MODES = {
+    "off": {"prefetch": False, "host_prefetch": False},
+    "device": {"prefetch": True, "host_prefetch": False},
+    "all": {"prefetch": True, "host_prefetch": True},
+}
+
+
+def _simulate(board: BoardSpec, tier: TierSpec, policy: SystemPolicy,
+              n_requests: int, n_gpu: int = 2, n_cpu: int = 0):
+    coe = build_board_coe(board)
+    pools, specs = make_executor_specs(tier, n_gpu, n_cpu)
+    system = CoServeSystem(coe, specs, pools, policy=policy, tier=tier)
+    sim = Simulation(system)
+    sim.submit(make_task_requests(board, n_requests))
+    return sim.run()
+
+
+def _row(m) -> dict:
+    total_load = sum(s["load_time"] for s in m.per_executor.values())
+    return {
+        "completed": m.completed,
+        "switches": m.switches,
+        "evictions": m.evictions,
+        "throughput_rps": round(m.throughput, 3),
+        "p99_s": round(m.p99_latency, 4),
+        "stall_s": round(m.stall_time, 3),
+        "load_s": round(total_load, 3),
+        "per_load_s": round(total_load / max(1, m.switches), 4),
+        "disk_wait_s": m.memory["channels"]["disk_channel"]["wait_time_s"],
+        "prefetch": m.memory["prefetch"],
+    }
+
+
+def run(quick: bool = False) -> dict:
+    n = 300 if quick else 800
+    out = {"policy_sweep": {}, "contention": {}, "prefetch": {}}
+
+    # --- eviction policy x prefetch mode x tier ------------------------- #
+    for tier_name, tier in TIERS.items():
+        for evict in POLICY_NAMES:
+            for mode, knobs in PREFETCH_MODES.items():
+                policy = dataclasses.replace(COSERVE, evict=evict, **knobs)
+                m = _simulate(SWEEP_BOARD, tier, policy, n)
+                key = f"{tier_name}/{evict}/{mode}"
+                out["policy_sweep"][key] = _row(m)
+
+    # --- shared-SSD contention: 1 vs 2 executors ------------------------ #
+    for n_gpu in (1, 2):
+        m = _simulate(SWEEP_BOARD, TIERS["numa"], COSERVE, n, n_gpu=n_gpu)
+        out["contention"][f"{n_gpu}_executor"] = _row(m)
+    solo = out["contention"]["1_executor"]["per_load_s"]
+    duo = out["contention"]["2_executor"]["per_load_s"]
+    out["contention"]["per_load_ratio"] = round(duo / solo, 3) if solo else None
+
+    # --- cross-tier prefetch vs off on the detector-spill workload ------ #
+    for mode, knobs in PREFETCH_MODES.items():
+        policy = dataclasses.replace(COSERVE, **knobs)
+        m = _simulate(DET_BOARD, DET_TIER, policy, n)
+        out["prefetch"][mode] = _row(m)
+    off_stall = out["prefetch"]["off"]["stall_s"]
+    dev_stall = out["prefetch"]["device"]["stall_s"]
+    all_stall = out["prefetch"]["all"]["stall_s"]
+    # all-vs-off is the whole overlap machinery; all-vs-device isolates the
+    # cross-tier promotion's marginal contribution — report both so no one
+    # attributes the device-overlap win to the promotion path
+    out["prefetch"]["stall_reduction_vs_off"] = \
+        round(1 - all_stall / off_stall, 3) if off_stall else None
+    out["prefetch"]["cross_tier_marginal"] = \
+        round(1 - all_stall / dev_stall, 3) if dev_stall else None
+
+    with open(OUT_PATH, "w") as f:
+        json.dump(out, f, indent=1)
+    return out
+
+
+if __name__ == "__main__":
+    print(json.dumps(run(quick=True), indent=1))

@@ -13,6 +13,8 @@
 | kernels   | Pallas kernels vs oracles              | bench_kernels    |
 | roofline  | EXPERIMENTS.md §Roofline (from dry-run)| roofline         |
 | online    | online gateway thr/p99 @ fixed load    | bench_online     |
+| memory    | tiered-memory hierarchy (policy x      | bench_memory     |
+|           | prefetch, contention, promotion)       |                  |
 """
 from __future__ import annotations
 
@@ -23,8 +25,8 @@ import sys
 import time
 
 from benchmarks import (bench_ablation, bench_batch_latency, bench_executors,
-                        bench_memory_alloc, bench_online, bench_overhead,
-                        bench_throughput, bench_kernels)
+                        bench_memory, bench_memory_alloc, bench_online,
+                        bench_overhead, bench_throughput, bench_kernels)
 
 SUITES = {
     "fig13_14": bench_throughput.run,
@@ -35,6 +37,7 @@ SUITES = {
     "fig5_12": bench_batch_latency.run,
     "kernels": bench_kernels.run,
     "online": bench_online.run,
+    "memory": bench_memory.run,
 }
 
 

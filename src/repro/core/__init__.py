@@ -1,5 +1,7 @@
 """CoServe core: the paper's contribution (scheduling, expert management,
-offline profiling, serving runtime) as a composable library."""
+offline profiling, serving runtime) as a composable library. The storage
+hierarchy itself (tiers, pools, transfer channels, cross-tier prefetch)
+lives in ``repro.memory``; the seed's names are re-exported here."""
 from repro.core.coe import CoEModel, ExpertSpec, Request, RoutingModule
 from repro.core.scheduler import (Group, RequestScheduler, SchedulerPolicy,
                                   max_executable_batch, split_batch)
@@ -16,6 +18,8 @@ from repro.core.serving import (COSERVE, COSERVE_EM, COSERVE_EM_RA,
                                 Metrics, SystemPolicy, latency_percentiles)
 from repro.core.simulator import Simulation, run_real
 from repro.core.engines import HostStore, RealEngine, SimEngine
+from repro.memory import (MemoryHierarchy, PrefetchConfig, Residency,
+                          TransferChannel, TransferEngine)
 
 __all__ = [
     "CoEModel", "ExpertSpec", "Request", "RoutingModule",
@@ -27,5 +31,6 @@ __all__ = [
     "COSERVE_EM", "COSERVE_EM_RA", "COSERVE_NONE", "SAMBA", "SAMBA_FIFO",
     "SAMBA_PARALLEL", "CoServeSystem", "ExecutorSpec", "Metrics",
     "SystemPolicy", "Simulation", "run_real", "HostStore", "RealEngine",
-    "SimEngine", "latency_percentiles",
+    "SimEngine", "latency_percentiles", "MemoryHierarchy", "PrefetchConfig",
+    "Residency", "TransferChannel", "TransferEngine",
 ]

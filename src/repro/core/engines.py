@@ -1,62 +1,68 @@
 """Execution engines behind the executor state machine.
 
-``SimEngine`` — latencies from offline profiles + tier model; drives the
-event-driven simulator at the paper's scale (hundreds of experts) on this
-CPU-only box. ``RealEngine`` — actually loads JAX expert params across
-host/disk tiers and runs jitted forwards, measuring wall time. Scheduler and
-expert-manager behaviour (and therefore switch counts) are engine-independent.
+``SimEngine`` — latencies from offline profiles + the unified memory
+hierarchy (``repro.memory``); drives the event-driven simulator at the
+paper's scale (hundreds of experts) on this CPU-only box. Every transfer it
+performs occupies the hierarchy's *shared* SSD/PCIe channels, so concurrent
+loads contend instead of each pretending it owns the link.
+
+``RealEngine`` — actually loads JAX expert params across host/disk tiers and
+runs jitted forwards, measuring wall time. Loads queue on ONE real transfer
+thread (the machine has one storage link), so prefetch genuinely overlaps
+host I/O with device compute and concurrent loads serialize as they would on
+hardware. Scheduler and expert-manager behaviour (and therefore switch
+counts) are engine-independent.
 """
 from __future__ import annotations
 
 import os
+import queue
+import threading
 import time
 from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core.coe import CoEModel, Request
-from repro.core.memory import HostCache, TierSpec
+from repro.memory import MemoryHierarchy, TierSpec
 
 
 class SimEngine:
     """Profiled-latency engine (paper-scale simulation)."""
 
-    def __init__(self, coe: CoEModel, tier: TierSpec,
-                 host_cache: Optional[HostCache] = None):
+    def __init__(self, coe: CoEModel, tier: Optional[TierSpec],
+                 hierarchy: Optional[MemoryHierarchy] = None):
         self.coe = coe
         self.tier = tier
-        self.host_cache = host_cache   # NUMA: evicted experts cached in DRAM
+        # standalone construction (tests, notebooks): derive a hierarchy so
+        # the latency model and channels always exist
+        self.hierarchy = hierarchy if hierarchy is not None \
+            else MemoryHierarchy(coe, tier, pools={})
 
-    # --- latency model ------------------------------------------------- #
+    # --- latency model (uncontended predictions) ------------------------ #
     def load_latency(self, ex, expert_id: str) -> float:
-        spec = self.coe.spec(expert_id)
-        t = self.tier
-        if ex.device in ("host", "cpu"):
-            return t.disk_overhead + spec.mem_bytes / t.disk_bw
-        if t.unified or self.host_cache is None or expert_id not in self.host_cache:
-            # disk -> (host) -> device
-            lat = t.disk_overhead + t.host_overhead + spec.mem_bytes / t.disk_bw
-            if not t.unified:
-                lat += spec.mem_bytes / t.host_to_device_bw
-            return lat
-        return t.host_overhead + spec.mem_bytes / t.host_to_device_bw
+        if ex is not None and ex.device in ("host", "cpu"):
+            return self.hierarchy.predict_host_load(expert_id)
+        return self.hierarchy.predict_device_load(expert_id)
 
     def exec_latency(self, ex, expert_id: str, n: int) -> float:
         prof = ex.profile(self.coe.spec(expert_id).arch)
         return prof.exec_latency(n)
 
     # --- side effects --------------------------------------------------- #
-    def load(self, ex, expert_id: str) -> float:
-        lat = self.load_latency(ex, expert_id)
-        if self.host_cache is not None and ex.device not in ("host", "cpu"):
-            # the transfer passes through (and populates) the DRAM cache
-            self.host_cache.insert(expert_id)
-            self.host_cache.touch(expert_id)
-        return lat
+    def load(self, ex, expert_id: str, now: float = 0.0) -> float:
+        """Begin the transfer on the shared channels; returns the latency the
+        executor observes (queueing wait + service legs)."""
+        if ex is not None and ex.device in ("host", "cpu"):
+            tr = self.hierarchy.begin_host_load(expert_id, now)
+        else:
+            tr = self.hierarchy.begin_device_load(expert_id, now)
+        return tr.latency
 
     def unload(self, ex, expert_id: str) -> None:
-        if self.host_cache is not None and ex.device not in ("host", "cpu"):
-            self.host_cache.insert(expert_id)
+        if ex is not None and ex.device in ("host", "cpu"):
+            return                      # CPU pool lives in DRAM already
+        self.hierarchy.note_evicted(expert_id)
 
     def execute(self, ex, expert_id: str, batch: List[Request]
                 ) -> Tuple[Optional[list], float]:
@@ -106,12 +112,59 @@ class HostStore:
         return params, "disk"
 
 
+class _TransferWorker:
+    """The real backend's single transfer channel: one daemon thread that
+    performs fetch + device_put jobs FIFO. Concurrent loads from different
+    executors serialize here — the real-hardware analogue of the simulator's
+    contended ``TransferChannel``."""
+
+    def __init__(self):
+        self._q: "queue.Queue" = queue.Queue()
+        self._thread: Optional[threading.Thread] = None
+
+    def _ensure_started(self):
+        if self._thread is None or not self._thread.is_alive():
+            self._thread = threading.Thread(target=self._run, daemon=True,
+                                            name="coserve-transfer")
+            self._thread.start()
+
+    def _run(self):
+        while True:
+            fn, done = self._q.get()
+            try:
+                fn()
+            except BaseException as e:  # surfaced by wait()
+                done["error"] = e
+            finally:
+                done["event"].set()
+                self._q.task_done()
+
+    def submit(self, fn) -> dict:
+        self._ensure_started()
+        done = {"event": threading.Event(), "error": None}
+        self._q.put((fn, done))
+        return done
+
+    @staticmethod
+    def wait(handle: dict):
+        handle["event"].wait()
+        if handle["error"] is not None:
+            raise handle["error"]
+
+
 class RealEngine:
     """Runs real JAX experts; latencies are measured wall time.
 
     ``apply_fns[arch]``: jitted fn (params, batch_array) -> outputs. Expert
     payloads supply ``make_batch(requests) -> array`` and
     ``interpret(outputs) -> list`` hooks via the CoE expert payload dict.
+
+    Transfers ride the shared transfer thread: ``load()`` enqueues and
+    returns the *predicted* latency (so scheduling stays deterministic), and
+    the executor's ``finish_load`` blocks until the transfer really
+    completed. ``measured_load_time`` accumulates the wall time the worker
+    actually spent moving timed (post-init) loads; it is surfaced in
+    ``Metrics.memory['real_measured_load_s']``.
     """
 
     def __init__(self, coe: CoEModel, store: HostStore, apply_fns: Dict[str, Any]):
@@ -119,9 +172,14 @@ class RealEngine:
         self.store = store
         self.apply_fns = apply_fns
         self.device_params: Dict[str, Any] = {}
+        self._worker = _TransferWorker()
+        self._pending: Dict[str, dict] = {}
+        self._lock = threading.Lock()
+        self.measured_load_time = 0.0
 
     def load_latency(self, ex, expert_id: str) -> float:
-        # prediction for scheduling: profiled value
+        # prediction for scheduling: profiled value (derived from the
+        # TransferEngine formula at profiling time)
         spec = self.coe.spec(expert_id)
         prof = ex.profile(spec.arch)
         return prof.load_latency_host if expert_id in self.store.host \
@@ -131,21 +189,39 @@ class RealEngine:
         prof = ex.profile(self.coe.spec(expert_id).arch)
         return prof.exec_latency(n)
 
-    def load(self, ex, expert_id: str) -> float:
+    # ------------------------------------------------------------------ #
+    def _transfer(self, expert_id: str, timed: bool = True):
         import jax
         t0 = time.perf_counter()
         host_params, _ = self.store.fetch(expert_id)
         dev = jax.tree.map(lambda a: jax.device_put(np.asarray(a)), host_params)
         jax.block_until_ready(jax.tree.leaves(dev))
-        self.device_params[expert_id] = dev
-        return time.perf_counter() - t0
+        with self._lock:
+            self.device_params[expert_id] = dev
+            if timed:
+                self.measured_load_time += time.perf_counter() - t0
+
+    def load(self, ex, expert_id: str, now: float = 0.0) -> float:
+        handle = self._worker.submit(lambda: self._transfer(expert_id))
+        with self._lock:
+            self._pending[expert_id] = handle
+        return self.load_latency(ex, expert_id)
+
+    def wait_load(self, ex, expert_id: str) -> None:
+        """Block until the queued transfer landed (executor ``finish_load``)."""
+        with self._lock:
+            handle = self._pending.pop(expert_id, None)
+        if handle is not None:
+            _TransferWorker.wait(handle)
 
     def unload(self, ex, expert_id: str) -> None:
-        self.device_params.pop(expert_id, None)
+        self.wait_load(ex, expert_id)    # never drop a half-landed transfer
+        with self._lock:
+            self.device_params.pop(expert_id, None)
 
     def warm_place(self, pool, expert_id: str) -> None:
         """Initial placement (system-init phase): transfer without timing."""
-        self.load(None, expert_id)
+        self._transfer(expert_id, timed=False)
 
     def execute(self, ex, expert_id: str, batch: List[Request]
                 ) -> Tuple[list, float]:

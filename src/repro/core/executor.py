@@ -5,9 +5,11 @@ resources: the execution unit and a load channel. The model pool is *shared*
 between executors on the same memory domain (the paper's 3 GPU executors on
 one 12 GB device): an expert loaded by one executor serves them all. Load of
 the next group's expert overlaps execution of the current batch (the paper's
-condition (b): "loaded during the processing of a preceding request"). Both
-the event-driven simulator and the real-JAX backend drive the same state
-machine, so switch counts are backend-independent.
+condition (b): "loaded during the processing of a preceding request"). The
+transfers themselves ride the memory hierarchy's *shared* SSD/PCIe channels,
+so a load's observed latency includes any queueing behind peers' traffic.
+Both the event-driven simulator and the real-JAX backend drive the same
+state machine, so switch counts are backend-independent.
 """
 from __future__ import annotations
 
@@ -17,9 +19,9 @@ from typing import Any, List, Optional, Set, Tuple
 
 from repro.core.coe import CoEModel, Request
 from repro.core.expert_manager import ExpertManager
-from repro.core.memory import ModelPool
 from repro.core.profiler import ArchProfile, DeviceProfile
 from repro.core.scheduler import Group, max_executable_batch, split_batch
+from repro.memory import DevicePool, MemoryHierarchy
 
 
 @dataclasses.dataclass
@@ -28,15 +30,17 @@ class ExecStats:
     evictions: int = 0
     completed: int = 0
     busy_time: float = 0.0
-    load_time: float = 0.0
+    load_time: float = 0.0       # total transfer occupancy (incl. overlapped)
+    stall_time: float = 0.0      # demand-load time the executor sat idle for
     mgmt_time: float = 0.0       # wall time spent in eviction decisions
 
 
 class Executor:
     def __init__(self, ex_id: str, device: str, coe: CoEModel,
-                 device_profile: DeviceProfile, pool: ModelPool,
+                 device_profile: DeviceProfile, pool: DevicePool,
                  batch_bytes: int, manager: ExpertManager, engine,
-                 prefetch: bool = True, protect_queued: bool = True):
+                 prefetch: bool = True, protect_queued: bool = True,
+                 hierarchy: Optional[MemoryHierarchy] = None):
         self.id = ex_id
         self.device = device                      # "tpu"/"gpu" | "host"/"cpu"
         self.coe = coe
@@ -47,6 +51,7 @@ class Executor:
         self.engine = engine
         self.prefetch = prefetch
         self.protect_queued = protect_queued
+        self.hierarchy = hierarchy                # cross-tier prefetch hook
 
         pool.users = getattr(pool, "users", [])
         pool.users.append(self)
@@ -95,10 +100,12 @@ class Executor:
     # load path (eviction via the dependency-aware manager)
     # ------------------------------------------------------------------ #
     def start_load(self, expert_id: str, now: float,
-                   strict: bool = False) -> Optional[float]:
+                   strict: bool = False, demand: bool = False
+                   ) -> Optional[float]:
         """Begin transferring an expert; returns completion time or None if it
         cannot start (un-evictable residents or busy load channel). ``strict``
-        (prefetch path) refuses to displace experts with queued work."""
+        (prefetch path) refuses to displace experts with queued work;
+        ``demand`` marks a load the executor is idle-waiting on (stall)."""
         if self.load_in_flight is not None or expert_id in self.pool:
             return None
         t0 = _time.perf_counter()
@@ -124,17 +131,23 @@ class Executor:
             self.engine.unload(self, v)
             self.stats.evictions += 1
         self.pool.add(expert_id)
-        lat = self.engine.load(self, expert_id)   # sim: predicted; real: runs
+        # sim: contended channel latency; real: queued on the transfer thread
+        lat = self.engine.load(self, expert_id, now)
         self.pool.loading[expert_id] = now + lat
         self.load_in_flight = (expert_id, now + lat)
         self.stats.switches += 1
         self.stats.load_time += lat
+        if demand:
+            self.stats.stall_time += lat
         return now + lat
 
     def finish_load(self, expert_id: str):
         assert self.load_in_flight and self.load_in_flight[0] == expert_id
         self.load_in_flight = None
         self.pool.loading.pop(expert_id, None)
+        wait = getattr(self.engine, "wait_load", None)
+        if wait is not None:            # real backend: join the transfer thread
+            wait(self, expert_id)
         self.pool.ready.add(expert_id)
 
     # ------------------------------------------------------------------ #
@@ -158,6 +171,10 @@ class Executor:
         self.current = (eid, batch, outputs)
         self.busy_until = now + lat
         self.stats.busy_time += lat
+        if self.hierarchy is not None:
+            # dependency-aware cross-tier prefetch: while this expert runs,
+            # promote its likely downstream experts disk -> host
+            self.hierarchy.on_execute(eid, now)
         return self.busy_until
 
     def finish_batch(self, now: float) -> Tuple[str, List[Request], Any]:

@@ -1,34 +1,34 @@
 """Dependency-aware expert management (paper §4.3).
 
-Two-stage eviction:
-  Stage 1 — evict *dependent* experts whose preliminary (upstream) experts are
-  not resident: they cannot execute until their upstream loads, so they only
-  waste pool memory. Sorted by memory footprint **descending** (fewest
-  evictions that satisfy the requirement).
+The eviction *order* is a pluggable per-tier strategy from
+``repro.memory.policies`` (the same registry the host tier uses); this
+manager owns the device-pool mechanics around it: how much must be freed,
+which experts are protected by queued work, and the two-stage CoServe
+semantics documented on ``DependencyProbPolicy``:
+
+  Stage 1 — evict *dependent* experts whose preliminary (upstream) experts
+  are not resident: they cannot execute until their upstream loads, so they
+  only waste pool memory. Sorted by memory footprint **descending**.
   Stage 2 — if still short, evict by pre-assessed usage probability
   **ascending** (the CoE prior replaces Samba-CoE's LRU history).
-
-Baseline policies (lru / fifo) and the beyond-paper cost-benefit order
-(P(use)·reload_cost/byte) share the same entry point.
 """
 from __future__ import annotations
 
-from typing import Iterable, List, Optional, Set
+from typing import List, Optional, Set
 
 from repro.core.coe import CoEModel
-from repro.core.memory import ModelPool
+from repro.memory.policies import make_policy
+from repro.memory.residency import DevicePool
 
 
 class ExpertManager:
     def __init__(self, coe: CoEModel, policy: str = "dependency_prob"):
-        if policy not in ("dependency_prob", "lru", "fifo", "prob",
-                          "cost_benefit"):
-            raise ValueError(f"unknown eviction policy {policy!r}")
         self.coe = coe
         self.policy = policy
+        self.strategy = make_policy(policy)   # raises on unknown names
 
     # ------------------------------------------------------------------ #
-    def pick_victims(self, pool: ModelPool, incoming_id: str,
+    def pick_victims(self, pool: DevicePool, incoming_id: str,
                      load_cost_fn=None, protected: Optional[Set[str]] = None,
                      strict: bool = False) -> Optional[List[str]]:
         """Experts to evict so ``incoming_id`` fits; None if impossible.
@@ -58,39 +58,13 @@ class ExpertManager:
         return victims
 
     # ------------------------------------------------------------------ #
-    def _eviction_order(self, pool: ModelPool, incoming_id: str,
+    def _eviction_order(self, pool: DevicePool, incoming_id: str,
                         load_cost_fn=None) -> List[str]:
-        cands = [e for e in pool.evictable() if e != incoming_id]
-        if self.policy == "lru":
-            return sorted(cands, key=lambda e: pool.resident[e])
-        if self.policy == "fifo":
-            return sorted(cands, key=lambda e: pool.resident[e])  # insertion-
-            # ordered counters double as FIFO order (no touch() in FIFO mode)
-        if self.policy == "prob":
-            return sorted(cands, key=lambda e: (self.coe.spec(e).usage_prob, e))
-        if self.policy == "cost_benefit":
-            def cb(eid):
-                s = self.coe.spec(eid)
-                reload_cost = load_cost_fn(eid) if load_cost_fn else 1.0
-                return (s.usage_prob * reload_cost / max(1, s.mem_bytes), eid)
-            return sorted(cands, key=cb)
-
-        # --- CoServe two-stage order (paper Fig. 10) ---
-        resident: Set[str] = set(pool.resident) | {incoming_id}
-        stage1, rest = [], []
-        for eid in cands:
-            spec = self.coe.spec(eid)
-            # blocked = a downstream expert none of whose preliminary experts
-            # is resident: it cannot receive work until one of them loads
-            blocked = spec.is_dependent and not any(
-                up in resident for up in spec.depends_on)
-            (stage1 if blocked else rest).append(eid)
-        stage1.sort(key=lambda e: (-self.coe.spec(e).mem_bytes, e))
-        rest.sort(key=lambda e: (self.coe.spec(e).usage_prob, e))
-        return stage1 + rest
+        return self.strategy.order(
+            pool.eviction_view(incoming_id, load_cost_fn))
 
     # ------------------------------------------------------------------ #
-    def ensure_loadable(self, pool: ModelPool, expert_id: str,
+    def ensure_loadable(self, pool: DevicePool, expert_id: str,
                         load_cost_fn=None, protected: Optional[Set[str]] = None,
                         strict: bool = False) -> Optional[List[str]]:
         """Evict (mutating the pool) until expert fits; returns evicted ids or

@@ -1,166 +1,24 @@
-"""Memory tiers and the per-executor model pool (paper §2.2, §3.3, §4.4).
+"""Compatibility shim: the memory model now lives in ``repro.memory``.
 
-Tier layout mirrors the paper's NUMA / UMA devices, renamed for the TPU
-adaptation (DESIGN.md §2): device HBM <- host DRAM <- disk. The *device pool*
-budget is the expert-loading share of device memory; the rest is reserved for
-batch (activation/KV) memory — the split the offline profiler optimises.
+The tier specs, pools and latency math that used to be defined here were
+extracted into the unified tiered-memory subsystem (``repro.memory``:
+topology + shared transfer channels + per-tier residency + cross-tier
+prefetch). This module keeps the seed's import surface working:
+
+  ``ModelPool``  -> ``repro.memory.DevicePool``
+  ``HostCache``  -> ``repro.memory.HostTier``
+  ``load_latency(spec, mem_bytes, in_host_cache)``
+                 -> ``repro.memory.transfer.predicted_load_latency``
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Dict, Iterable, List, Optional, Set
+from repro.memory.residency import DevicePool, HostTier
+from repro.memory.tiers import NUMA, TPU_V5E, UMA, Residency, TierSpec
+from repro.memory.transfer import predicted_load_latency as load_latency
 
-from repro.core.coe import CoEModel
+# seed names
+ModelPool = DevicePool
+HostCache = HostTier
 
-
-@dataclasses.dataclass(frozen=True)
-class TierSpec:
-    """Bandwidths in bytes/sec; fixed per-load overhead in seconds."""
-    name: str
-    disk_bw: float = 530e6           # paper NUMA: MICRON SSD 530 MB/s
-    host_to_device_bw: float = 12e9  # PCIe-class host->HBM
-    host_overhead: float = 0.010     # framework/layout overhead per load
-    disk_overhead: float = 0.005
-    unified: bool = False            # UMA: no separate host cache tier
-    host_cache_bytes: int = 16 << 30
-    device_bytes: int = 12 << 30
-
-
-NUMA = TierSpec(name="numa", disk_bw=530e6, host_to_device_bw=12e9,
-                unified=False, host_cache_bytes=16 << 30, device_bytes=12 << 30)
-UMA = TierSpec(name="uma", disk_bw=3000e6, host_to_device_bw=40e9,
-               host_overhead=0.030,  # paper: >60% of latency even on UMA
-               unified=True, host_cache_bytes=0, device_bytes=24 << 30)
-TPU_V5E = TierSpec(name="tpu_v5e", disk_bw=2000e6, host_to_device_bw=16e9,
-                   unified=False, host_cache_bytes=128 << 30,
-                   device_bytes=16 << 30)
-
-
-class HostCache:
-    """Host-DRAM expert cache shared by a device's executors (NUMA path).
-
-    Eviction is usage-probability-ordered for CoServe and LRU for the
-    Samba-CoE baselines (policy injected by the owner).
-    """
-
-    def __init__(self, capacity_bytes: int, coe: CoEModel, policy: str = "prob"):
-        self.capacity = capacity_bytes
-        self.coe = coe
-        self.policy = policy
-        self.resident: Dict[str, int] = {}   # expert -> last-use counter
-        self.used_bytes = 0
-        self._clock = 0
-
-    def __contains__(self, expert_id: str) -> bool:
-        return expert_id in self.resident
-
-    def touch(self, expert_id: str):
-        self._clock += 1
-        if expert_id in self.resident:
-            self.resident[expert_id] = self._clock
-
-    def insert(self, expert_id: str) -> List[str]:
-        """Insert (evicting if needed); returns evicted ids."""
-        if self.capacity <= 0:
-            return []
-        size = self.coe.spec(expert_id).mem_bytes
-        evicted = []
-        while self.used_bytes + size > self.capacity and self.resident:
-            victim = self._pick_victim()
-            if victim is None:
-                break
-            evicted.append(victim)
-            self.used_bytes -= self.coe.spec(victim).mem_bytes
-            del self.resident[victim]
-        if self.used_bytes + size <= self.capacity:
-            self._clock += 1
-            self.resident[expert_id] = self._clock
-            self.used_bytes += size
-        return evicted
-
-    def _pick_victim(self) -> Optional[str]:
-        if not self.resident:
-            return None
-        if self.policy == "lru":
-            return min(self.resident, key=lambda e: self.resident[e])
-        if self.policy == "fifo":
-            return next(iter(self.resident))
-        # probability-ordered (CoServe): evict lowest P(use)
-        return min(self.resident,
-                   key=lambda e: (self.coe.spec(e).usage_prob, e))
-
-
-class ModelPool:
-    """Device-memory expert pool (paper §4.1 'model pool').
-
-    One pool per physical memory domain: executors on the same device (the
-    paper's 3 GPU executors on one RTX3080Ti) *share* the pool — an expert
-    loaded by one executor serves requests from all of them. Pinning is
-    therefore counted (several executors may execute the same expert).
-    """
-
-    def __init__(self, capacity_bytes: int, coe: CoEModel, group: str = ""):
-        self.capacity = capacity_bytes
-        self.coe = coe
-        self.group = group
-        self.resident: Dict[str, int] = {}    # expert -> insertion/use counter
-        self.pinned: Dict[str, int] = {}      # expert -> pin count
-        self.ready: Set[str] = set()          # transfer complete
-        self.loading: Dict[str, float] = {}   # expert -> expected done time
-        self.used_bytes = 0
-        self._clock = 0
-
-    def __contains__(self, expert_id: str) -> bool:
-        return expert_id in self.resident
-
-    def resident_ids(self) -> List[str]:
-        return list(self.resident)
-
-    def free_bytes(self) -> int:
-        return self.capacity - self.used_bytes
-
-    def fits(self, expert_id: str) -> bool:
-        return self.coe.spec(expert_id).mem_bytes <= self.capacity
-
-    def touch(self, expert_id: str):
-        self._clock += 1
-        if expert_id in self.resident:
-            self.resident[expert_id] = self._clock
-
-    def pin(self, expert_id: str):
-        self.pinned[expert_id] = self.pinned.get(expert_id, 0) + 1
-
-    def unpin(self, expert_id: str):
-        n = self.pinned.get(expert_id, 0) - 1
-        if n <= 0:
-            self.pinned.pop(expert_id, None)
-        else:
-            self.pinned[expert_id] = n
-
-    def add(self, expert_id: str):
-        size = self.coe.spec(expert_id).mem_bytes
-        if size > self.free_bytes():
-            raise MemoryError(
-                f"pool overflow inserting {expert_id}: {size} > {self.free_bytes()}")
-        self._clock += 1
-        self.resident[expert_id] = self._clock
-        self.used_bytes += size
-
-    def remove(self, expert_id: str):
-        if expert_id in self.pinned:
-            raise RuntimeError(f"evicting pinned expert {expert_id}")
-        self.used_bytes -= self.coe.spec(expert_id).mem_bytes
-        self.ready.discard(expert_id)
-        del self.resident[expert_id]
-
-    def evictable(self) -> List[str]:
-        return [e for e in self.resident
-                if e not in self.pinned and e not in self.loading]
-
-
-def load_latency(spec: TierSpec, mem_bytes: int, in_host_cache: bool) -> float:
-    """Expert switch cost from its current tier into device memory."""
-    if spec.unified or not in_host_cache:
-        return spec.disk_overhead + spec.host_overhead + mem_bytes / spec.disk_bw \
-            + (0.0 if spec.unified else mem_bytes / spec.host_to_device_bw)
-    return spec.host_overhead + mem_bytes / spec.host_to_device_bw
+__all__ = ["ModelPool", "HostCache", "DevicePool", "HostTier", "TierSpec",
+           "NUMA", "UMA", "TPU_V5E", "Residency", "load_latency"]

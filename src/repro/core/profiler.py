@@ -17,7 +17,8 @@ from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.coe import CoEModel
-from repro.core.memory import TierSpec, load_latency
+from repro.memory import TierSpec
+from repro.memory.transfer import predicted_load_latency
 
 
 @dataclasses.dataclass
@@ -97,8 +98,11 @@ def microbenchmark_arch(
     return ArchProfile(
         arch=arch, k=k, b=b, max_batch=max_batch, mem_bytes=mem_bytes,
         act_bytes_per_item=act_bytes_per_item,
-        load_latency_host=load_latency(tier, mem_bytes, in_host_cache=True),
-        load_latency_disk=load_latency(tier, mem_bytes, in_host_cache=False),
+        # per-tier switch costs come from the one TransferEngine formula
+        load_latency_host=predicted_load_latency(tier, mem_bytes,
+                                                 in_host_cache=True),
+        load_latency_disk=predicted_load_latency(tier, mem_bytes,
+                                                 in_host_cache=False),
     )
 
 

@@ -21,9 +21,9 @@ from repro.core.coe import CoEModel, Request
 from repro.core.engines import SimEngine
 from repro.core.executor import Executor
 from repro.core.expert_manager import ExpertManager
-from repro.core.memory import HostCache, ModelPool, TierSpec
 from repro.core.profiler import DeviceProfile
 from repro.core.scheduler import RequestScheduler, SchedulerPolicy
+from repro.memory import MemoryHierarchy, PrefetchConfig, TierSpec
 
 
 @dataclasses.dataclass(frozen=True)
@@ -32,7 +32,8 @@ class SystemPolicy:
     assign: str = "makespan"          # makespan | round_robin | single
     arrange: bool = True
     evict: str = "dependency_prob"    # dependency_prob | lru | fifo | prob | cost_benefit
-    prefetch: bool = True             # overlap loads with execution
+    prefetch: bool = True             # overlap device loads with execution
+    host_prefetch: bool = True        # dependency-aware disk->host promotion
     protect_queued: bool = True       # demand loads evict queue-referenced
     #                                   experts only as a last resort
     host_cache_policy: str = "prob"
@@ -49,14 +50,16 @@ COSERVE_EM = SystemPolicy(name="coserve_em", assign="round_robin",
 COSERVE_EM_RA = SystemPolicy(name="coserve_em_ra", assign="round_robin",
                              arrange=True, evict="dependency_prob", prefetch=True)
 SAMBA = SystemPolicy(name="samba_coe", assign="single", arrange=False,
-                     evict="lru", prefetch=False, protect_queued=False,
-                     host_cache_policy="lru")
+                     evict="lru", prefetch=False, host_prefetch=False,
+                     protect_queued=False, host_cache_policy="lru")
 SAMBA_FIFO = SystemPolicy(name="samba_coe_fifo", assign="single",
                           arrange=False, evict="fifo", prefetch=False,
-                          protect_queued=False, host_cache_policy="lru")
+                          host_prefetch=False, protect_queued=False,
+                          host_cache_policy="lru")
 SAMBA_PARALLEL = SystemPolicy(name="samba_coe_parallel", assign="round_robin",
                               arrange=False, evict="lru", prefetch=False,
-                              protect_queued=False, host_cache_policy="lru")
+                              host_prefetch=False, protect_queued=False,
+                              host_cache_policy="lru")
 
 
 def nearest_rank(sorted_xs: Sequence[float], q: float) -> float:
@@ -85,10 +88,13 @@ class Metrics:
     p50_latency: float = 0.0
     p95_latency: float = 0.0
     p99_latency: float = 0.0
+    stall_time: float = 0.0           # demand-load time executors idled on
     sched_time: float = 0.0           # wall time in scheduling (overhead, Fig.19)
     mgmt_time: float = 0.0            # wall time in expert management
     per_executor: Dict[str, Any] = dataclasses.field(default_factory=dict)
     per_tenant: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    memory: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    #                                 # hierarchy snapshot (channels, prefetch)
 
 
 @dataclasses.dataclass
@@ -111,23 +117,26 @@ class CoServeSystem:
         self.coe = coe
         self.policy = policy
         self.tier = tier
-        self.host_cache = None
-        if tier is not None and not tier.unified and tier.host_cache_bytes > 0:
-            self.host_cache = HostCache(tier.host_cache_bytes, coe,
-                                        policy=policy.host_cache_policy)
-        self.engine = engine or SimEngine(coe, tier, self.host_cache)
+        # the unified tiered-memory subsystem owns host tier, device pools,
+        # shared transfer channels and the cross-tier prefetcher
+        self.hierarchy = MemoryHierarchy(
+            coe, tier, pools, host_policy=policy.host_cache_policy,
+            prefetch=PrefetchConfig(enabled=policy.host_prefetch))
+        self.host_cache = self.hierarchy.host          # seed-compat alias
+        self.pools = self.hierarchy.pools
+        self.engine = engine or SimEngine(coe, tier, hierarchy=self.hierarchy)
         self.manager = ExpertManager(coe, policy=policy.evict)
-        self.pools: Dict[str, ModelPool] = {
-            g: ModelPool(b, coe, group=g) for g, b in pools.items()}
         self.executors: List[Executor] = []
         for i, spec in enumerate(executor_specs):
             group = spec.pool_group or spec.device
+            self.hierarchy.register_batch_bytes(group, spec.batch_bytes)
             self.executors.append(Executor(
                 ex_id=f"{spec.device}{i}", device=spec.device, coe=coe,
                 device_profile=spec.profile, pool=self.pools[group],
                 batch_bytes=spec.batch_bytes, manager=self.manager,
                 engine=self.engine, prefetch=policy.prefetch,
-                protect_queued=policy.protect_queued))
+                protect_queued=policy.protect_queued,
+                hierarchy=self.hierarchy))
         self.scheduler = RequestScheduler(
             self.executors,
             SchedulerPolicy(assign=policy.assign, arrange=policy.arrange,
@@ -221,7 +230,8 @@ class CoServeSystem:
             pool=self.pools[group], batch_bytes=spec.batch_bytes,
             manager=self.manager, engine=self.engine,
             prefetch=self.policy.prefetch,
-            protect_queued=self.policy.protect_queued)
+            protect_queued=self.policy.protect_queued,
+            hierarchy=self.hierarchy)
         self.executors.append(ex)
         self.scheduler.executors = self.live_executors()
         return ex
@@ -286,8 +296,13 @@ class CoServeSystem:
                 "avg_latency": sum(ls) / len(ls),
                 **latency_percentiles(ls)}
             for t, ls in by_tenant.items()}
+        m.stall_time = sum(e.stats.stall_time for e in self.executors)
         m.sched_time = self.sched_time
         m.mgmt_time = sum(e.stats.mgmt_time for e in self.executors)
         m.per_executor = {
             e.id: dataclasses.asdict(e.stats) for e in self.executors}
+        m.memory = self.hierarchy.snapshot()
+        measured = getattr(self.engine, "measured_load_time", None)
+        if measured is not None:      # real backend: worker wall time
+            m.memory["real_measured_load_s"] = round(measured, 4)
         return m

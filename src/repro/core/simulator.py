@@ -177,14 +177,18 @@ class Simulation:
             elif ex.queue and ex.load_in_flight is None:
                 head = ex.queue[0].expert_id
                 if head not in ex.pool:
-                    t_done = ex.start_load(head, now)
+                    # demand load: the executor is idle until it lands
+                    t_done = ex.start_load(head, now, demand=True)
                     if t_done is not None:
                         self.push(t_done, LOAD_DONE, (ex, head))
         # overlap: prefetch the next missing expert while executing — strict
-        # mode never displaces experts that still have queued groups
+        # mode never displaces experts that still have queued groups, and a
+        # long shared-channel backlog defers the speculation so it cannot
+        # queue ahead of peers' imminent demand loads (retried on next kick)
         if ex.prefetch and ex.current is not None and ex.load_in_flight is None:
             cand = ex.prefetch_candidate()
-            if cand is not None:
+            if cand is not None and (ex.hierarchy is None
+                                     or ex.hierarchy.speculation_ok(cand, now)):
                 t_done = ex.start_load(cand, now, strict=True)
                 if t_done is not None:
                     self.push(t_done, LOAD_DONE, (ex, cand))

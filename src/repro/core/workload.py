@@ -17,9 +17,10 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.coe import CoEModel, ExpertSpec, Request, RoutingModule
-from repro.core.memory import NUMA, UMA, TierSpec, load_latency
 from repro.core.profiler import ArchProfile, DeviceProfile
 from repro.core.serving import ExecutorSpec
+from repro.memory import NUMA, UMA, TierSpec
+from repro.memory.transfer import predicted_load_latency as load_latency
 
 MB = 1 << 20
 

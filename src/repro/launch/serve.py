@@ -47,6 +47,27 @@ POLICIES: Dict[str, SystemPolicy] = {
 }
 
 
+def _policy_from_args(args) -> SystemPolicy:
+    """Base policy + the ``--prefetch`` override.
+
+    ``off``  — no load/execute overlap, no cross-tier promotion;
+    ``device`` — device-pool overlap only (the seed's behaviour);
+    ``all``  — device overlap + dependency-aware disk->host prefetch;
+    default  — whatever the named policy declares.
+    """
+    policy = POLICIES[args.policy]
+    mode = getattr(args, "prefetch", None)
+    if mode == "off":
+        policy = dataclasses.replace(policy, prefetch=False,
+                                     host_prefetch=False)
+    elif mode == "device":
+        policy = dataclasses.replace(policy, host_prefetch=False)
+    elif mode == "all":
+        policy = dataclasses.replace(policy, prefetch=True,
+                                     host_prefetch=True)
+    return policy
+
+
 # --------------------------------------------------------------------------- #
 # sim mode — the paper's full-scale workload
 # --------------------------------------------------------------------------- #
@@ -55,12 +76,12 @@ def run_sim(args) -> dict:
     board = BOARD_A if args.board == "A" else BOARD_B
     tier = NUMA if args.tier == "numa" else UMA
     coe = build_board_coe(board)
+    policy = _policy_from_args(args)
     n_gpu, n_cpu = args.executors
-    if POLICIES[args.policy].assign == "single":
+    if policy.assign == "single":
         n_gpu, n_cpu = 1, 0
     pools, specs = make_executor_specs(tier, n_gpu, n_cpu)
-    system = CoServeSystem(coe, specs, pools, policy=POLICIES[args.policy],
-                           tier=tier)
+    system = CoServeSystem(coe, specs, pools, policy=policy, tier=tier)
     sim = Simulation(system)
     sim.submit(make_task_requests(board, args.requests))
     m = sim.run()
@@ -68,7 +89,9 @@ def run_sim(args) -> dict:
             "policy": args.policy, "completed": m.completed,
             "throughput": round(m.throughput, 2), "switches": m.switches,
             "makespan_s": round(m.makespan, 2),
-            "avg_latency_s": round(m.avg_latency, 4)}
+            "avg_latency_s": round(m.avg_latency, 4),
+            "stall_s": round(m.stall_time, 3),
+            "host_prefetch": m.memory.get("prefetch", {})}
 
 
 # --------------------------------------------------------------------------- #
@@ -190,7 +213,7 @@ def build_real_system(n_components: int = 24, n_detection: int = 4,
 
 
 def run_real_mode(args) -> dict:
-    system, coe = build_real_system(policy=POLICIES[args.policy])
+    system, coe = build_real_system(policy=_policy_from_args(args))
     rng = np.random.RandomState(1)
     n_components = sum(1 for e in coe.experts if e.startswith("cls"))
     needs_det, det_assign = _real_board_layout(
@@ -293,13 +316,13 @@ def run_online(args) -> dict:
     tier = NUMA if args.tier == "numa" else UMA
     coe = build_multi_board_coe([t.board for t in tenants],
                                 weights=[t.rate for t in tenants])
+    policy = _policy_from_args(args)
     n_gpu, n_cpu = args.executors
-    single = POLICIES[args.policy].assign == "single"
+    single = policy.assign == "single"
     if single:   # same fleet normalization as run_sim
         n_gpu, n_cpu = 1, 0
     pools, specs = make_executor_specs(tier, n_gpu, n_cpu)
-    system = CoServeSystem(coe, specs, pools, policy=POLICIES[args.policy],
-                           tier=tier)
+    system = CoServeSystem(coe, specs, pools, policy=policy, tier=tier)
 
     admission = _admission_from_args(
         args, mean_rate=sum(t.rate for t in tenants) / len(tenants))
@@ -341,7 +364,7 @@ def run_online_real(args) -> dict:
     # the real engine's source always draws uniformly at random — "random"
     # is served as asked; the default "scan" has no board-scan analogue on
     # the tiny local CoE and also gets the uniform stream
-    system, coe = build_real_system(policy=POLICIES[args.policy])
+    system, coe = build_real_system(policy=_policy_from_args(args))
     n_components = sum(1 for e in coe.experts if e.startswith("cls"))
     n_detection = sum(1 for e in coe.experts if e.startswith("det"))
     needs_det, det_assign = _real_board_layout(n_components, n_detection)
@@ -396,6 +419,11 @@ def main(argv=None):
     ap.add_argument("--board", default="A", choices=["A", "B"])
     ap.add_argument("--tier", default="numa", choices=["numa", "uma"])
     ap.add_argument("--policy", default="coserve", choices=list(POLICIES))
+    ap.add_argument("--prefetch", default=None,
+                    choices=["off", "device", "all"],
+                    help="override the policy's prefetch behaviour: off | "
+                         "device (pool overlap only) | all (+ disk->host "
+                         "promotion); default: the policy's own setting")
     ap.add_argument("--requests", type=int, default=2500)
     ap.add_argument("--executors", type=lambda s: tuple(map(int, s.split(","))),
                     default=(3, 1), help="n_gpu,n_cpu")

@@ -1,0 +1,170 @@
+"""MemoryHierarchy: one object that owns disk -> host -> device residency.
+
+The seed scattered the hierarchy across four half-coordinated structures
+(``HostCache``, ``ModelPool``, ``HostStore``, ``RealEngine.device_params``)
+with the load-latency math duplicated in three more places. This facade is
+the single owner: tier topology + shared transfer channels + host tier +
+device pools + the cross-tier prefetcher, with per-expert residency exposed
+as one explicit state machine (``tiers.Residency``).
+
+Engines price and perform transfers through it; the scheduler predicts with
+it; the profiler derives per-arch switch costs from it; the autoscaler reads
+its device-budget accounting.
+"""
+from __future__ import annotations
+
+from typing import TYPE_CHECKING, Dict, Mapping, Optional
+
+from repro.memory.channels import Transfer
+from repro.memory.prefetch import CrossTierPrefetcher, PrefetchConfig
+from repro.memory.residency import DevicePool, HostTier
+from repro.memory.tiers import Residency, TierSpec, TierTopology
+from repro.memory.transfer import TransferEngine
+
+if TYPE_CHECKING:  # pragma: no cover — repro.core imports this package
+    from repro.core.coe import CoEModel
+
+
+class MemoryHierarchy:
+    def __init__(self, coe: "CoEModel", tier: Optional[TierSpec],
+                 pools: Mapping[str, int],
+                 host_policy: str = "prob",
+                 prefetch: Optional[PrefetchConfig] = None):
+        self.coe = coe
+        self.spec = tier if tier is not None else TierSpec(name="default")
+        self.topology = TierTopology.from_spec(self.spec)
+        self.transfer = TransferEngine(self.topology)
+        # UMA collapses the middle tier; tier=None (engine-supplied latency
+        # models) keeps the seed's no-host-cache behaviour
+        self.host: Optional[HostTier] = None
+        if tier is not None and not self.spec.unified \
+                and self.spec.host_cache_bytes > 0:
+            self.host = HostTier(self.spec.host_cache_bytes, coe,
+                                 policy=host_policy)
+        self.pools: Dict[str, DevicePool] = {
+            g: DevicePool(b, coe, group=g) for g, b in pools.items()}
+        self.prefetcher = CrossTierPrefetcher(
+            coe, self, prefetch or PrefetchConfig(enabled=False))
+        # construction-time activation budget per pool group — the fixed
+        # quantity the autoscaler re-divides instead of minting memory
+        self.batch_budgets: Dict[str, int] = {}
+
+    # ------------------------------------------------------------------ #
+    # residency state machine
+    # ------------------------------------------------------------------ #
+    def residency(self, expert_id: str) -> Residency:
+        """The expert's strongest state across the whole hierarchy."""
+        best: Optional[Residency] = None
+        rank = {Residency.HOST: 1, Residency.LOADING: 2,
+                Residency.DEVICE: 3, Residency.PINNED: 4}
+        for pool in self.pools.values():
+            st = pool.residency(expert_id)
+            if st is not None and (best is None or rank[st] > rank[best]):
+                best = st
+        if best is not None:
+            return best
+        if self.host is not None and expert_id in self.host:
+            return Residency.HOST
+        return Residency.DISK
+
+    def on_any_device(self, expert_id: str) -> bool:
+        return any(expert_id in p for p in self.pools.values())
+
+    def in_host(self, expert_id: str) -> bool:
+        return self.host is not None and expert_id in self.host
+
+    # ------------------------------------------------------------------ #
+    # latency prediction (uncontended — scheduling decisions)
+    # ------------------------------------------------------------------ #
+    def predict_device_load(self, expert_id: str) -> float:
+        mem = self.coe.spec(expert_id).mem_bytes
+        return self.transfer.predict(mem, in_host_cache=self.in_host(expert_id))
+
+    def predict_host_load(self, expert_id: str) -> float:
+        return self.transfer.predict_host(self.coe.spec(expert_id).mem_bytes)
+
+    # ------------------------------------------------------------------ #
+    # contended transfers (the simulator's actual loads)
+    # ------------------------------------------------------------------ #
+    def begin_device_load(self, expert_id: str, now: float) -> Transfer:
+        """Move an expert into device memory over the shared links,
+        populating the host tier on the way through (NUMA)."""
+        mem = self.coe.spec(expert_id).mem_bytes
+        in_host = self.in_host(expert_id)
+        ready_at = self.host.ready_time(expert_id) if in_host else 0.0
+        tr = self.transfer.begin_device_load(now, mem, in_host_cache=in_host,
+                                             host_ready_at=ready_at)
+        self.prefetcher.note_device_load(expert_id, served_from_host=in_host)
+        if self.host is not None:
+            if in_host:
+                self.host.touch(expert_id)
+            else:
+                # the disk leg lands the expert in DRAM before the PCIe leg;
+                # until then the host copy is in flight, not a settled hit
+                self.prefetcher.note_host_evictions(
+                    self.host.insert(expert_id, ready_at=tr.host_landed))
+        return tr
+
+    def begin_host_load(self, expert_id: str, now: float) -> Transfer:
+        """Disk -> host DRAM demand load (CPU executors run from DRAM)."""
+        tr = self.transfer.begin_host_load(
+            now, self.coe.spec(expert_id).mem_bytes)
+        if self.host is not None:
+            self.prefetcher.note_host_evictions(
+                self.host.insert(expert_id, ready_at=tr.done))
+        return tr
+
+    def load_backlog(self, expert_id: str, now: float) -> float:
+        """Queueing delay a device load issued now would face on its first
+        link (SSD for disk-sourced loads, PCIe for host hits)."""
+        if self.in_host(expert_id) and not self.spec.unified:
+            ch = self.topology.pcie_channel
+        else:
+            ch = self.topology.disk_channel
+        return max(0.0, ch.busy_until - now)
+
+    def speculation_ok(self, expert_id: str, now: float) -> bool:
+        """Whether an overlap-prefetch load (queued work issued early) may
+        start now: the link's queue must be short enough that demand traffic
+        issued a moment later is not pushed far back — shared FIFO channels
+        have no priority classes, so issue order is priority. Disk->host
+        promotion (pure speculation) uses the stricter ``max_backlog_s``."""
+        return self.load_backlog(expert_id, now) \
+            <= self.prefetcher.config.overlap_backlog_s
+
+    # ------------------------------------------------------------------ #
+    # hierarchy events
+    # ------------------------------------------------------------------ #
+    def on_execute(self, expert_id: str, now: float):
+        """An expert started executing: chance to prefetch its followers."""
+        self.prefetcher.on_execute(expert_id, now)
+
+    def note_evicted(self, expert_id: str):
+        """A device-pool eviction demotes the expert to host DRAM (NUMA) —
+        it is already in DRAM, so this costs no transfer."""
+        if self.host is not None:
+            self.prefetcher.note_host_evictions(self.host.insert(expert_id))
+
+    # ------------------------------------------------------------------ #
+    def register_batch_bytes(self, group: str, batch_bytes: int):
+        self.batch_budgets[group] = \
+            self.batch_budgets.get(group, 0) + batch_bytes
+
+    def batch_budget(self, group: str) -> int:
+        return self.batch_budgets.get(group, 0)
+
+    def residency_counts(self) -> Dict[str, int]:
+        counts = {st.value: 0 for st in Residency}
+        for eid in self.coe.experts:
+            counts[self.residency(eid).value] += 1
+        return counts
+
+    def snapshot(self) -> dict:
+        out = {"tier": self.spec.name,
+               "channels": self.transfer.snapshot(),
+               "prefetch": self.prefetcher.snapshot(),
+               "residency": self.residency_counts(),
+               "pools": {g: p.snapshot() for g, p in self.pools.items()}}
+        if self.host is not None:
+            out["host"] = self.host.snapshot()
+        return out

@@ -1,0 +1,121 @@
+"""Pluggable eviction policies, shared by every tier of the hierarchy.
+
+The seed hard-coded eviction orders twice: once in ``ExpertManager`` (device
+pool) and once in ``HostCache._pick_victim`` (host tier), with subtly
+different semantics. A policy is now one object implementing ``order``:
+given the evictable candidates and a view of the tier, return them
+best-victim-first. The device-pool manager and the host tier both consume
+the same registry, so ``--policy``-style knobs mean the same thing on every
+tier.
+
+Policies (paper §4.3 + baselines + beyond-paper):
+
+  dependency_prob  CoServe two-stage order: first *blocked* dependent
+                   experts (no preliminary expert resident), by footprint
+                   descending; then by pre-assessed P(use) ascending.
+  prob             P(use) ascending (CoServe's stage 2 alone).
+  lru              least-recently-used first (Samba-CoE history baseline).
+  fifo             oldest *insertion* first — insertion order is tracked
+                   separately from use order, so ``touch()`` (which the
+                   executor calls on every batch) cannot perturb it. The
+                   seed conflated the two counters, silently turning FIFO
+                   into LRU under load.
+  cost_benefit     P(use) * reload_cost / byte ascending (beyond-paper).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import (TYPE_CHECKING, Callable, Dict, List, Mapping, Optional,
+                    Set)
+
+if TYPE_CHECKING:  # pragma: no cover — repro.core imports this package
+    from repro.core.coe import CoEModel
+
+POLICY_NAMES = ("dependency_prob", "lru", "fifo", "prob", "cost_benefit")
+
+
+@dataclasses.dataclass
+class EvictionView:
+    """What a policy may look at when ranking victims on one tier."""
+    coe: "CoEModel"
+    candidates: List[str]                  # evictable experts on this tier
+    use_order: Mapping[str, int]           # expert -> last-use counter
+    insert_order: Mapping[str, int]        # expert -> insertion counter
+    resident: Set[str]                     # everything resident on this tier
+    incoming_id: Optional[str] = None      # expert the eviction makes room for
+    load_cost_fn: Optional[Callable[[str], float]] = None
+
+
+class EvictionPolicy:
+    """Ranks eviction candidates, best victim first."""
+    name = "base"
+
+    def order(self, view: EvictionView) -> List[str]:
+        raise NotImplementedError
+
+
+class LRUPolicy(EvictionPolicy):
+    name = "lru"
+
+    def order(self, view: EvictionView) -> List[str]:
+        return sorted(view.candidates, key=lambda e: view.use_order[e])
+
+
+class FIFOPolicy(EvictionPolicy):
+    name = "fifo"
+
+    def order(self, view: EvictionView) -> List[str]:
+        return sorted(view.candidates, key=lambda e: view.insert_order[e])
+
+
+class ProbPolicy(EvictionPolicy):
+    name = "prob"
+
+    def order(self, view: EvictionView) -> List[str]:
+        return sorted(view.candidates,
+                      key=lambda e: (view.coe.spec(e).usage_prob, e))
+
+
+class CostBenefitPolicy(EvictionPolicy):
+    name = "cost_benefit"
+
+    def order(self, view: EvictionView) -> List[str]:
+        def cb(eid: str):
+            s = view.coe.spec(eid)
+            reload_cost = view.load_cost_fn(eid) if view.load_cost_fn else 1.0
+            return (s.usage_prob * reload_cost / max(1, s.mem_bytes), eid)
+        return sorted(view.candidates, key=cb)
+
+
+class DependencyProbPolicy(EvictionPolicy):
+    """CoServe two-stage order (paper Fig. 10)."""
+    name = "dependency_prob"
+
+    def order(self, view: EvictionView) -> List[str]:
+        resident = set(view.resident)
+        if view.incoming_id is not None:
+            resident.add(view.incoming_id)
+        stage1, rest = [], []
+        for eid in view.candidates:
+            spec = view.coe.spec(eid)
+            # blocked = a downstream expert none of whose preliminary experts
+            # is resident: it cannot receive work until one of them loads
+            blocked = spec.is_dependent and not any(
+                up in resident for up in spec.depends_on)
+            (stage1 if blocked else rest).append(eid)
+        stage1.sort(key=lambda e: (-view.coe.spec(e).mem_bytes, e))
+        rest.sort(key=lambda e: (view.coe.spec(e).usage_prob, e))
+        return stage1 + rest
+
+
+_REGISTRY: Dict[str, type] = {p.name: p for p in (
+    LRUPolicy, FIFOPolicy, ProbPolicy, CostBenefitPolicy,
+    DependencyProbPolicy)}
+
+
+def make_policy(name: str) -> EvictionPolicy:
+    try:
+        return _REGISTRY[name]()
+    except KeyError:
+        raise ValueError(f"unknown eviction policy {name!r} "
+                         f"(choose from {sorted(_REGISTRY)})") from None

@@ -1,0 +1,87 @@
+"""Tier topology: the storage hierarchy as a first-class object (paper §2.2).
+
+A CoE catalog does not fit in device memory, so every expert lives somewhere
+on a disk -> host DRAM -> device chain and serving is dominated by the
+traffic between those tiers. ``TierSpec`` carries the per-device numbers
+(bandwidths, fixed overheads, capacities); ``TierTopology`` instantiates the
+shared transfer links between the tiers (one SSD link, one PCIe-class link)
+so that *every* consumer — simulator, real engine, scheduler predictions,
+profiler — sees the same hierarchy instead of re-deriving pieces of it.
+
+UMA devices (the paper's Apple-M2-class board) collapse the middle tier:
+there is no separate host cache and loads go disk -> unified memory over the
+single storage link.
+
+``Residency`` is the per-expert state machine the hierarchy tracks:
+
+    DISK ──promote──> HOST ──load──> LOADING ──done──> DEVICE <──pin──> PINNED
+      ^                 ^                                  │
+      └── (never demoted past host) <──────evict───────────┘
+
+On UMA the HOST state is skipped entirely.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+
+from repro.memory.channels import TransferChannel
+
+
+@dataclasses.dataclass(frozen=True)
+class TierSpec:
+    """Bandwidths in bytes/sec; fixed per-load overhead in seconds."""
+    name: str
+    disk_bw: float = 530e6           # paper NUMA: MICRON SSD 530 MB/s
+    host_to_device_bw: float = 12e9  # PCIe-class host->HBM
+    host_overhead: float = 0.010     # framework/layout overhead per load
+    disk_overhead: float = 0.005
+    unified: bool = False            # UMA: no separate host cache tier
+    host_cache_bytes: int = 16 << 30
+    device_bytes: int = 12 << 30
+
+
+NUMA = TierSpec(name="numa", disk_bw=530e6, host_to_device_bw=12e9,
+                unified=False, host_cache_bytes=16 << 30, device_bytes=12 << 30)
+UMA = TierSpec(name="uma", disk_bw=3000e6, host_to_device_bw=40e9,
+               host_overhead=0.030,  # paper: >60% of latency even on UMA
+               unified=True, host_cache_bytes=0, device_bytes=24 << 30)
+TPU_V5E = TierSpec(name="tpu_v5e", disk_bw=2000e6, host_to_device_bw=16e9,
+                   unified=False, host_cache_bytes=128 << 30,
+                   device_bytes=16 << 30)
+
+
+class Residency(enum.Enum):
+    """Where one expert currently lives in the hierarchy."""
+    DISK = "disk"          # only on persistent storage
+    HOST = "host"          # promoted into host DRAM (or promotion in flight)
+    LOADING = "loading"    # transfer into a device pool in flight
+    DEVICE = "device"      # resident and ready in a device pool
+    PINNED = "pinned"      # resident and currently executing (un-evictable)
+
+
+@dataclasses.dataclass
+class TierTopology:
+    """The shared links of one physical storage hierarchy.
+
+    ``disk_channel`` is the SSD link (disk -> host on NUMA, disk -> unified
+    memory on UMA); ``pcie_channel`` is the host -> device link (unused on
+    UMA). All executors of one system share these two channels — concurrent
+    transfers queue instead of each pretending it has the link to itself.
+    """
+    spec: TierSpec
+    disk_channel: TransferChannel
+    pcie_channel: TransferChannel
+
+    @classmethod
+    def from_spec(cls, spec: TierSpec) -> "TierTopology":
+        return cls(
+            spec=spec,
+            disk_channel=TransferChannel(f"{spec.name}/ssd", spec.disk_bw),
+            pcie_channel=TransferChannel(f"{spec.name}/pcie",
+                                         spec.host_to_device_bw),
+        )
+
+    @property
+    def unified(self) -> bool:
+        return self.spec.unified

@@ -1,0 +1,98 @@
+"""TransferEngine: the single source of truth for expert-switch cost.
+
+The seed computed load latency in three places (``core.memory.load_latency``,
+``SimEngine.load_latency``, and the profiled values the real engine predicts
+with) that could silently drift apart. Every path now goes through here:
+
+  ``predicted_load_latency``   the closed-form uncontended cost — what the
+                               scheduler, work stealing, pending-time and
+                               profiler use (decisions must not depend on
+                               transient queue state);
+  ``begin_device_load`` /      the *contended* cost — actual occupancy of the
+  ``begin_host_load`` /        shared SSD / PCIe channels, what the simulator
+  ``begin_host_promotion``     charges a transfer when it really happens.
+
+A transfer that finds its link busy queues behind the in-flight traffic, so
+the simulated latency of a load is ``channel wait + service`` while its
+predicted latency stays the service time alone.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.memory.channels import Transfer
+from repro.memory.tiers import TierSpec, TierTopology
+
+
+def predicted_load_latency(spec: TierSpec, mem_bytes: int,
+                           in_host_cache: bool) -> float:
+    """Uncontended expert switch cost from its current tier into device
+    memory (the paper's per-tier load-latency model, Fig. 4/5)."""
+    if spec.unified or not in_host_cache:
+        return spec.disk_overhead + spec.host_overhead + mem_bytes / spec.disk_bw \
+            + (0.0 if spec.unified else mem_bytes / spec.host_to_device_bw)
+    return spec.host_overhead + mem_bytes / spec.host_to_device_bw
+
+
+def predicted_host_load_latency(spec: TierSpec, mem_bytes: int) -> float:
+    """Uncontended disk -> host DRAM cost (CPU executors / promotions)."""
+    return spec.disk_overhead + mem_bytes / spec.disk_bw
+
+
+class TransferEngine:
+    """Owns the shared channels of one ``TierTopology`` and prices every
+    cross-tier movement on them."""
+
+    def __init__(self, topology: TierTopology):
+        self.topology = topology
+        self.spec = topology.spec
+
+    # --- predictions (uncontended, side-effect free) -------------------- #
+    def predict(self, mem_bytes: int, in_host_cache: bool) -> float:
+        return predicted_load_latency(self.spec, mem_bytes, in_host_cache)
+
+    def predict_host(self, mem_bytes: int) -> float:
+        return predicted_host_load_latency(self.spec, mem_bytes)
+
+    # --- contended transfers (occupy the shared links) ------------------ #
+    def begin_device_load(self, now: float, mem_bytes: int,
+                          in_host_cache: bool,
+                          host_ready_at: float = 0.0) -> Transfer:
+        """Start moving an expert into device memory at ``now``.
+
+        ``host_ready_at`` > now means a disk->host promotion of this expert
+        is still in flight: the PCIe leg waits for it instead of re-reading
+        the disk (the promotion already owns the SSD link).
+        """
+        t = self.spec
+        if t.unified:
+            # single unified-memory link: the whole load rides the SSD channel
+            return self.topology.disk_channel.begin(
+                now, mem_bytes, overhead=t.disk_overhead + t.host_overhead)
+        if in_host_cache:
+            leg = self.topology.pcie_channel.begin(
+                max(now, host_ready_at), mem_bytes, overhead=t.host_overhead)
+            return Transfer(issued=now, start=leg.start, done=leg.done)
+        # disk -> host -> device: the SSD leg then the PCIe leg, each
+        # queueing on its own shared link
+        disk_leg = self.topology.disk_channel.begin(
+            now, mem_bytes, overhead=t.disk_overhead)
+        pcie_leg = self.topology.pcie_channel.begin(
+            disk_leg.done, mem_bytes, overhead=t.host_overhead)
+        return Transfer(issued=now, start=disk_leg.start, done=pcie_leg.done,
+                        host_landed=disk_leg.done)
+
+    def begin_host_load(self, now: float, mem_bytes: int) -> Transfer:
+        """Disk -> host DRAM on demand (CPU executors run from DRAM)."""
+        return self.topology.disk_channel.begin(
+            now, mem_bytes, overhead=self.spec.disk_overhead)
+
+    def begin_host_promotion(self, now: float, mem_bytes: int) -> Transfer:
+        """Speculative disk -> host promotion (cross-tier prefetch)."""
+        return self.topology.disk_channel.begin(
+            now, mem_bytes, overhead=self.spec.disk_overhead)
+
+    # ------------------------------------------------------------------ #
+    def snapshot(self) -> dict:
+        return {"disk_channel": self.topology.disk_channel.snapshot(),
+                "pcie_channel": self.topology.pcie_channel.snapshot()}

@@ -75,14 +75,19 @@ class Autoscaler:
 
     def _rebalance_batch(self, sim):
         """The modeled device's activation region is fixed: adding executors
-        must split it, not mint new memory. Re-divide the baseline fleet's
-        total batch bytes across all live executors on the scaled pool."""
+        must split it, not mint new memory. The budget is the memory
+        hierarchy's construction-time activation accounting for this pool
+        group (expert-pool bytes stay with the shared DevicePool); re-divide
+        it across all live executors on the scaled pool."""
+        group = self._pool_group()
         peers = [e for e in sim.system.live_executors()
-                 if e.pool.group == self._pool_group()]
+                 if e.pool.group == group]
         if not peers:
             return
         if self._batch_budget is None:
-            self._batch_budget = sum(e.batch_bytes for e in peers)
+            hierarchy = getattr(sim.system, "hierarchy", None)
+            budget = hierarchy.batch_budget(group) if hierarchy else 0
+            self._batch_budget = budget or sum(e.batch_bytes for e in peers)
         share = self._batch_budget // len(peers)
         for e in peers:
             e.batch_bytes = share

@@ -94,7 +94,10 @@ step = make_train_step(cfg)
 lowered = jax.jit(step, in_shardings=(p_shard, opt_shard, b_shard),
                   donate_argnums=(0, 1)).lower(abstract, opt, batch)
 compiled = lowered.compile()
-assert compiled.cost_analysis().get("flops", 0) > 0
+ca = compiled.cost_analysis()
+if isinstance(ca, (list, tuple)):   # pre-0.4.31 jax: one dict per device
+    ca = ca[0]
+assert ca.get("flops", 0) > 0
 print("MINI_DRYRUN_OK")
 """
 

@@ -1,0 +1,357 @@
+"""Unit + property tests for the unified tiered-memory subsystem
+(``repro.memory``): residency invariants, shared-channel contention,
+the deduplicated load-latency formula, and cross-tier prefetch."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (COSERVE, CoEModel, CoServeSystem, ExpertSpec, Request,
+                        RoutingModule, Simulation, SystemPolicy)
+from repro.core.engines import SimEngine
+from repro.core.expert_manager import ExpertManager
+from repro.core.serving import ExecutorSpec
+from repro.core.workload import (BoardSpec, build_board_coe, device_profile,
+                                 make_executor_specs, make_task_requests)
+from repro.memory import (NUMA, TPU_V5E, UMA, DevicePool, HostTier,
+                          MemoryHierarchy, PrefetchConfig, Residency, TierSpec,
+                          TransferChannel, make_policy)
+from repro.memory.transfer import predicted_load_latency
+
+MB = 1 << 20
+
+
+def make_coe(n_experts: int = 12, seed: int = 0,
+             mem_bytes: int = 100 * MB) -> CoEModel:
+    rng = np.random.RandomState(seed)
+    experts = []
+    for i in range(n_experts):
+        deps = ()
+        if i >= n_experts // 2 and rng.rand() < 0.5:
+            deps = (f"e{rng.randint(0, n_experts // 2):03d}",)
+        experts.append(ExpertSpec(
+            id=f"e{i:03d}", arch="resnet101", mem_bytes=mem_bytes,
+            depends_on=deps, usage_prob=float(rng.rand())))
+    return CoEModel(experts, RoutingModule(lambda d: "e000"))
+
+
+# --------------------------------------------------------------------------- #
+# load-latency deduplication: one formula, three consumers
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("tier", [NUMA, UMA, TPU_V5E], ids=lambda t: t.name)
+@pytest.mark.parametrize("in_host", [True, False])
+def test_formula_matches_seed_semantics(tier, in_host):
+    """Regression-pin the closed form for every shipped tier: the shim
+    ``repro.core.memory.load_latency`` and the TransferEngine agree."""
+    from repro.core.memory import load_latency
+    mem = 178 * MB
+    want = predicted_load_latency(tier, mem, in_host)
+    assert load_latency(tier, mem, in_host) == want
+    if tier.unified or not in_host:
+        expect = tier.disk_overhead + tier.host_overhead + mem / tier.disk_bw
+        if not tier.unified:
+            expect += mem / tier.host_to_device_bw
+    else:
+        expect = tier.host_overhead + mem / tier.host_to_device_bw
+    assert want == pytest.approx(expect)
+
+
+@pytest.mark.parametrize("tier", [NUMA, UMA, TPU_V5E], ids=lambda t: t.name)
+def test_sim_load_on_idle_channels_matches_formula(tier):
+    """An uncontended simulated load must cost exactly the predicted formula
+    (the contention model adds latency only when links are shared)."""
+    coe = make_coe()
+    h = MemoryHierarchy(coe, tier, pools={"gpu": 1 << 30})
+    engine = SimEngine(coe, tier, hierarchy=h)
+    mem = coe.spec("e000").mem_bytes
+    # disk-sourced load on idle channels
+    assert engine.load(None, "e000", now=0.0) == \
+        pytest.approx(predicted_load_latency(tier, mem, in_host_cache=False))
+    if h.host is not None:
+        # the load populated the host tier: a later load pays the PCIe leg
+        t2 = h.topology.pcie_channel.busy_until + h.topology.disk_channel.busy_until
+        assert engine.load(None, "e000", now=t2 + 1.0) == \
+            pytest.approx(predicted_load_latency(tier, mem, in_host_cache=True))
+
+
+def test_profiler_load_latencies_come_from_transfer_engine():
+    prof = device_profile("gpu", NUMA).arch_profiles["resnet101"]
+    mem = prof.mem_bytes
+    assert prof.load_latency_disk == \
+        pytest.approx(predicted_load_latency(NUMA, mem, in_host_cache=False))
+    assert prof.load_latency_host == \
+        pytest.approx(predicted_load_latency(NUMA, mem, in_host_cache=True))
+
+
+# --------------------------------------------------------------------------- #
+# shared-channel contention
+# --------------------------------------------------------------------------- #
+
+def test_two_concurrent_loads_take_twice_one_load():
+    """Two same-instant transfers on one link finish in ~2x one transfer."""
+    ch = TransferChannel("ssd", bandwidth=500e6)
+    one = ch.duration(500_000_000)
+    a = ch.begin(0.0, 500_000_000)
+    b = ch.begin(0.0, 500_000_000)
+    assert a.latency == pytest.approx(one)
+    assert b.latency == pytest.approx(2 * one)
+    assert b.start == pytest.approx(a.done)
+
+
+def test_two_executor_contention_raises_per_load_latency():
+    """Acceptance: a 2-executor shared-SSD sim pays more per load than the
+    1-executor case (the seed gave every executor a private SSD)."""
+    board = BoardSpec(name="T", n_components=80, n_active=48,
+                      avg_quantity=3.0, n_detection=10, zipf_s=1.6)
+    tier = TierSpec(name="t", disk_bw=530e6, host_to_device_bw=12e9,
+                    unified=False, host_cache_bytes=2 << 30,
+                    device_bytes=4 << 30)
+
+    def per_load(n_gpu):
+        coe = build_board_coe(board)
+        pools, specs = make_executor_specs(tier, n_gpu, 0)
+        system = CoServeSystem(coe, specs, pools, policy=COSERVE, tier=tier)
+        sim = Simulation(system)
+        sim.submit(make_task_requests(board, 400))
+        m = sim.run()
+        total = sum(s["load_time"] for s in m.per_executor.values())
+        return total / max(1, m.switches), m
+
+    solo, m1 = per_load(1)
+    duo, m2 = per_load(2)
+    assert duo > solo * 1.2, (solo, duo)
+    assert m2.memory["channels"]["disk_channel"]["wait_time_s"] > 0.0
+    assert m1.memory["channels"]["disk_channel"]["wait_time_s"] == 0.0
+
+
+# --------------------------------------------------------------------------- #
+# residency-state invariants under random load/evict/pin sequences
+# (seeded-random property tests: hypothesis is optional in this image)
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("seed", range(8))
+def test_pool_invariants_random_sequences(seed):
+    rng = np.random.RandomState(seed)
+    coe = make_coe(n_experts=16, seed=seed,
+                   mem_bytes=int(rng.randint(40, 140)) * MB)
+    pool = DevicePool(600 * MB, coe, group="gpu")
+    mgr = ExpertManager(coe, policy=["dependency_prob", "lru", "fifo",
+                                     "prob"][seed % 4])
+    ids = list(coe.experts)
+    for _ in range(300):
+        op = rng.randint(5)
+        eid = ids[rng.randint(len(ids))]
+        if op == 0 and pool.fits(eid) and eid not in pool:
+            if mgr.ensure_loadable(pool, eid) is not None:
+                pool.add(eid)
+                pool.ready.add(eid)
+        elif op == 1 and eid in pool.ready and eid not in pool.pinned:
+            pool.pin(eid)
+        elif op == 2 and eid in pool.pinned:
+            pool.unpin(eid)
+        elif op == 3:
+            pool.touch(eid)
+        elif op == 4:
+            victims = pool.evictable()
+            if victims:
+                pool.remove(victims[rng.randint(len(victims))])
+        # --- invariants hold after every step ------------------------- #
+        assert 0 <= pool.used_bytes <= pool.capacity
+        assert pool.used_bytes == sum(coe.spec(e).mem_bytes
+                                      for e in pool.resident)
+        assert set(pool.pinned) <= set(pool.resident)
+        assert pool.ready <= set(pool.resident)
+        assert set(pool.insert_seq) == set(pool.resident)
+        for e in pool.pinned:
+            assert e not in pool.evictable()      # pinned never evictable
+
+
+def test_manager_never_evicts_pinned_random_sequences():
+    rng = np.random.RandomState(7)
+    coe = make_coe(n_experts=14, seed=7)
+    pool = DevicePool(500 * MB, coe, group="gpu")
+    mgr = ExpertManager(coe, policy="dependency_prob")
+    ids = list(coe.experts)
+    for step in range(200):
+        eid = ids[rng.randint(len(ids))]
+        pinned_before = set(pool.pinned)
+        victims = mgr.pick_victims(pool, eid)
+        if victims is not None:
+            assert not (set(victims) & pinned_before)
+            for v in victims:
+                pool.remove(v)
+            if eid not in pool and pool.fits(eid):
+                pool.add(eid)
+                pool.ready.add(eid)
+        if rng.rand() < 0.3 and pool.resident:
+            pool.pin(list(pool.resident)[rng.randint(len(pool.resident))])
+        if rng.rand() < 0.2 and pool.pinned:
+            pool.unpin(list(pool.pinned)[0])
+
+
+def test_fifo_order_unperturbed_by_touch():
+    """The executor touch()es an expert on every batch; FIFO eviction order
+    must still follow *insertion* order (the seed degraded FIFO to LRU)."""
+    coe = make_coe(n_experts=8, seed=1)
+    pool = DevicePool(1 << 62, coe, group="gpu")
+    ids = list(coe.experts)[:5]
+    for eid in ids:
+        pool.add(eid)
+        pool.ready.add(eid)
+    for _ in range(3):
+        pool.touch(ids[0])     # hammer the oldest insertion
+    order = make_policy("fifo").order(pool.eviction_view())
+    assert order == ids        # insertion order, not use order
+    lru = make_policy("lru").order(pool.eviction_view())
+    assert lru[-1] == ids[0]   # LRU *does* see the touches
+
+
+# --------------------------------------------------------------------------- #
+# host tier
+# --------------------------------------------------------------------------- #
+
+def test_host_insert_oversized_is_non_destructive():
+    """Satellite fix: an expert larger than the whole cache must not evict
+    every resident on its way to failing."""
+    coe = CoEModel([
+        ExpertSpec(id="small", arch="a", mem_bytes=10 * MB, usage_prob=0.5),
+        ExpertSpec(id="small2", arch="a", mem_bytes=10 * MB, usage_prob=0.4),
+        ExpertSpec(id="huge", arch="a", mem_bytes=500 * MB, usage_prob=0.9),
+    ], RoutingModule(lambda d: "small"))
+    cache = HostTier(64 * MB, coe, policy="prob")
+    assert cache.insert("small") == []
+    assert cache.insert("small2") == []
+    evicted = cache.insert("huge")
+    assert evicted == []                      # no destructive eviction pass
+    assert "small" in cache and "small2" in cache
+    assert "huge" not in cache
+
+
+def test_host_reinsert_does_not_double_count():
+    """Seed bug: re-inserting a resident expert inflated used_bytes."""
+    coe = make_coe(n_experts=4, seed=3, mem_bytes=50 * MB)
+    cache = HostTier(500 * MB, coe)
+    cache.insert("e000")
+    used = cache.used_bytes
+    cache.insert("e000")
+    assert cache.used_bytes == used
+
+
+# --------------------------------------------------------------------------- #
+# residency state machine
+# --------------------------------------------------------------------------- #
+
+def test_residency_state_transitions():
+    coe = make_coe(n_experts=6, seed=2, mem_bytes=50 * MB)
+    h = MemoryHierarchy(coe, NUMA, pools={"gpu": 200 * MB})
+    pool = h.pools["gpu"]
+    eid = "e000"
+    assert h.residency(eid) is Residency.DISK
+    tr = h.begin_device_load(eid, now=0.0)
+    pool.add(eid)
+    pool.loading[eid] = tr.done
+    assert h.residency(eid) is Residency.LOADING
+    pool.loading.pop(eid)
+    pool.ready.add(eid)
+    assert h.residency(eid) is Residency.DEVICE
+    pool.pin(eid)
+    assert h.residency(eid) is Residency.PINNED
+    pool.unpin(eid)
+    pool.remove(eid)
+    h.note_evicted(eid)
+    assert h.residency(eid) is Residency.HOST   # demoted, not dropped
+    counts = h.residency_counts()
+    assert counts["host"] == 1 and counts["disk"] == len(coe) - 1
+
+
+# --------------------------------------------------------------------------- #
+# dependency-aware cross-tier prefetch
+# --------------------------------------------------------------------------- #
+
+def _chain_coe():
+    experts = [
+        ExpertSpec(id="up", arch="a", mem_bytes=50 * MB, usage_prob=0.9),
+        ExpertSpec(id="down", arch="a", mem_bytes=50 * MB,
+                   depends_on=("up",), usage_prob=0.5),
+        ExpertSpec(id="cold", arch="a", mem_bytes=50 * MB,
+                   depends_on=("up",), usage_prob=0.001),
+    ]
+    routing = RoutingModule(lambda d: "up",
+                            chain_prob={"up": {"down": 0.9, "cold": 0.001}})
+    return CoEModel(experts, routing)
+
+
+def test_prefetch_promotes_likely_downstream_to_host():
+    coe = _chain_coe()
+    h = MemoryHierarchy(coe, NUMA, pools={"gpu": 200 * MB},
+                        prefetch=PrefetchConfig(enabled=True))
+    h.on_execute("up", now=0.0)
+    assert h.residency("down") is Residency.HOST
+    # in flight until the SSD leg lands, then a settled host resident
+    assert not h.host.is_ready("down", now=0.0)
+    assert h.host.is_ready("down", now=h.host.ready_time("down"))
+    # the cold edge (below min_weight) stays on disk
+    assert h.residency("cold") is Residency.DISK
+    assert h.prefetcher.promotions == 1
+
+
+def test_prefetch_disabled_config_is_inert():
+    coe = _chain_coe()
+    h = MemoryHierarchy(coe, NUMA, pools={"gpu": 200 * MB},
+                        prefetch=PrefetchConfig(enabled=False))
+    h.on_execute("up", now=0.0)
+    assert h.residency("down") is Residency.DISK
+    assert h.prefetcher.promotions == 0
+
+
+def test_promoted_expert_costs_pcie_not_disk():
+    coe = _chain_coe()
+    h = MemoryHierarchy(coe, NUMA, pools={"gpu": 200 * MB},
+                        prefetch=PrefetchConfig(enabled=True))
+    h.on_execute("up", now=0.0)
+    settle = h.host.ready_time("down") + 1.0
+    tr = h.begin_device_load("down", now=settle)
+    mem = coe.spec("down").mem_bytes
+    assert tr.latency == pytest.approx(
+        predicted_load_latency(NUMA, mem, in_host_cache=True))
+    assert h.prefetcher.hits == 1
+
+
+def test_cross_tier_prefetch_reduces_stall_end_to_end():
+    """Acceptance: prefetch (device overlap + disk->host promotion) cuts
+    total expert-switch stall time vs --prefetch off."""
+    board = BoardSpec(name="T", n_components=80, n_active=20,
+                      avg_quantity=4.0, n_detection=20,
+                      detection_fraction=1.0, ok_prob=0.98, zipf_s=0.8)
+    tier = TierSpec(name="t", disk_bw=530e6, host_to_device_bw=12e9,
+                    unified=False, host_cache_bytes=2 << 30,
+                    device_bytes=4 << 30)
+
+    def run(policy):
+        coe = build_board_coe(board)
+        pools, specs = make_executor_specs(tier, 2, 0)
+        system = CoServeSystem(coe, specs, pools, policy=policy, tier=tier)
+        sim = Simulation(system)
+        sim.submit(make_task_requests(board, 600))
+        return sim.run()
+
+    on = run(COSERVE)
+    off = run(dataclasses.replace(COSERVE, prefetch=False,
+                                  host_prefetch=False))
+    assert on.stall_time < off.stall_time
+    assert on.memory["prefetch"]["promotions"] > 0
+
+
+# --------------------------------------------------------------------------- #
+# autoscaler device-budget accounting rides the hierarchy
+# --------------------------------------------------------------------------- #
+
+def test_hierarchy_tracks_construction_batch_budget():
+    coe = make_coe(n_experts=8, seed=4)
+    prof = device_profile("gpu", NUMA)
+    specs = [ExecutorSpec("gpu", prof, 256 * MB, "gpu"),
+             ExecutorSpec("gpu", prof, 256 * MB, "gpu")]
+    system = CoServeSystem(coe, specs, {"gpu": 1 << 30}, policy=COSERVE,
+                           tier=NUMA)
+    assert system.hierarchy.batch_budget("gpu") == 512 * MB
