@@ -1,0 +1,116 @@
+"""Fleet-topology benchmark: devices x link layout x replication.
+
+Sweeps the device-fleet subsystem over 1/2/4 accelerators behind one shared
+SSD, comparing the PR 2 baseline topology (one host->device link the whole
+fleet queues on, single-copy placement) against per-device links and
+PlacementPlan replication:
+
+  links="shared"      every device's loads queue on ONE PCIe channel —
+                      adding devices adds compute but the switch path stays
+                      serialized (the single-board assumption scaled up)
+  links="per-device"  each device owns its host->device channel; only the
+                      SSD fan-in stays shared
+  replication on      the hottest experts get planned copies on multiple
+                      device pools, so the residency-aware scheduler can
+                      route their requests switch-free
+
+The workload is sized so the working set lives in host DRAM (loads are
+PCIe-leg bound — the regime where link layout matters) while the device
+pools only hold a fraction of it (so experts really switch). Per-link wait
+times are reported for every row.
+
+Emits ``BENCH_fleet.json`` (suite key ``fleet`` in benchmarks.run).
+"""
+from __future__ import annotations
+
+import json
+
+from repro.core import COSERVE, CoServeSystem, Simulation
+from repro.core.workload import (BoardSpec, build_board_coe,
+                                 make_task_requests)
+from repro.fleet import FleetSpec, build_fleet
+from repro.memory import TierSpec
+
+OUT_PATH = "BENCH_fleet.json"
+
+# thrash-heavy board: ~21 GB of active experts against 3 GB pools (12 GB at
+# 4 devices), Zipf-hot with short same-type runs so replicating the head of
+# the distribution lets several devices serve it concurrently
+BOARD = BoardSpec(name="F", n_components=160, n_active=120,
+                  avg_quantity=1.5, n_detection=16, zipf_s=2.0)
+
+# host DRAM holds the whole catalog (steady-state loads ride the PCIe leg,
+# not the SSD), NVMe-class disk keeps the cold phase short, PCIe is modest
+# so the link layout is what the sweep measures
+TIER = TierSpec(name="fleet_numa", disk_bw=2000e6, host_to_device_bw=3e9,
+                unified=False, host_cache_bytes=40 << 30,
+                device_bytes=4 << 30)
+
+DEVICES = (1, 2, 4)
+GPU_PER_DEVICE = 3
+
+
+def _simulate(n_devices: int, links: str, replication: int,
+              n_requests: int, interval: float):
+    coe = build_board_coe(BOARD)
+    fleet = FleetSpec(n_devices=n_devices, gpu_per_device=GPU_PER_DEVICE,
+                      n_cpu=0, links=links)
+    pools, specs = build_fleet(TIER, fleet)
+    system = CoServeSystem(coe, specs, pools, policy=COSERVE, tier=TIER,
+                           links=links, replication=replication)
+    sim = Simulation(system)
+    sim.submit(make_task_requests(BOARD, n_requests, interval=interval))
+    return sim.run()
+
+
+def _row(m) -> dict:
+    chans = m.memory["channels"]
+    return {
+        "completed": m.completed,
+        "throughput_rps": round(m.throughput, 3),
+        "switches": m.switches,
+        "p99_s": round(m.p99_latency, 4),
+        "stall_s": round(m.stall_time, 3),
+        "replicas": m.memory["placement"]["replicas"],
+        "disk_wait_s": chans["disk_channel"]["wait_time_s"],
+        "pcie_wait_s": chans["pcie_channel"]["wait_time_s"],   # fleet total
+        "per_link_wait_s": {name: ch["wait_time_s"]
+                            for name, ch in chans["pcie_channels"].items()},
+    }
+
+
+def run(quick: bool = False, smoke: bool = False) -> dict:
+    n = 200 if smoke else (400 if quick else 800)
+    # offered load that saturates the 1-device fleet but not 4 devices, so
+    # scaling (and the topology's share of it) is visible in throughput
+    interval = 0.002
+    out: dict = {"board": BOARD.name, "tier": TIER.name,
+                 "gpu_per_device": GPU_PER_DEVICE, "sweep": {}}
+    for d in DEVICES:
+        for links in ("shared", "per-device"):
+            for repl in (0, 1):
+                m = _simulate(d, links, repl, n, interval)
+                key = f"{d}dev/{links}/repl{repl}"
+                out["sweep"][key] = _row(m)
+
+    sweep = out["sweep"]
+    base = sweep["4dev/shared/repl0"]          # PR 2 baseline topology at 4
+    best = sweep["4dev/per-device/repl1"]
+    out["four_device_speedup"] = round(
+        best["throughput_rps"] / base["throughput_rps"], 3) \
+        if base["throughput_rps"] else None
+    out["four_device_pcie_wait_ratio"] = round(
+        best["pcie_wait_s"] / base["pcie_wait_s"], 3) \
+        if base["pcie_wait_s"] else None
+    out["scaling_1_to_4"] = round(
+        best["throughput_rps"]
+        / sweep["1dev/shared/repl0"]["throughput_rps"], 3) \
+        if sweep["1dev/shared/repl0"]["throughput_rps"] else None
+
+    with open(OUT_PATH, "w") as f:
+        json.dump(out, f, indent=1)
+    return out
+
+
+if __name__ == "__main__":
+    print(json.dumps(run(quick=True), indent=1))

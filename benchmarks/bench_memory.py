@@ -11,6 +11,9 @@ comparable trajectory for the hierarchy:
                  modeled at all)
   prefetch     — dependency-aware cross-tier prefetch vs --prefetch off on a
                  detector-spill workload: total expert-switch stall time
+  prefetch_trigger — execution-start vs queue-arrival promotion trigger:
+                 stall time and the *speculative SSD traffic* the wider
+                 queue-arrival window buys it with (promotion bytes delta)
 
 Emits ``BENCH_memory.json`` (also returned for benchmarks.run aggregation).
 """
@@ -108,6 +111,21 @@ def run(quick: bool = False) -> dict:
         policy = dataclasses.replace(COSERVE, **knobs)
         m = _simulate(DET_BOARD, DET_TIER, policy, n)
         out["prefetch"][mode] = _row(m)
+
+    # --- promotion trigger: execution-start vs queue-arrival ------------ #
+    out["prefetch_trigger"] = {}
+    for trigger in ("exec", "queue"):
+        policy = dataclasses.replace(COSERVE, prefetch_trigger=trigger,
+                                     **PREFETCH_MODES["all"])
+        m = _simulate(DET_BOARD, DET_TIER, policy, n)
+        out["prefetch_trigger"][trigger] = _row(m)
+    exec_b = out["prefetch_trigger"]["exec"]["prefetch"]["promoted_bytes"]
+    queue_b = out["prefetch_trigger"]["queue"]["prefetch"]["promoted_bytes"]
+    # the wider queue-arrival window issues promotions earlier and for less
+    # certain demand — this is the extra speculative SSD traffic it costs
+    out["prefetch_trigger"]["speculative_bytes_delta"] = queue_b - exec_b
+    out["prefetch_trigger"]["speculative_traffic_ratio"] = \
+        round(queue_b / exec_b, 3) if exec_b else None
     off_stall = out["prefetch"]["off"]["stall_s"]
     dev_stall = out["prefetch"]["device"]["stall_s"]
     all_stall = out["prefetch"]["all"]["stall_s"]

@@ -1,6 +1,7 @@
 """Benchmark aggregator (deliverable d): one harness per paper table/figure.
 
-  PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig13,fig15,...]
+  PYTHONPATH=src python -m benchmarks.run [--quick|--smoke] \
+      [--only fig13,fig15,...] [--suite memory]
 
 | key       | paper artefact | module |
 |-----------|----------------|--------|
@@ -14,19 +15,27 @@
 | roofline  | EXPERIMENTS.md §Roofline (from dry-run)| roofline         |
 | online    | online gateway thr/p99 @ fixed load    | bench_online     |
 | memory    | tiered-memory hierarchy (policy x      | bench_memory     |
-|           | prefetch, contention, promotion)       |                  |
+|           | prefetch, contention, promotion,       |                  |
+|           | prefetch-trigger traffic delta)        |                  |
+| fleet     | devices x links x replication sweep    | bench_fleet      |
+
+``--suite`` is an alias of ``--only``; ``--smoke`` runs the smallest
+workload a suite supports (CI regression gate — suites without a dedicated
+smoke size fall back to their quick size).
 """
 from __future__ import annotations
 
 import argparse
+import inspect
 import json
 import os
 import sys
 import time
 
 from benchmarks import (bench_ablation, bench_batch_latency, bench_executors,
-                        bench_memory, bench_memory_alloc, bench_online,
-                        bench_overhead, bench_throughput, bench_kernels)
+                        bench_fleet, bench_memory, bench_memory_alloc,
+                        bench_online, bench_overhead, bench_throughput,
+                        bench_kernels)
 
 SUITES = {
     "fig13_14": bench_throughput.run,
@@ -38,6 +47,7 @@ SUITES = {
     "kernels": bench_kernels.run,
     "online": bench_online.run,
     "memory": bench_memory.run,
+    "fleet": bench_fleet.run,
 }
 
 
@@ -59,7 +69,10 @@ SUITES["roofline"] = _roofline
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
-    ap.add_argument("--only", default=None,
+    ap.add_argument("--smoke", action="store_true",
+                    help="smallest workloads (implies --quick where a suite "
+                         "has no dedicated smoke size) — the CI bench gate")
+    ap.add_argument("--only", "--suite", dest="only", default=None,
                     help="comma-separated suite keys")
     ap.add_argument("--out", default="bench_results.json")
     args = ap.parse_args(argv)
@@ -68,10 +81,14 @@ def main(argv=None):
     results, failures = {}, 0
     for key in keys:
         t0 = time.perf_counter()
-        print(f"\n=== {key} {'(quick)' if args.quick else ''} ===",
-              flush=True)
+        mode = "(smoke)" if args.smoke else "(quick)" if args.quick else ""
+        print(f"\n=== {key} {mode} ===", flush=True)
         try:
-            res = SUITES[key](quick=args.quick)
+            fn = SUITES[key]
+            kwargs = {"quick": args.quick or args.smoke}
+            if args.smoke and "smoke" in inspect.signature(fn).parameters:
+                kwargs["smoke"] = True
+            res = fn(**kwargs)
             results[key] = res
             print(json.dumps(res, indent=1, default=str))
         except Exception as e:  # noqa: BLE001 — report and continue

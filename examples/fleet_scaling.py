@@ -1,0 +1,75 @@
+"""Fleet scaling: 4 accelerator devices behind one shared SSD.
+
+Walks the device-fleet topology subsystem end to end on a scaled-down
+circuit-board workload:
+
+  1. describe the fleet (4 devices x 3 executors, per-device PCIe links)
+  2. inspect the explicit PlacementPlan (primaries + replicated hot head)
+  3. serve the same workload on the PR 2 baseline topology (one shared
+     host->device link, single-copy placement) and on the fleet topology,
+     and compare throughput, stalls and per-link queueing
+
+  PYTHONPATH=src python examples/fleet_scaling.py
+"""
+from repro.core import COSERVE, CoServeSystem, Simulation
+from repro.core.workload import BoardSpec, build_board_coe, make_task_requests
+from repro.fleet import FleetSpec, PlacementPlan, build_fleet
+from repro.memory import TierSpec
+
+GB = 1 << 30
+
+# a board whose active expert set (~21 GB) dwarfs one device pool (3 GB):
+# serving is dominated by expert switches, which is where topology matters.
+# (Same shape as benchmarks/bench_fleet.py, so numbers track BENCH_fleet.)
+BOARD = BoardSpec(name="X", n_components=160, n_active=120,
+                  avg_quantity=1.5, n_detection=16, zipf_s=2.0)
+
+# each accelerator: 4 GB of device memory behind a 3 GB/s host link; all
+# four share one NVMe SSD, and host DRAM holds the whole catalog once warm
+TIER = TierSpec(name="fleet_demo", disk_bw=2000e6, host_to_device_bw=3e9,
+                unified=False, host_cache_bytes=40 * GB,
+                device_bytes=4 * GB)
+
+N_REQUESTS = 800
+
+
+def serve(links: str, replication: int):
+    coe = build_board_coe(BOARD)
+    fleet = FleetSpec(n_devices=4, gpu_per_device=3, n_cpu=0, links=links)
+    pools, specs = build_fleet(TIER, fleet)
+    system = CoServeSystem(coe, specs, pools, policy=COSERVE, tier=TIER,
+                           links=links, replication=replication)
+    sim = Simulation(system)
+    sim.submit(make_task_requests(BOARD, N_REQUESTS, interval=0.002))
+    return system, sim.run()
+
+
+# --- 1+2: the explicit placement plan --------------------------------------- #
+coe = build_board_coe(BOARD)
+fleet = FleetSpec(n_devices=4, gpu_per_device=3, n_cpu=0,
+                  links="per-device")
+pools, _ = build_fleet(TIER, fleet)
+plan = PlacementPlan.build(coe, pools, replication=1)
+print("fleet pools:", {g: f"{b / GB:.1f} GB" for g, b in pools.items()})
+print("plan:", plan.snapshot())
+hottest = coe.by_usage()[0]
+print(f"hottest expert {hottest.id} (P(use)={hottest.usage_prob:.3f}) "
+      f"planned on pools: {plan.pools_for(hottest.id)}")
+
+# --- 3: baseline topology vs fleet topology --------------------------------- #
+print(f"\nserving {N_REQUESTS} requests on 4 devices x 3 executors:")
+for links, repl, label in (
+        ("shared", 0, "shared link, no replication (PR 2 baseline)"),
+        ("per-device", 0, "per-device links"),
+        ("per-device", 1, "per-device links + replication")):
+    system, m = serve(links, repl)
+    chans = m.memory["channels"]
+    print(f"\n  [{label}]")
+    print(f"    throughput {m.throughput:7.2f} req/s   "
+          f"switches {m.switches}   stall {m.stall_time:.2f}s")
+    print(f"    PCIe wait total {chans['pcie_channel']['wait_time_s']:.2f}s "
+          f"across {len(chans['pcie_channels'])} link(s); "
+          f"SSD wait {chans['disk_channel']['wait_time_s']:.2f}s")
+    for name, ch in sorted(chans["pcie_channels"].items()):
+        print(f"      {name:24s} wait {ch['wait_time_s']:8.2f}s  "
+              f"moved {ch['bytes_moved'] / GB:6.2f} GB")

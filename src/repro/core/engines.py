@@ -7,11 +7,14 @@ performs occupies the hierarchy's *shared* SSD/PCIe channels, so concurrent
 loads contend instead of each pretending it owns the link.
 
 ``RealEngine`` — actually loads JAX expert params across host/disk tiers and
-runs jitted forwards, measuring wall time. Loads queue on ONE real transfer
-thread (the machine has one storage link), so prefetch genuinely overlaps
-host I/O with device compute and concurrent loads serialize as they would on
-hardware. Scheduler and expert-manager behaviour (and therefore switch
-counts) are engine-independent.
+runs jitted forwards, measuring wall time. Loads queue on real transfer
+threads that mirror the tier topology: one thread per transfer channel
+(one shared thread in ``links="shared"`` mode — the machine has one storage
+link — or one per device pool in ``links="per-device"`` mode), so prefetch
+genuinely overlaps host I/O with device compute and concurrent loads
+serialize exactly where the simulated channels would. Scheduler and
+expert-manager behaviour (and therefore switch counts) are
+engine-independent.
 """
 from __future__ import annotations
 
@@ -51,12 +54,14 @@ class SimEngine:
 
     # --- side effects --------------------------------------------------- #
     def load(self, ex, expert_id: str, now: float = 0.0) -> float:
-        """Begin the transfer on the shared channels; returns the latency the
-        executor observes (queueing wait + service legs)."""
+        """Begin the transfer on the contended channels; returns the latency
+        the executor observes (queueing wait + service legs). The PCIe leg
+        rides the executor's own device link in per-device mode."""
         if ex is not None and ex.device in ("host", "cpu"):
             tr = self.hierarchy.begin_host_load(expert_id, now)
         else:
-            tr = self.hierarchy.begin_device_load(expert_id, now)
+            group = ex.link_group if ex is not None else ""
+            tr = self.hierarchy.begin_device_load(expert_id, now, group=group)
         return tr.latency
 
     def unload(self, ex, expert_id: str) -> None:
@@ -159,12 +164,14 @@ class RealEngine:
     payloads supply ``make_batch(requests) -> array`` and
     ``interpret(outputs) -> list`` hooks via the CoE expert payload dict.
 
-    Transfers ride the shared transfer thread: ``load()`` enqueues and
-    returns the *predicted* latency (so scheduling stays deterministic), and
-    the executor's ``finish_load`` blocks until the transfer really
-    completed. ``measured_load_time`` accumulates the wall time the worker
-    actually spent moving timed (post-init) loads; it is surfaced in
-    ``Metrics.memory['real_measured_load_s']``.
+    Transfers ride per-channel transfer threads: ``load()`` enqueues on the
+    thread of the link the executor's pool uses (``bind_topology`` maps pool
+    group -> channel; unbound or shared-link mode keeps the seed's single
+    thread) and returns the *predicted* latency (so scheduling stays
+    deterministic), and the executor's ``finish_load`` blocks until the
+    transfer really completed. ``measured_load_time`` accumulates the wall
+    time the workers actually spent moving timed (post-init) loads; it is
+    surfaced in ``Metrics.memory['real_measured_load_s']``.
     """
 
     def __init__(self, coe: CoEModel, store: HostStore, apply_fns: Dict[str, Any]):
@@ -172,10 +179,36 @@ class RealEngine:
         self.store = store
         self.apply_fns = apply_fns
         self.device_params: Dict[str, Any] = {}
-        self._worker = _TransferWorker()
+        self._workers: Dict[str, _TransferWorker] = {}
+        self._topology = None
         self._pending: Dict[str, dict] = {}
         self._lock = threading.Lock()
         self.measured_load_time = 0.0
+
+    # --- topology binding (one transfer thread per transfer channel) ---- #
+    def bind_topology(self, topology) -> None:
+        """Mirror the tier topology's channels: each PCIe channel (or the
+        SSD link on unified tiers) gets its own FIFO transfer thread, so the
+        real backend serializes loads exactly where the simulator's
+        contended channels would. Called by ``CoServeSystem``."""
+        self._topology = topology
+
+    def _channel_name(self, ex) -> str:
+        if self._topology is None or ex is None:
+            return ""                  # unbound: the seed's single thread
+        t = self._topology
+        if t.spec.unified or getattr(ex, "device", "") in ("host", "cpu"):
+            # one storage link carries the load (host/CPU executors load
+            # disk -> DRAM and never own a PCIe channel)
+            return t.disk_channel.name
+        return t.pcie_for(ex.link_group).name
+
+    def _worker_for(self, name: str) -> _TransferWorker:
+        with self._lock:
+            worker = self._workers.get(name)
+            if worker is None:
+                worker = self._workers[name] = _TransferWorker()
+            return worker
 
     def load_latency(self, ex, expert_id: str) -> float:
         # prediction for scheduling: profiled value (derived from the
@@ -202,7 +235,8 @@ class RealEngine:
                 self.measured_load_time += time.perf_counter() - t0
 
     def load(self, ex, expert_id: str, now: float = 0.0) -> float:
-        handle = self._worker.submit(lambda: self._transfer(expert_id))
+        worker = self._worker_for(self._channel_name(ex))
+        handle = worker.submit(lambda: self._transfer(expert_id))
         with self._lock:
             self._pending[expert_id] = handle
         return self.load_latency(ex, expert_id)

@@ -6,8 +6,10 @@ between executors on the same memory domain (the paper's 3 GPU executors on
 one 12 GB device): an expert loaded by one executor serves them all. Load of
 the next group's expert overlaps execution of the current batch (the paper's
 condition (b): "loaded during the processing of a preceding request"). The
-transfers themselves ride the memory hierarchy's *shared* SSD/PCIe channels,
-so a load's observed latency includes any queueing behind peers' traffic.
+transfers themselves ride the memory hierarchy's contended channels — the
+shared SSD fan-in plus the executor's device link (``link_group``, its own
+PCIe channel in per-device fleets) — so a load's observed latency includes
+any queueing behind peers' traffic on exactly those links.
 Both the event-driven simulator and the real-JAX backend drive the same
 state machine, so switch counts are backend-independent.
 """
@@ -69,6 +71,13 @@ class Executor:
     def profile(self, arch: str) -> ArchProfile:
         return self.device_profile.arch_profiles[arch]
 
+    @property
+    def link_group(self) -> str:
+        """The device-link key this executor's loads ride: its pool group
+        (one PCIe channel per pool in per-device fleets; ignored in
+        shared-link mode)."""
+        return self.pool.group
+
     def load_latency(self, expert_id: str) -> float:
         return self.engine.load_latency(self, expert_id)
 
@@ -118,8 +127,18 @@ class Executor:
                 if peer.current is not None:
                     protected.add(peer.current[0])
             protected.discard(expert_id)
+        if self.hierarchy is not None:
+            # cost-aware eviction ranks victims by their *residency-aware*
+            # reload price (HOST replicas are cheap to bring back, DISK-only
+            # experts on a backlogged link are not) — the same
+            # contended-channel cost the scheduler scores assignments with
+            def cost_fn(eid, _now=now):
+                return self.hierarchy.assignment_cost(
+                    eid, _now, group=self.link_group, device=self.device)
+        else:
+            cost_fn = self.load_latency
         victims = self.manager.ensure_loadable(
-            self.pool, expert_id, load_cost_fn=self.load_latency,
+            self.pool, expert_id, load_cost_fn=cost_fn,
             protected=protected, strict=strict)
         self.stats.mgmt_time += _time.perf_counter() - t0
         if victims is None:

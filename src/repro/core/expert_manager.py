@@ -11,6 +11,12 @@ semantics documented on ``DependencyProbPolicy``:
   only waste pool memory. Sorted by memory footprint **descending**.
   Stage 2 — if still short, evict by pre-assessed usage probability
   **ascending** (the CoE prior replaces Samba-CoE's LRU history).
+
+``load_cost_fn`` (cost-aware policies) is residency-aware since the fleet
+refactor: the executor passes the memory hierarchy's assignment cost, so a
+victim's reload price reflects the tier it would come back from (HOST vs
+DISK) and the backlog of the specific device link it would ride — the same
+number the scheduler scores assignments with.
 """
 from __future__ import annotations
 

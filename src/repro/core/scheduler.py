@@ -4,7 +4,12 @@ Four stages, exactly as the paper defines them:
   1. *Prediction* — additional latency of placing a request on each queue:
      execution is the linear model K·n+B (K if it joins an existing group);
      switching is zero if the expert is resident (a) or already queued (b),
-     else the profiled load latency.
+     else the *residency-aware* assignment cost: the uncontended service
+     time from the tier the expert actually occupies (DEVICE on this pool /
+     HOST / DISK) plus the backlog of the specific link(s) the load would
+     ride — the same contended channels the TransferEngine charges and the
+     prefetcher gates on, replacing the seed's executor-local
+     ``load_latency`` guess.
   2. *Assigning* — minimise the makespan over executor queues; ties broken by
      the smallest added latency for the new request (Fig. 8).
   3. *Arranging* — place the request directly behind queued requests that use
@@ -57,7 +62,8 @@ class RequestScheduler:
     # ------------------------------------------------------------------ #
     # prediction (paper §4.2 "Prediction of additional inference latency")
     # ------------------------------------------------------------------ #
-    def additional_latency(self, ex: "Executor", req: Request) -> float:
+    def additional_latency(self, ex: "Executor", req: Request,
+                           now: float = 0.0) -> float:
         spec = ex.coe.spec(req.expert_id)
         prof = ex.profile(spec.arch)
         queued_same = any(g.expert_id == req.expert_id for g in ex.queue)
@@ -65,11 +71,37 @@ class RequestScheduler:
             exec_lat = prof.k                      # joins an existing batch
         else:
             exec_lat = prof.k + prof.b
-        if req.expert_id in ex.pool or queued_same:
-            switch_lat = 0.0                       # conditions (a) / (b)
-        else:
-            switch_lat = ex.load_latency(req.expert_id)
-        return exec_lat + switch_lat
+        return exec_lat + self.switch_cost(ex, req.expert_id, now,
+                                           queued_same=queued_same)
+
+    def switch_cost(self, ex: "Executor", expert_id: str, now: float,
+                    queued_same: bool = False) -> float:
+        """Residency-aware switch cost of running ``expert_id`` on ``ex``.
+
+        Zero for condition (b) (already queued: the load is paid once per
+        group) and for a settled resident of this executor's pool
+        (condition (a)). A copy still LOADING into the pool costs its
+        remaining in-flight time, not zero and not a full reload. Otherwise
+        the memory hierarchy prices the load from where the expert really is
+        (HOST vs DISK) plus the queue of the specific link(s) this
+        executor's device would ride — so an executor behind a congested
+        PCIe channel genuinely looks more expensive than a replica-holding
+        one, and all consumers (scheduler, TransferEngine, prefetcher) agree
+        on the same contended-channel state.
+        """
+        if queued_same:
+            return 0.0
+        pool = ex.pool
+        if expert_id in pool:
+            done = pool.loading.get(expert_id)
+            if done is None or expert_id in pool.ready:
+                return 0.0
+            return max(0.0, done - now)
+        h = ex.hierarchy
+        if h is not None:
+            return h.assignment_cost(expert_id, now, group=ex.link_group,
+                                     device=ex.device)
+        return ex.load_latency(expert_id)
 
     # ------------------------------------------------------------------ #
     # assigning (paper §4.2 "Request assigning")
@@ -87,7 +119,7 @@ class RequestScheduler:
 
     def _assign_makespan(self, req: Request, now: float) -> "Executor":
         pending = [ex.pending_time(now) for ex in self.executors]
-        adds = [self.additional_latency(ex, req) for ex in self.executors]
+        adds = [self.additional_latency(ex, req, now) for ex in self.executors]
         best, best_key = None, None
         for i, ex in enumerate(self.executors):
             new_total = pending[i] + adds[i]

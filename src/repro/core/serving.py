@@ -15,7 +15,7 @@ from __future__ import annotations
 import dataclasses
 import math
 import time
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.coe import CoEModel, Request
 from repro.core.engines import SimEngine
@@ -23,6 +23,7 @@ from repro.core.executor import Executor
 from repro.core.expert_manager import ExpertManager
 from repro.core.profiler import DeviceProfile
 from repro.core.scheduler import RequestScheduler, SchedulerPolicy
+from repro.fleet import PlacementPlan, validate_pool_groups
 from repro.memory import MemoryHierarchy, PrefetchConfig, TierSpec
 
 
@@ -34,6 +35,9 @@ class SystemPolicy:
     evict: str = "dependency_prob"    # dependency_prob | lru | fifo | prob | cost_benefit
     prefetch: bool = True             # overlap device loads with execution
     host_prefetch: bool = True        # dependency-aware disk->host promotion
+    prefetch_trigger: str = "exec"    # exec (upstream starts executing) |
+    #                                   queue (upstream joins a queue: wider
+    #                                   window, more speculative SSD traffic)
     protect_queued: bool = True       # demand loads evict queue-referenced
     #                                   experts only as a last resort
     host_cache_policy: str = "prob"
@@ -109,22 +113,38 @@ class CoServeSystem:
     def __init__(self, coe: CoEModel, executor_specs: Sequence[ExecutorSpec],
                  pools: Dict[str, int],
                  policy: SystemPolicy = COSERVE, tier: Optional[TierSpec] = None,
-                 engine=None):
+                 engine=None, links: str = "shared",
+                 placement: Optional[PlacementPlan] = None,
+                 replication: int = 0):
         """``pools`` maps memory-domain name -> expert-pool bytes. Executors
         with the same ``pool_group`` share one ModelPool (one physical
         device's memory), as in the paper's multi-executor single-GPU setup.
+        ``links`` picks the host->device channel layout (``shared`` |
+        ``per-device``); ``placement`` supplies an explicit expert->pool
+        plan (default: ``PlacementPlan.build`` — the paper's round-robin
+        sweep plus ``replication`` planned copies of the hottest experts).
         """
         self.coe = coe
         self.policy = policy
         self.tier = tier
+        # spec-level guard: one pool group is one physical device's memory —
+        # conflicting device kinds must not share a residency set
+        self.pool_devices = validate_pool_groups(executor_specs)
         # the unified tiered-memory subsystem owns host tier, device pools,
-        # shared transfer channels and the cross-tier prefetcher
+        # contended transfer channels and the cross-tier prefetcher
         self.hierarchy = MemoryHierarchy(
             coe, tier, pools, host_policy=policy.host_cache_policy,
-            prefetch=PrefetchConfig(enabled=policy.host_prefetch))
+            prefetch=PrefetchConfig(enabled=policy.host_prefetch,
+                                    trigger=policy.prefetch_trigger),
+            links=links,
+            link_groups=[g for g in pools
+                         if self.pool_devices.get(g) not in ("host", "cpu")])
         self.host_cache = self.hierarchy.host          # seed-compat alias
         self.pools = self.hierarchy.pools
         self.engine = engine or SimEngine(coe, tier, hierarchy=self.hierarchy)
+        bind = getattr(self.engine, "bind_topology", None)
+        if bind is not None:     # real backend: one transfer thread per link
+            bind(self.hierarchy.topology)
         self.manager = ExpertManager(coe, policy=policy.evict)
         self.executors: List[Executor] = []
         for i, spec in enumerate(executor_specs):
@@ -142,28 +162,28 @@ class CoServeSystem:
             SchedulerPolicy(assign=policy.assign, arrange=policy.arrange,
                             lookahead=policy.lookahead))
         self.sched_time = 0.0
-        self._initial_placement()
+        # system initialisation (paper §4.1 steps 1–3) through the explicit
+        # plan: round-robin by descending usage probability until pools are
+        # full, plus any planned replicas
+        self.placement = placement if placement is not None \
+            else PlacementPlan.build(coe, pools, replication=replication)
+        self.placement.validate()
+        self._apply_placement()
 
     # ------------------------------------------------------------------ #
-    # system initialisation (paper §4.1 steps 1–3): round-robin expert
-    # placement by descending usage probability until pools are full.
-    # ------------------------------------------------------------------ #
-    def _initial_placement(self):
-        pools = list(self.pools.values())
-        if not pools:
-            return
-        i = 0
-        for spec in self.coe.by_usage():
-            for j in range(len(pools)):
-                pool = pools[(i + j) % len(pools)]
-                if spec.id not in pool and spec.mem_bytes <= pool.free_bytes():
-                    pool.add(spec.id)
-                    pool.ready.add(spec.id)
-                    if hasattr(self.engine, "warm_place"):
-                        self.engine.warm_place(pool, spec.id)
-                    i = (i + j + 1) % len(pools)
-                    break
-            # pools full / expert too large: stays on lower tiers
+    def _apply_placement(self):
+        """Warm the device pools to the plan's layout (init phase: transfers
+        are untimed, exactly like the seed's placement loop)."""
+        for eid, group in self.placement.layout():
+            pool = self.pools.get(group)
+            if pool is None:
+                continue               # plan built for a pool we don't have
+            if eid not in pool and self.coe.spec(eid).mem_bytes \
+                    <= pool.free_bytes():
+                pool.add(eid)
+                pool.ready.add(eid)
+                if hasattr(self.engine, "warm_place"):
+                    self.engine.warm_place(pool, eid)
 
     # ------------------------------------------------------------------ #
     def live_executors(self) -> List[Executor]:
@@ -178,6 +198,10 @@ class CoServeSystem:
         t0 = time.perf_counter()
         ex = self.scheduler.assign(req, now)
         self.sched_time += time.perf_counter() - t0
+        # queue-arrival prefetch trigger: the request's expert just joined a
+        # queue, so its likely downstream experts can start promoting now
+        # (inert unless policy.prefetch_trigger == "queue")
+        self.hierarchy.on_enqueue(req.expert_id, now)
         return ex
 
     def route_followup(self, req: Request, expert_id: str, output) -> Optional[Request]:
@@ -224,6 +248,7 @@ class CoServeSystem:
         group = spec.pool_group or spec.device
         if group not in self.pools:
             raise KeyError(f"unknown pool group {group!r}")
+        self.pool_devices = validate_pool_groups([spec], self.pool_devices)
         ex = Executor(
             ex_id=f"{spec.device}{len(self.executors)}", device=spec.device,
             coe=self.coe, device_profile=spec.profile,
@@ -235,6 +260,39 @@ class CoServeSystem:
         self.executors.append(ex)
         self.scheduler.executors = self.live_executors()
         return ex
+
+    # --- fleet placement reconfiguration -------------------------------- #
+    def rebalance_placement(self, now: float, max_loads: int = 4
+                            ) -> List[Tuple[Executor, str, float]]:
+        """Re-plan replication with pools weighted by live executor count
+        (a scale event shifted capacity), then pull the plan's hottest
+        missing experts onto their pools through idle executors' contended
+        load path (one in-flight load per pool, bounded by ``max_loads``).
+        Returns (executor, expert, done_time) for each issued load; the
+        caller (autoscaler / injection) schedules their LOAD_DONE events."""
+        weights: Dict[str, float] = {}
+        for ex in self.live_executors():
+            weights[ex.pool.group] = weights.get(ex.pool.group, 0.0) + 1.0
+        self.placement.rebalance(weights)
+        issued: List[Tuple[Executor, str, float]] = []
+        for group, pool in self.pools.items():
+            if len(issued) >= max_loads:
+                break
+            idle = [e for e in self.live_executors()
+                    if e.pool is pool and e.load_in_flight is None]
+            if not idle:
+                continue
+            carrier = idle[0]
+            for eid in self.placement.planned(group):
+                if eid in pool:
+                    continue
+                if self.coe.spec(eid).mem_bytes > pool.free_bytes():
+                    continue           # replicas fill free space, never evict
+                done = carrier.start_load(eid, now, strict=True)
+                if done is not None:
+                    issued.append((carrier, eid, done))
+                break                  # one in-flight load per pool
+        return issued
 
     # --- beyond-paper: work stealing ------------------------------------ #
     def try_steal(self, thief: Executor, now: float) -> bool:
@@ -302,6 +360,8 @@ class CoServeSystem:
         m.per_executor = {
             e.id: dataclasses.asdict(e.stats) for e in self.executors}
         m.memory = self.hierarchy.snapshot()
+        m.memory["pool_devices"] = dict(self.pool_devices)
+        m.memory["placement"] = self.placement.snapshot()
         measured = getattr(self.engine, "measured_load_time", None)
         if measured is not None:      # real backend: worker wall time
             m.memory["real_measured_load_s"] = round(measured, 4)

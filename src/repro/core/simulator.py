@@ -188,7 +188,9 @@ class Simulation:
         if ex.prefetch and ex.current is not None and ex.load_in_flight is None:
             cand = ex.prefetch_candidate()
             if cand is not None and (ex.hierarchy is None
-                                     or ex.hierarchy.speculation_ok(cand, now)):
+                                     or ex.hierarchy.speculation_ok(
+                                         cand, now, ex.link_group,
+                                         ex.device)):
                 t_done = ex.start_load(cand, now, strict=True)
                 if t_done is not None:
                     self.push(t_done, LOAD_DONE, (ex, cand))

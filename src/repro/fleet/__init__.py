@@ -1,0 +1,22 @@
+"""Device-fleet topology subsystem: per-device links + explicit placement.
+
+Extends the single-link, implicit-placement reproduction to multi-device
+fleets (ROADMAP "multi-device fleets" open item; SN40L-style composition of
+experts across sockets):
+
+  ``FleetSpec`` / ``build_fleet``   N accelerators x executors-per-device,
+                                    shared or per-device host->device links
+  ``PlacementPlan``                 expert -> device-pool assignment and
+                                    replication as a queryable object
+  ``validate_pool_groups``          one pool group == one device kind
+
+The links themselves live in ``repro.memory.tiers.TierTopology`` (per-group
+PCIe channels, shared SSD fan-in); this package owns the fleet-level shape
+and placement decisions on top of them.
+"""
+from repro.fleet.placement import PlacementPlan
+from repro.fleet.topology import (FleetSpec, build_fleet, device_group_name,
+                                  validate_pool_groups)
+
+__all__ = ["PlacementPlan", "FleetSpec", "build_fleet", "device_group_name",
+           "validate_pool_groups"]

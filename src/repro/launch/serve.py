@@ -37,6 +37,7 @@ from repro.core import (COSERVE, COSERVE_NONE, SAMBA, SAMBA_FIFO,
 from repro.core.memory import NUMA, UMA
 from repro.core.workload import (BOARD_A, BOARD_B, build_board_coe,
                                  make_executor_specs, make_task_requests)
+from repro.fleet import FleetSpec, build_fleet
 
 POLICIES: Dict[str, SystemPolicy] = {
     "coserve": COSERVE,
@@ -48,12 +49,14 @@ POLICIES: Dict[str, SystemPolicy] = {
 
 
 def _policy_from_args(args) -> SystemPolicy:
-    """Base policy + the ``--prefetch`` override.
+    """Base policy + the ``--prefetch`` / ``--prefetch-trigger`` overrides.
 
     ``off``  — no load/execute overlap, no cross-tier promotion;
     ``device`` — device-pool overlap only (the seed's behaviour);
     ``all``  — device overlap + dependency-aware disk->host prefetch;
     default  — whatever the named policy declares.
+    ``--prefetch-trigger queue`` fires the disk->host promotion when the
+    upstream request joins a queue instead of when it starts executing.
     """
     policy = POLICIES[args.policy]
     mode = getattr(args, "prefetch", None)
@@ -65,6 +68,9 @@ def _policy_from_args(args) -> SystemPolicy:
     elif mode == "all":
         policy = dataclasses.replace(policy, prefetch=True,
                                      host_prefetch=True)
+    trigger = getattr(args, "prefetch_trigger", None)
+    if trigger is not None:
+        policy = dataclasses.replace(policy, prefetch_trigger=trigger)
     return policy
 
 
@@ -78,19 +84,36 @@ def run_sim(args) -> dict:
     coe = build_board_coe(board)
     policy = _policy_from_args(args)
     n_gpu, n_cpu = args.executors
+    devices = args.devices
     if policy.assign == "single":
-        n_gpu, n_cpu = 1, 0
-    pools, specs = make_executor_specs(tier, n_gpu, n_cpu)
-    system = CoServeSystem(coe, specs, pools, policy=policy, tier=tier)
+        # a single-assign baseline only ever uses executors[0]: building a
+        # fleet for it would spread the hot placement across pools that can
+        # never serve, distorting the comparison
+        n_gpu, n_cpu, devices = 1, 0, 1
+    if devices > 1:
+        # multi-device fleet: n_gpu executors on EACH of --devices
+        # accelerators (shared SSD fan-in; --links picks the PCIe layout)
+        fleet = FleetSpec(n_devices=devices, gpu_per_device=n_gpu,
+                          n_cpu=n_cpu, links=args.links)
+        pools, specs = build_fleet(tier, fleet)
+    else:
+        pools, specs = make_executor_specs(tier, n_gpu, n_cpu)
+    system = CoServeSystem(coe, specs, pools, policy=policy, tier=tier,
+                           links=args.links, replication=args.replication)
     sim = Simulation(system)
     sim.submit(make_task_requests(board, args.requests))
     m = sim.run()
     return {"mode": "sim", "board": board.name, "tier": tier.name,
-            "policy": args.policy, "completed": m.completed,
+            "policy": args.policy, "devices": devices,
+            "links": args.links, "completed": m.completed,
             "throughput": round(m.throughput, 2), "switches": m.switches,
             "makespan_s": round(m.makespan, 2),
             "avg_latency_s": round(m.avg_latency, 4),
             "stall_s": round(m.stall_time, 3),
+            "placement": m.memory.get("placement", {}),
+            "pcie_links": {name: ch.get("wait_time_s")
+                           for name, ch in m.memory.get(
+                               "channels", {}).get("pcie_channels", {}).items()},
             "host_prefetch": m.memory.get("prefetch", {})}
 
 
@@ -424,9 +447,26 @@ def main(argv=None):
                     help="override the policy's prefetch behaviour: off | "
                          "device (pool overlap only) | all (+ disk->host "
                          "promotion); default: the policy's own setting")
+    ap.add_argument("--prefetch-trigger", default=None,
+                    choices=["exec", "queue"],
+                    help="when the cross-tier promotion fires: exec "
+                         "(upstream starts executing, default) | queue "
+                         "(upstream joins a queue — wider overlap window, "
+                         "more speculative SSD traffic)")
     ap.add_argument("--requests", type=int, default=2500)
     ap.add_argument("--executors", type=lambda s: tuple(map(int, s.split(","))),
-                    default=(3, 1), help="n_gpu,n_cpu")
+                    default=(3, 1), help="n_gpu,n_cpu (per device when "
+                                         "--devices > 1)")
+    ap.add_argument("--devices", type=int, default=1,
+                    help="sim mode: number of accelerator devices, each with "
+                         "its own pool behind the shared SSD")
+    ap.add_argument("--links", default="shared",
+                    choices=["shared", "per-device"],
+                    help="host->device channel layout: one PCIe link the "
+                         "whole fleet queues on, or one per accelerator")
+    ap.add_argument("--replication", type=int, default=0,
+                    help="planned device-pool copies of the hottest experts "
+                         "beyond the primary (0 = paper placement)")
     ap.add_argument("--out", default=None)
     # --- online-mode flags (repro.serve) ------------------------------- #
     ap.add_argument("--engine", default="sim", choices=["sim", "real"],
@@ -462,6 +502,16 @@ def main(argv=None):
 
     if args.tick <= 0:
         raise SystemExit(f"--tick must be positive, got {args.tick}")
+    if args.devices < 1:
+        raise SystemExit(f"--devices must be >= 1, got {args.devices}")
+    if args.replication < 0:
+        raise SystemExit(f"--replication must be >= 0, "
+                         f"got {args.replication}")
+    if args.mode != "sim" and (args.devices > 1 or args.links != "shared"
+                               or args.replication):
+        raise SystemExit("--devices/--links/--replication are --mode sim "
+                         "fleet knobs; online and real modes run the "
+                         "single-device shared-link topology")
     if args.mode == "online":
         result = run_online(args) if args.engine == "sim" \
             else run_online_real(args)

@@ -2,7 +2,8 @@
 
 The hierarchy the whole system reports against (paper §2.2, §4.3–4.4):
 
-  ``TierSpec`` / ``TierTopology``   device numbers + the shared SSD/PCIe links
+  ``TierSpec`` / ``TierTopology``   device numbers + the link graph (shared
+                                    SSD fan-in, per-device or shared PCIe)
   ``TransferChannel``               one contended link (FIFO bandwidth sharing)
   ``TransferEngine``                the single load-latency source of truth
   ``DevicePool`` / ``HostTier``     per-tier residency with pluggable eviction
@@ -16,13 +17,14 @@ from repro.memory.policies import (POLICY_NAMES, EvictionPolicy, EvictionView,
                                    make_policy)
 from repro.memory.prefetch import CrossTierPrefetcher, PrefetchConfig
 from repro.memory.residency import DevicePool, HostTier
-from repro.memory.tiers import (NUMA, TPU_V5E, UMA, Residency, TierSpec,
-                                TierTopology)
+from repro.memory.tiers import (LINK_MODES, NUMA, TPU_V5E, UMA, Residency,
+                                TierSpec, TierTopology)
 from repro.memory.transfer import (TransferEngine, predicted_host_load_latency,
                                    predicted_load_latency)
 
 __all__ = [
-    "Transfer", "TransferChannel", "MemoryHierarchy", "POLICY_NAMES",
+    "LINK_MODES", "Transfer", "TransferChannel", "MemoryHierarchy",
+    "POLICY_NAMES",
     "EvictionPolicy", "EvictionView", "make_policy", "CrossTierPrefetcher",
     "PrefetchConfig", "DevicePool", "HostTier", "NUMA", "TPU_V5E", "UMA",
     "Residency", "TierSpec", "TierTopology", "TransferEngine",

@@ -13,7 +13,7 @@ its device-budget accounting.
 """
 from __future__ import annotations
 
-from typing import TYPE_CHECKING, Dict, Mapping, Optional
+from typing import TYPE_CHECKING, Dict, Mapping, Optional, Sequence
 
 from repro.memory.channels import Transfer
 from repro.memory.prefetch import CrossTierPrefetcher, PrefetchConfig
@@ -29,10 +29,18 @@ class MemoryHierarchy:
     def __init__(self, coe: "CoEModel", tier: Optional[TierSpec],
                  pools: Mapping[str, int],
                  host_policy: str = "prob",
-                 prefetch: Optional[PrefetchConfig] = None):
+                 prefetch: Optional[PrefetchConfig] = None,
+                 links: str = "shared",
+                 link_groups: Optional[Sequence[str]] = None):
+        """``link_groups`` names the pool groups that get their own PCIe
+        channel in per-device mode (the accelerator pools — host/CPU pools
+        load over the SSD link only and must not conjure a phantom PCIe
+        channel). Defaults to every pool."""
         self.coe = coe
         self.spec = tier if tier is not None else TierSpec(name="default")
-        self.topology = TierTopology.from_spec(self.spec)
+        groups = list(pools) if link_groups is None else list(link_groups)
+        self.topology = TierTopology.from_spec(self.spec, groups=groups,
+                                               links=links)
         self.transfer = TransferEngine(self.topology)
         # UMA collapses the middle tier; tier=None (engine-supplied latency
         # models) keeps the seed's no-host-cache behaviour
@@ -86,14 +94,16 @@ class MemoryHierarchy:
     # ------------------------------------------------------------------ #
     # contended transfers (the simulator's actual loads)
     # ------------------------------------------------------------------ #
-    def begin_device_load(self, expert_id: str, now: float) -> Transfer:
-        """Move an expert into device memory over the shared links,
-        populating the host tier on the way through (NUMA)."""
+    def begin_device_load(self, expert_id: str, now: float,
+                          group: str = "") -> Transfer:
+        """Move an expert into device ``group``'s memory over the contended
+        links, populating the host tier on the way through (NUMA)."""
         mem = self.coe.spec(expert_id).mem_bytes
         in_host = self.in_host(expert_id)
         ready_at = self.host.ready_time(expert_id) if in_host else 0.0
         tr = self.transfer.begin_device_load(now, mem, in_host_cache=in_host,
-                                             host_ready_at=ready_at)
+                                             host_ready_at=ready_at,
+                                             group=group)
         self.prefetcher.note_device_load(expert_id, served_from_host=in_host)
         if self.host is not None:
             if in_host:
@@ -114,22 +124,64 @@ class MemoryHierarchy:
                 self.host.insert(expert_id, ready_at=tr.done))
         return tr
 
-    def load_backlog(self, expert_id: str, now: float) -> float:
-        """Queueing delay a device load issued now would face on its first
-        link (SSD for disk-sourced loads, PCIe for host hits)."""
-        if self.in_host(expert_id) and not self.spec.unified:
-            ch = self.topology.pcie_channel
+    def load_backlog(self, expert_id: str, now: float,
+                     group: str = "", device: str = "") -> float:
+        """Queueing delay a load into ``group`` issued now would face on its
+        first link: SSD for disk-sourced loads and for host/CPU executors
+        (whose loads are disk -> DRAM and never touch a PCIe channel), the
+        group's PCIe channel for device-bound host hits."""
+        if device not in ("host", "cpu") and self.in_host(expert_id) \
+                and not self.spec.unified:
+            ch = self.topology.pcie_for(group)
         else:
             ch = self.topology.disk_channel
         return max(0.0, ch.busy_until - now)
 
-    def speculation_ok(self, expert_id: str, now: float) -> bool:
+    def link_backlog(self, expert_id: str, now: float,
+                     group: str = "") -> float:
+        """Total queueing delay across every link a device load into
+        ``group`` would ride: host hits pay the group's PCIe queue alone,
+        disk-sourced loads pay the shared SSD fan-in and then the PCIe leg.
+        This is the contended-channel term of the scheduler's residency-aware
+        assignment cost — the same channels the TransferEngine charges and
+        the prefetcher gates on."""
+        def backlog(ch):
+            return max(0.0, ch.busy_until - now)
+        if self.spec.unified:
+            return backlog(self.topology.disk_channel)
+        if self.in_host(expert_id):
+            return backlog(self.topology.pcie_for(group))
+        return backlog(self.topology.disk_channel) \
+            + backlog(self.topology.pcie_for(group))
+
+    def assignment_cost(self, expert_id: str, now: float, group: str = "",
+                        device: str = "") -> float:
+        """Residency-aware expert-switch cost of assigning a request to an
+        executor on ``group``: the uncontended service time from the tier the
+        expert actually occupies (HOST vs DISK) plus the backlog of the
+        specific link(s) the load would ride. A disk->host promotion still
+        in flight delays the PCIe leg to its SSD-leg completion, so the wait
+        is the larger of the link backlog and that settle gap. Replaces the
+        executor-local ``load_latency`` guess in
+        ``RequestScheduler.additional_latency``."""
+        if device in ("host", "cpu"):
+            return self.predict_host_load(expert_id) + max(
+                0.0, self.topology.disk_channel.busy_until - now)
+        wait = self.link_backlog(expert_id, now, group)
+        if self.host is not None and self.in_host(expert_id) \
+                and not self.spec.unified:
+            # begin_device_load starts the PCIe leg at max(now, ready_at)
+            wait = max(wait, self.host.ready_time(expert_id) - now)
+        return self.predict_device_load(expert_id) + wait
+
+    def speculation_ok(self, expert_id: str, now: float,
+                       group: str = "", device: str = "") -> bool:
         """Whether an overlap-prefetch load (queued work issued early) may
         start now: the link's queue must be short enough that demand traffic
         issued a moment later is not pushed far back — shared FIFO channels
         have no priority classes, so issue order is priority. Disk->host
         promotion (pure speculation) uses the stricter ``max_backlog_s``."""
-        return self.load_backlog(expert_id, now) \
+        return self.load_backlog(expert_id, now, group, device) \
             <= self.prefetcher.config.overlap_backlog_s
 
     # ------------------------------------------------------------------ #
@@ -138,6 +190,12 @@ class MemoryHierarchy:
     def on_execute(self, expert_id: str, now: float):
         """An expert started executing: chance to prefetch its followers."""
         self.prefetcher.on_execute(expert_id, now)
+
+    def on_enqueue(self, expert_id: str, now: float):
+        """A request for this expert joined a queue (group formed but not yet
+        head): the queue-arrival prefetch trigger widens the overlap window
+        at the cost of more speculative SSD traffic."""
+        self.prefetcher.on_enqueue(expert_id, now)
 
     def note_evicted(self, expert_id: str):
         """A device-pool eviction demotes the expert to host DRAM (NUMA) —

@@ -22,6 +22,12 @@ if TYPE_CHECKING:  # pragma: no cover — repro.core imports this package
 @dataclasses.dataclass(frozen=True)
 class PrefetchConfig:
     enabled: bool = True
+    trigger: str = "exec"          # exec: promote when the upstream *starts
+    #                                executing* (narrow window, demand-certain)
+    #                                queue: promote when the upstream *joins a
+    #                                queue* (wider overlap window, more
+    #                                speculative SSD traffic — the downstream
+    #                                demand is further from certain)
     min_weight: float = 0.01       # skip edges below this likelihood
     max_per_trigger: int = 2       # SSD reads issued per upstream execution
     max_backlog_s: float = 0.25    # only promote while the SSD link's queue
@@ -39,10 +45,14 @@ class CrossTierPrefetcher:
     executes. Owned by ``MemoryHierarchy``; inert on UMA (no host tier)."""
 
     def __init__(self, coe: "CoEModel", hierarchy, config: PrefetchConfig):
+        if config.trigger not in ("exec", "queue"):
+            raise ValueError(f"unknown prefetch trigger {config.trigger!r} "
+                             "(expected 'exec' or 'queue')")
         self.coe = coe
         self.hierarchy = hierarchy
         self.config = config
         self.promotions = 0          # disk->host transfers issued
+        self.promoted_bytes = 0      # speculative SSD traffic those cost
         self.hits = 0                # device loads served from a promotion
         self.evicted_unused = 0      # promotions lost from host before use
         self._promoted: Set[str] = set()
@@ -65,7 +75,22 @@ class CrossTierPrefetcher:
 
     # ------------------------------------------------------------------ #
     def on_execute(self, upstream_id: str, now: float):
-        """Upstream expert starts executing: promote its likely followers."""
+        """Upstream expert starts executing: promote its likely followers.
+        Fires under both triggers — with ``trigger="queue"`` the window
+        *opens* at queue arrival, and execution start stays the last chance
+        for anything the backlog gate deferred."""
+        self._promote_followers(upstream_id, now)
+
+    def on_enqueue(self, upstream_id: str, now: float):
+        """Upstream expert joined a queue (group formed, not yet head): the
+        queue-arrival trigger widens the overlap window to start here,
+        buying more load/compute overlap per promotion but speculating
+        further ahead of demand — the queued group may sit for a while, or
+        the chain may never fire, so it costs more speculative SSD traffic."""
+        if self.config.trigger == "queue":
+            self._promote_followers(upstream_id, now)
+
+    def _promote_followers(self, upstream_id: str, now: float):
         h = self.hierarchy
         if not self.config.enabled or h.host is None:
             return
@@ -90,6 +115,7 @@ class CrossTierPrefetcher:
             self.note_host_evictions(evicted)
             if eid in h.host:
                 self.promotions += 1
+                self.promoted_bytes += mem
                 self._promoted.add(eid)
                 issued += 1
 
@@ -108,5 +134,7 @@ class CrossTierPrefetcher:
 
     def snapshot(self) -> dict:
         return {"promotions": self.promotions, "hits": self.hits,
+                "promoted_bytes": self.promoted_bytes,
+                "trigger": self.config.trigger,
                 "evicted_unused": self.evicted_unused,
                 "outstanding": len(self._promoted)}

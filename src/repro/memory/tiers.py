@@ -4,9 +4,12 @@ A CoE catalog does not fit in device memory, so every expert lives somewhere
 on a disk -> host DRAM -> device chain and serving is dominated by the
 traffic between those tiers. ``TierSpec`` carries the per-device numbers
 (bandwidths, fixed overheads, capacities); ``TierTopology`` instantiates the
-shared transfer links between the tiers (one SSD link, one PCIe-class link)
-so that *every* consumer — simulator, real engine, scheduler predictions,
-profiler — sees the same hierarchy instead of re-deriving pieces of it.
+transfer links between the tiers as a per-device graph: one SSD link that
+every device fans in on, and one PCIe/NVLink-class host->device channel per
+accelerator (``links="per-device"``) or one channel shared by the whole
+fleet (``links="shared"``, the single-board layout). Every consumer —
+simulator, real engine, scheduler predictions, profiler — sees the same
+graph instead of re-deriving pieces of it.
 
 UMA devices (the paper's Apple-M2-class board) collapse the middle tier:
 there is no separate host cache and loads go disk -> unified memory over the
@@ -24,8 +27,11 @@ from __future__ import annotations
 
 import dataclasses
 import enum
+from typing import Dict, Sequence
 
 from repro.memory.channels import TransferChannel
+
+LINK_MODES = ("shared", "per-device")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,25 +68,66 @@ class Residency(enum.Enum):
 
 @dataclasses.dataclass
 class TierTopology:
-    """The shared links of one physical storage hierarchy.
+    """The link graph of one physical storage hierarchy.
 
     ``disk_channel`` is the SSD link (disk -> host on NUMA, disk -> unified
-    memory on UMA); ``pcie_channel`` is the host -> device link (unused on
-    UMA). All executors of one system share these two channels — concurrent
-    transfers queue instead of each pretending it has the link to itself.
+    memory on UMA); every device pool fans in on it. ``pcie_channels`` are
+    the host -> device links (unused on UMA), keyed by device-pool group:
+    with ``links="shared"`` there is exactly one channel (the single-board
+    layout — every executor queues on it), with ``links="per-device"`` each
+    accelerator pool gets its own channel, so two devices can pull experts
+    from host DRAM concurrently while still contending on the one SSD.
+    Concurrent transfers on one channel queue instead of each pretending it
+    has the link to itself.
     """
     spec: TierSpec
     disk_channel: TransferChannel
-    pcie_channel: TransferChannel
+    pcie_channels: Dict[str, TransferChannel]
+    links: str = "shared"
+
+    SHARED_KEY = ""   # pcie_channels key of the fleet-wide link (shared mode)
 
     @classmethod
-    def from_spec(cls, spec: TierSpec) -> "TierTopology":
+    def from_spec(cls, spec: TierSpec, groups: Sequence[str] = (),
+                  links: str = "shared") -> "TierTopology":
+        if links not in LINK_MODES:
+            raise ValueError(f"unknown link mode {links!r} "
+                             f"(expected one of {LINK_MODES})")
+        if links == "per-device":
+            chans = {g: TransferChannel(f"{spec.name}/pcie[{g}]",
+                                        spec.host_to_device_bw)
+                     for g in groups}
+        else:
+            chans = {cls.SHARED_KEY: TransferChannel(
+                f"{spec.name}/pcie", spec.host_to_device_bw)}
         return cls(
             spec=spec,
             disk_channel=TransferChannel(f"{spec.name}/ssd", spec.disk_bw),
-            pcie_channel=TransferChannel(f"{spec.name}/pcie",
-                                         spec.host_to_device_bw),
+            pcie_channels=chans,
+            links=links,
         )
+
+    def pcie_for(self, group: str = "") -> TransferChannel:
+        """The host->device channel a load into ``group``'s pool rides.
+        Shared mode: the one fleet-wide link regardless of group. Per-device:
+        the group's own link (created on first use for late-added pools)."""
+        if self.links != "per-device":
+            return self.pcie_channels[self.SHARED_KEY]
+        ch = self.pcie_channels.get(group)
+        if ch is None:
+            ch = TransferChannel(f"{self.spec.name}/pcie[{group}]",
+                                 self.spec.host_to_device_bw)
+            self.pcie_channels[group] = ch
+        return ch
+
+    @property
+    def pcie_channel(self) -> TransferChannel:
+        """Single-link view (seed compat): the shared channel, or — per-device
+        mode — the first device's channel. Group-aware callers should use
+        ``pcie_for``."""
+        if not self.pcie_channels:
+            return self.pcie_for(self.SHARED_KEY)
+        return next(iter(self.pcie_channels.values()))
 
     @property
     def unified(self) -> bool:

@@ -57,27 +57,31 @@ class TransferEngine:
     # --- contended transfers (occupy the shared links) ------------------ #
     def begin_device_load(self, now: float, mem_bytes: int,
                           in_host_cache: bool,
-                          host_ready_at: float = 0.0) -> Transfer:
-        """Start moving an expert into device memory at ``now``.
+                          host_ready_at: float = 0.0,
+                          group: str = "") -> Transfer:
+        """Start moving an expert into device ``group``'s memory at ``now``.
 
         ``host_ready_at`` > now means a disk->host promotion of this expert
         is still in flight: the PCIe leg waits for it instead of re-reading
-        the disk (the promotion already owns the SSD link).
+        the disk (the promotion already owns the SSD link). ``group`` selects
+        the host->device channel (per-device link mode); the SSD fan-in is
+        always shared.
         """
         t = self.spec
         if t.unified:
             # single unified-memory link: the whole load rides the SSD channel
             return self.topology.disk_channel.begin(
                 now, mem_bytes, overhead=t.disk_overhead + t.host_overhead)
+        pcie = self.topology.pcie_for(group)
         if in_host_cache:
-            leg = self.topology.pcie_channel.begin(
+            leg = pcie.begin(
                 max(now, host_ready_at), mem_bytes, overhead=t.host_overhead)
             return Transfer(issued=now, start=leg.start, done=leg.done)
         # disk -> host -> device: the SSD leg then the PCIe leg, each
         # queueing on its own shared link
         disk_leg = self.topology.disk_channel.begin(
             now, mem_bytes, overhead=t.disk_overhead)
-        pcie_leg = self.topology.pcie_channel.begin(
+        pcie_leg = pcie.begin(
             disk_leg.done, mem_bytes, overhead=t.host_overhead)
         return Transfer(issued=now, start=disk_leg.start, done=pcie_leg.done,
                         host_landed=disk_leg.done)
@@ -94,5 +98,20 @@ class TransferEngine:
 
     # ------------------------------------------------------------------ #
     def snapshot(self) -> dict:
+        """Per-link stats. ``disk_channel``/``pcie_channel`` keep the PR 2
+        single-link keys (``pcie_channel`` aggregates across devices in
+        per-device mode so existing bench trajectories stay comparable);
+        ``pcie_channels`` breaks the host->device traffic out per link."""
+        per_link = {ch.name: ch.snapshot()
+                    for ch in self.topology.pcie_channels.values()}
+        agg = {"transfers": 0, "bytes_moved": 0,
+               "busy_time_s": 0.0, "wait_time_s": 0.0}
+        for snap in per_link.values():
+            for k in agg:
+                agg[k] += snap[k]
+        agg["busy_time_s"] = round(agg["busy_time_s"], 6)
+        agg["wait_time_s"] = round(agg["wait_time_s"], 6)
         return {"disk_channel": self.topology.disk_channel.snapshot(),
-                "pcie_channel": self.topology.pcie_channel.snapshot()}
+                "pcie_channel": agg,
+                "pcie_channels": per_link,
+                "links": self.topology.links}

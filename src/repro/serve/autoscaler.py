@@ -23,6 +23,14 @@ Because scaled executors share the same physical device pool, the fleet's
 total activation (batch) memory is held fixed and re-divided on every
 scaling action — more executors mean more parallel queues and load channels,
 not conjured memory.
+
+On a multi-device fleet the controller is topology-aware: scale-up targets
+the device pool with the highest queued-requests-per-executor (not a fixed
+``pool_group``), and every scaling action rebalances the system's
+``PlacementPlan`` — replication is re-planned with pools weighted by their
+new executor counts and the hottest missing replicas are pulled in through
+the contended load path — so placement follows capacity instead of staying
+frozen at construction.
 """
 from __future__ import annotations
 
@@ -44,6 +52,9 @@ class AutoscalerConfig:
     up_violation_rate: float = 0.10      # scale up above this SLO violation rate
     down_violation_rate: float = 0.01    # scale down only below this
     cooldown_s: float = 5.0              # min gap between scaling actions
+    fleet_aware: bool = True             # scale-up picks the hottest device
+    #                                      pool; actions rebalance placement
+    rebalance_loads: int = 4             # max replica loads per scale event
 
 
 @dataclasses.dataclass
@@ -67,30 +78,65 @@ class Autoscaler:
         self._last_action_t = -1e30
         self._last_violations = 0
         self._last_completed = 0
-        self._batch_budget: Optional[int] = None   # fixed activation region
+        self._batch_budgets: dict = {}             # fixed activation regions
+        self.placement_loads = 0                   # replica loads issued
 
     # ------------------------------------------------------------------ #
     def _pool_group(self) -> str:
         return self.config.spec.pool_group or self.config.spec.device
 
-    def _rebalance_batch(self, sim):
+    def _target_group(self, sim) -> str:
+        """Which device pool a scale-up lands on: the spec's own group, or —
+        fleet-aware — the compatible pool with the highest queued requests
+        per executor (ties to the spec's group), so capacity goes where the
+        backlog is."""
+        base = self._pool_group()
+        if not self.config.fleet_aware:
+            return base
+        kind = self.config.spec.device
+        membership = getattr(sim.system, "pool_devices", {})
+        cands = [g for g, dev in membership.items() if dev == kind] or [base]
+        per_group: dict = {g: [0, 0] for g in cands}     # [queued, execs]
+        for e in sim.system.live_executors():
+            if e.pool.group in per_group:
+                per_group[e.pool.group][0] += e.queued_requests()
+                per_group[e.pool.group][1] += 1
+        return max(cands, key=lambda g: (
+            per_group[g][0] / max(1, per_group[g][1]), g == base))
+
+    def _rebalance_batch(self, sim, group: str):
         """The modeled device's activation region is fixed: adding executors
         must split it, not mint new memory. The budget is the memory
         hierarchy's construction-time activation accounting for this pool
         group (expert-pool bytes stay with the shared DevicePool); re-divide
         it across all live executors on the scaled pool."""
-        group = self._pool_group()
         peers = [e for e in sim.system.live_executors()
                  if e.pool.group == group]
         if not peers:
             return
-        if self._batch_budget is None:
+        if group not in self._batch_budgets:
             hierarchy = getattr(sim.system, "hierarchy", None)
             budget = hierarchy.batch_budget(group) if hierarchy else 0
-            self._batch_budget = budget or sum(e.batch_bytes for e in peers)
-        share = self._batch_budget // len(peers)
+            self._batch_budgets[group] = \
+                budget or sum(e.batch_bytes for e in peers)
+        share = self._batch_budgets[group] // len(peers)
         for e in peers:
             e.batch_bytes = share
+
+    def _rebalance_placement(self, sim, now: float):
+        """Scale events rebalance the PlacementPlan, not just batch budgets:
+        replication follows the fleet's new shape and the issued replica
+        loads get their LOAD_DONE events like any other transfer."""
+        if not self.config.fleet_aware:
+            return
+        rebalance = getattr(sim.system, "rebalance_placement", None)
+        if rebalance is None:
+            return
+        from repro.core.simulator import LOAD_DONE
+        for ex, eid, done in rebalance(now,
+                                       max_loads=self.config.rebalance_loads):
+            self.placement_loads += 1
+            sim.push(done, LOAD_DONE, (ex, eid))
 
     # ------------------------------------------------------------------ #
     def _window_violation_rate(self) -> float:
@@ -119,15 +165,19 @@ class Autoscaler:
         if n < cfg.max_executors and (
                 pressure > cfg.up_queue_per_executor
                 or vrate > cfg.up_violation_rate):
-            self._rebalance_batch(sim)   # snapshot the budget pre-growth
-            ex = sim.system.add_executor(cfg.spec)
-            self._rebalance_batch(sim)
+            group = self._target_group(sim)
+            spec = cfg.spec if group == self._pool_group() \
+                else dataclasses.replace(cfg.spec, pool_group=group)
+            self._rebalance_batch(sim, group)   # snapshot budget pre-growth
+            ex = sim.system.add_executor(spec)
+            self._rebalance_batch(sim, group)
             self._scaled_ids.append(ex.id)
             self._last_action_t = now
             reason = (f"queue_pressure={pressure:.1f}"
                       if pressure > cfg.up_queue_per_executor
                       else f"violation_rate={vrate:.3f}")
             self.events.append(ScaleEvent(now, "up", ex.id, reason, n + 1))
+            self._rebalance_placement(sim, now)
             return
 
         if n > cfg.min_executors and self._scaled_ids \
@@ -136,18 +186,20 @@ class Autoscaler:
             victim = self._pick_victim(sim)
             if victim is None:
                 return
+            victim_group = victim.pool.group
             from repro.core.simulator import ARRIVAL
             orphans = sim.system.fail_executor(victim, now)
             for r in orphans:
                 sim.push(now, ARRIVAL, r)    # re-queue, like the failure path
             for peer in sim.system.live_executors():
                 sim.kick(peer, now)
-            self._rebalance_batch(sim)
+            self._rebalance_batch(sim, victim_group)
             self._scaled_ids.remove(victim.id)
             self._last_action_t = now
             self.events.append(ScaleEvent(
                 now, "down", victim.id,
                 f"queue_pressure={pressure:.1f}", n - 1))
+            self._rebalance_placement(sim, now)
 
     def _pick_victim(self, sim):
         """Emptiest scaled-up executor (cheapest drain); never the baseline
@@ -165,5 +217,6 @@ class Autoscaler:
             "actions": len(self.events),
             "scale_ups": sum(1 for e in self.events if e.action == "up"),
             "scale_downs": sum(1 for e in self.events if e.action == "down"),
+            "placement_loads": self.placement_loads,
             "events": [dataclasses.asdict(e) for e in self.events],
         }

@@ -1,0 +1,524 @@
+"""Device-fleet topology tests: per-device links, explicit placement /
+replication, residency-aware assignment, and the queue-arrival prefetch
+trigger (integration with the tiered-memory subsystem)."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (COSERVE, CoEModel, CoServeSystem, ExpertSpec, Request,
+                        RoutingModule, Simulation)
+from repro.core.profiler import ArchProfile, DeviceProfile
+from repro.core.serving import ExecutorSpec
+from repro.core.workload import (BoardSpec, build_board_coe, device_profile,
+                                 make_executor_specs, make_task_requests)
+from repro.fleet import (FleetSpec, PlacementPlan, build_fleet,
+                         validate_pool_groups)
+from repro.memory import NUMA, TierSpec, TierTopology
+
+MB = 1 << 20
+
+FLEET_TIER = TierSpec(name="ft", disk_bw=2000e6, host_to_device_bw=3e9,
+                      unified=False, host_cache_bytes=8 << 30,
+                      device_bytes=2 << 30)
+
+
+def make_coe(n_experts=12, seed=0, mem_bytes=100 * MB):
+    rng = np.random.RandomState(seed)
+    experts = [ExpertSpec(id=f"e{i:03d}", arch="resnet101",
+                          mem_bytes=mem_bytes,
+                          usage_prob=float(rng.rand()))
+               for i in range(n_experts)]
+    return CoEModel(experts, RoutingModule(lambda d: "e000"))
+
+
+# --------------------------------------------------------------------------- #
+# fleet builder
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("tier", [NUMA, FLEET_TIER], ids=lambda t: t.name)
+def test_build_fleet_single_device_matches_seed_layout(tier):
+    """One device must reproduce make_executor_specs exactly: the fleet
+    subsystem cannot silently move the paper-reproduction trajectory."""
+    want_pools, want_specs = make_executor_specs(tier, 3, 1)
+    pools, specs = build_fleet(
+        tier, FleetSpec(n_devices=1, gpu_per_device=3, n_cpu=1))
+    assert pools == want_pools
+    assert len(specs) == len(want_specs)
+    for got, want in zip(specs, want_specs):
+        assert (got.device, got.batch_bytes, got.pool_group) == \
+            (want.device, want.batch_bytes, want.pool_group)
+
+
+def test_build_fleet_multi_device_pools_and_links():
+    fleet = FleetSpec(n_devices=4, gpu_per_device=2, n_cpu=0,
+                      links="per-device")
+    pools, specs = build_fleet(FLEET_TIER, fleet)
+    assert sorted(pools) == ["gpu0", "gpu1", "gpu2", "gpu3"]
+    assert len(specs) == 8
+    # every device owns its own full pool (not a split of one device)
+    assert len(set(pools.values())) == 1
+    assert pools["gpu0"] == int(FLEET_TIER.device_bytes * 0.75)
+
+
+def test_fleet_spec_validation():
+    with pytest.raises(ValueError):
+        FleetSpec(n_devices=0)
+    with pytest.raises(ValueError):
+        FleetSpec(links="ring")
+
+
+# --------------------------------------------------------------------------- #
+# pool-group device-kind validation (satellite)
+# --------------------------------------------------------------------------- #
+
+def test_conflicting_device_kinds_on_one_pool_rejected():
+    prof_gpu = device_profile("gpu", NUMA)
+    prof_cpu = device_profile("cpu", NUMA)
+    specs = [ExecutorSpec("gpu", prof_gpu, 256 * MB, "gpu"),
+             ExecutorSpec("cpu", prof_cpu, 256 * MB, "gpu")]
+    with pytest.raises(ValueError, match="conflicting"):
+        validate_pool_groups(specs)
+    coe = make_coe()
+    with pytest.raises(ValueError, match="conflicting"):
+        CoServeSystem(coe, specs, {"gpu": 1 << 30}, policy=COSERVE, tier=NUMA)
+
+
+def test_add_executor_validates_pool_membership():
+    coe = make_coe()
+    prof = device_profile("gpu", NUMA)
+    system = CoServeSystem(coe, [ExecutorSpec("gpu", prof, 256 * MB, "gpu")],
+                           {"gpu": 1 << 30}, policy=COSERVE, tier=NUMA)
+    cpu_prof = device_profile("cpu", NUMA)
+    with pytest.raises(ValueError):
+        system.add_executor(ExecutorSpec("cpu", cpu_prof, 256 * MB, "gpu"))
+
+
+def test_pool_membership_surfaced_in_metrics():
+    board = BoardSpec(name="T", n_components=20, n_active=12,
+                      n_detection=4)
+    coe = build_board_coe(board)
+    pools, specs = make_executor_specs(NUMA, 2, 1)
+    system = CoServeSystem(coe, specs, pools, policy=COSERVE, tier=NUMA)
+    sim = Simulation(system)
+    sim.submit(make_task_requests(board, 50))
+    m = sim.run()
+    assert m.memory["pool_devices"] == {"gpu": "gpu", "cpu": "cpu"}
+    assert "placement" in m.memory
+    assert m.memory["placement"]["placed"] > 0
+
+
+# --------------------------------------------------------------------------- #
+# placement plan
+# --------------------------------------------------------------------------- #
+
+def test_placement_plan_matches_legacy_round_robin_sweep():
+    """replication=0 must reproduce the seed's _initial_placement loop
+    bit-for-bit (same pools, same order)."""
+    coe = make_coe(n_experts=20, seed=3)
+    capacities = {"gpu0": 400 * MB, "gpu1": 350 * MB, "cpu": 250 * MB}
+    plan = PlacementPlan.build(coe, capacities)
+    # replay the seed's loop
+    pools = list(capacities)
+    free = dict(capacities)
+    want = []
+    i = 0
+    for spec in coe.by_usage():
+        for j in range(len(pools)):
+            g = pools[(i + j) % len(pools)]
+            if spec.mem_bytes <= free[g]:
+                want.append((spec.id, g))
+                free[g] -= spec.mem_bytes
+                i = (i + j + 1) % len(pools)
+                break
+    assert plan.layout() == want
+    for eid, g in want:
+        assert plan.pools_for(eid) == (g,)
+        assert plan.replica_count(eid) == 0
+
+
+def test_system_pools_match_plan_layout():
+    """CoServeSystem's warm pools must hold exactly what the plan says."""
+    coe = make_coe(n_experts=20, seed=5)
+    prof = device_profile("gpu", NUMA)
+    pools = {"gpu0": 500 * MB, "gpu1": 500 * MB}
+    specs = [ExecutorSpec("gpu", prof, 128 * MB, g) for g in pools]
+    system = CoServeSystem(coe, specs, pools, policy=COSERVE, tier=NUMA)
+    for g, pool in system.pools.items():
+        assert set(pool.resident) == set(system.placement.planned(g))
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_placement_replicas_respect_capacity_random(seed):
+    """Seeded-random invariants: planned bytes never exceed any pool's
+    capacity, replicas land on distinct pools, and no expert exceeds its
+    replication budget."""
+    rng = np.random.RandomState(seed)
+    coe = make_coe(n_experts=int(rng.randint(10, 40)), seed=seed,
+                   mem_bytes=int(rng.randint(30, 150)) * MB)
+    n_pools = int(rng.randint(1, 6))
+    capacities = {f"g{p}": int(rng.randint(100, 1200)) * MB
+                  for p in range(n_pools)}
+    replication = int(rng.randint(0, 4))
+    frac = float(rng.uniform(0.05, 0.5))
+    plan = PlacementPlan.build(coe, capacities, replication=replication,
+                               replica_fraction=frac)
+    plan.validate()
+    for g, cap in capacities.items():
+        assert plan.planned_bytes(g) <= cap
+        placed = plan.planned(g)
+        assert len(placed) == len(set(placed))       # no dup copies per pool
+    for eid in coe.experts:
+        pools_ = plan.pools_for(eid)
+        assert len(set(pools_)) == len(pools_)
+        assert plan.replica_count(eid) <= replication
+    # rebalance must keep every invariant too
+    plan.rebalance({g: float(rng.rand()) for g in capacities})
+    plan.validate()
+    for g, cap in capacities.items():
+        assert plan.planned_bytes(g) <= cap
+
+
+def test_replication_places_hottest_first():
+    coe = make_coe(n_experts=10, seed=1)
+    capacities = {"a": 300 * MB, "b": 300 * MB}
+    plan = PlacementPlan.build(coe, capacities, replication=1,
+                               replica_fraction=0.5)
+    hottest = coe.by_usage()[0].id
+    assert plan.replica_count(hottest) == 1
+    assert len(plan.pools_for(hottest)) == 2
+
+
+# --------------------------------------------------------------------------- #
+# per-device links
+# --------------------------------------------------------------------------- #
+
+def test_topology_link_modes():
+    t_shared = TierTopology.from_spec(NUMA, groups=["gpu0", "gpu1"],
+                                      links="shared")
+    assert t_shared.pcie_for("gpu0") is t_shared.pcie_for("gpu1")
+    t_per = TierTopology.from_spec(NUMA, groups=["gpu0", "gpu1"],
+                                   links="per-device")
+    assert t_per.pcie_for("gpu0") is not t_per.pcie_for("gpu1")
+    # seed-compat single-link view still answers
+    assert t_per.pcie_channel is not None
+    with pytest.raises(ValueError):
+        TierTopology.from_spec(NUMA, links="mesh")
+
+
+def test_per_device_links_reduce_pcie_wait():
+    """Same fleet + workload: splitting the PCIe link per device must not
+    increase total host->device queueing, and under contention reduces it."""
+    board = BoardSpec(name="T", n_components=60, n_active=40,
+                      avg_quantity=2.0, n_detection=8, zipf_s=1.4)
+
+    def run(links):
+        coe = build_board_coe(board)
+        fleet = FleetSpec(n_devices=2, gpu_per_device=2, n_cpu=0, links=links)
+        pools, specs = build_fleet(FLEET_TIER, fleet)
+        system = CoServeSystem(coe, specs, pools, policy=COSERVE,
+                               tier=FLEET_TIER, links=links)
+        sim = Simulation(system)
+        sim.submit(make_task_requests(board, 300))
+        return sim.run()
+
+    shared = run("shared")
+    per_dev = run("per-device")
+    w_shared = shared.memory["channels"]["pcie_channel"]["wait_time_s"]
+    w_per = per_dev.memory["channels"]["pcie_channel"]["wait_time_s"]
+    assert w_shared > 0.0               # the workload contends at all
+    assert w_per < w_shared
+    # per-link breakdown is reported, one channel per device pool
+    assert len(per_dev.memory["channels"]["pcie_channels"]) == 2
+    assert len(shared.memory["channels"]["pcie_channels"]) == 1
+
+
+# --------------------------------------------------------------------------- #
+# residency-aware assignment
+# --------------------------------------------------------------------------- #
+
+def _two_device_system():
+    """Two single-executor devices with per-device links and a tiny CoE."""
+    experts = [
+        ExpertSpec(id="hot", arch="a", mem_bytes=100 * MB, usage_prob=0.9),
+        ExpertSpec(id="warm", arch="a", mem_bytes=100 * MB, usage_prob=0.5),
+        ExpertSpec(id="filler", arch="a", mem_bytes=100 * MB, usage_prob=0.1),
+    ]
+    coe = CoEModel(experts, RoutingModule(lambda d: "hot"))
+    arch = ArchProfile(arch="a", k=0.005, b=0.02, max_batch=8,
+                       mem_bytes=100 * MB, act_bytes_per_item=MB,
+                       load_latency_host=0.05, load_latency_disk=0.3)
+    prof = DeviceProfile(device="gpu", tier=FLEET_TIER,
+                         arch_profiles={"a": arch})
+    pools = {"gpu0": 220 * MB, "gpu1": 220 * MB}
+    specs = [ExecutorSpec("gpu", prof, 64 * MB, "gpu0"),
+             ExecutorSpec("gpu", prof, 64 * MB, "gpu1")]
+    system = CoServeSystem(coe, specs, pools, policy=COSERVE,
+                           tier=FLEET_TIER, links="per-device")
+    return system, coe
+
+
+def test_scheduler_prefers_replica_holder_over_backlogged_link():
+    """The satellite acceptance scenario: executor B holds the expert;
+    executor A has the shorter queue but would have to load over a
+    backlogged link. Residency-aware assignment must pick B once the link
+    backlog makes the load dominate — and A when the links are idle."""
+    system, coe = _two_device_system()
+    ex_a, ex_b = system.executors
+    # place the expert on B's pool only
+    for pool in system.pools.values():
+        for eid in list(pool.resident):
+            pool.remove(eid)
+    ex_b.pool.add("hot")
+    ex_b.pool.ready.add("hot")
+    # B has queued work; A is empty (cheaper queue)
+    from repro.core.scheduler import Group
+    ex_b.queue.append(Group("warm", [Request(id=1, expert_id="warm",
+                                             arrival_time=0.0)]))
+
+    # idle links: A pays one load but no queueing — the makespan argmin
+    # takes the empty executor
+    req = Request(id=2, expert_id="hot", arrival_time=0.0)
+    assert system.scheduler._assign_makespan(req, 0.0) is ex_a
+
+    # congest A's own link well past the load cost: the backlog now
+    # dominates and the replica holder wins despite its deeper queue
+    system.hierarchy.topology.pcie_for("gpu0").busy_until = 30.0
+    system.hierarchy.topology.disk_channel.busy_until = 30.0
+    req2 = Request(id=3, expert_id="hot", arrival_time=0.0)
+    assert system.scheduler._assign_makespan(req2, 0.0) is ex_b
+
+
+def test_switch_cost_charges_remaining_inflight_load():
+    system, coe = _two_device_system()
+    ex_a = system.executors[0]
+    pool = ex_a.pool
+    for eid in list(pool.resident):
+        pool.remove(eid)
+    pool.add("hot")
+    pool.loading["hot"] = 2.0           # transfer lands at t=2
+    sched = system.scheduler
+    assert sched.switch_cost(ex_a, "hot", now=1.5) == pytest.approx(0.5)
+    pool.loading.pop("hot")
+    pool.ready.add("hot")
+    assert sched.switch_cost(ex_a, "hot", now=1.5) == 0.0
+
+
+# --------------------------------------------------------------------------- #
+# prefetch trigger (satellite)
+# --------------------------------------------------------------------------- #
+
+def _chain_coe():
+    experts = [
+        ExpertSpec(id="up", arch="a", mem_bytes=50 * MB, usage_prob=0.9),
+        ExpertSpec(id="down", arch="a", mem_bytes=50 * MB,
+                   depends_on=("up",), usage_prob=0.5),
+    ]
+    routing = RoutingModule(lambda d: "up",
+                            chain_prob={"up": {"down": 0.9}})
+    return CoEModel(experts, routing)
+
+
+def test_queue_trigger_promotes_on_enqueue():
+    from repro.memory import MemoryHierarchy, PrefetchConfig, Residency
+    coe = _chain_coe()
+    h = MemoryHierarchy(coe, NUMA, pools={"gpu": 200 * MB},
+                        prefetch=PrefetchConfig(enabled=True,
+                                                trigger="queue"))
+    h.on_enqueue("up", now=0.0)
+    assert h.residency("down") is Residency.HOST
+    assert h.prefetcher.promotions == 1
+    assert h.prefetcher.promoted_bytes == coe.spec("down").mem_bytes
+
+
+def test_exec_trigger_ignores_enqueue():
+    from repro.memory import MemoryHierarchy, PrefetchConfig, Residency
+    coe = _chain_coe()
+    h = MemoryHierarchy(coe, NUMA, pools={"gpu": 200 * MB},
+                        prefetch=PrefetchConfig(enabled=True, trigger="exec"))
+    h.on_enqueue("up", now=0.0)
+    assert h.residency("down") is Residency.DISK
+    h.on_execute("up", now=0.0)
+    assert h.residency("down") is Residency.HOST
+
+
+def test_unknown_trigger_rejected():
+    from repro.memory import MemoryHierarchy, PrefetchConfig
+    with pytest.raises(ValueError, match="trigger"):
+        MemoryHierarchy(_chain_coe(), NUMA, pools={},
+                        prefetch=PrefetchConfig(enabled=True,
+                                                trigger="arrival"))
+
+
+def test_queue_trigger_end_to_end_widens_promotion_window():
+    """On the detector-spill workload the queue-arrival trigger issues at
+    least as much speculative promotion traffic as execution-start (it opens
+    the same window earlier), and the delta is observable."""
+    board = BoardSpec(name="T", n_components=60, n_active=16,
+                      avg_quantity=4.0, n_detection=16,
+                      detection_fraction=1.0, ok_prob=0.98, zipf_s=0.8)
+    tier = TierSpec(name="t", disk_bw=530e6, host_to_device_bw=12e9,
+                    unified=False, host_cache_bytes=4 << 30,
+                    device_bytes=4 << 30)
+
+    def run(trigger):
+        coe = build_board_coe(board)
+        pools, specs = make_executor_specs(tier, 2, 0)
+        policy = dataclasses.replace(COSERVE, prefetch_trigger=trigger)
+        system = CoServeSystem(coe, specs, pools, policy=policy, tier=tier)
+        sim = Simulation(system)
+        sim.submit(make_task_requests(board, 400))
+        return sim.run()
+
+    m_exec = run("exec")
+    m_queue = run("queue")
+    b_exec = m_exec.memory["prefetch"]["promoted_bytes"]
+    b_queue = m_queue.memory["prefetch"]["promoted_bytes"]
+    assert b_queue >= b_exec
+    assert m_queue.memory["prefetch"]["trigger"] == "queue"
+
+
+# --------------------------------------------------------------------------- #
+# real engine topology agreement
+# --------------------------------------------------------------------------- #
+
+def test_real_engine_one_transfer_thread_per_pcie_channel():
+    from repro.core.engines import HostStore, RealEngine
+
+    coe = make_coe(n_experts=4)
+    engine = RealEngine(coe, HostStore(), apply_fns={})
+    topo = TierTopology.from_spec(FLEET_TIER, groups=["gpu0", "gpu1"],
+                                  links="per-device")
+    engine.bind_topology(topo)
+
+    class _Pool:
+        def __init__(self, group):
+            self.group = group
+
+    class _Ex:
+        def __init__(self, group):
+            self.pool = _Pool(group)
+
+        @property
+        def link_group(self):
+            return self.pool.group
+
+    a, b = _Ex("gpu0"), _Ex("gpu1")
+    assert engine._channel_name(a) != engine._channel_name(b)
+    assert engine._worker_for(engine._channel_name(a)) \
+        is not engine._worker_for(engine._channel_name(b))
+    # shared mode: both executors serialize on one worker (the seed thread)
+    shared = TierTopology.from_spec(FLEET_TIER, groups=["gpu0", "gpu1"],
+                                    links="shared")
+    engine2 = RealEngine(coe, HostStore(), apply_fns={})
+    engine2.bind_topology(shared)
+    assert engine2._channel_name(a) == engine2._channel_name(b)
+    # unified tiers ride the one storage link regardless of pool
+    uni = TierTopology.from_spec(
+        TierSpec(name="u", unified=True), groups=["gpu0", "gpu1"],
+        links="per-device")
+    engine3 = RealEngine(coe, HostStore(), apply_fns={})
+    engine3.bind_topology(uni)
+    assert engine3._channel_name(a) == engine3._channel_name(b)
+
+
+# --------------------------------------------------------------------------- #
+# autoscaler placement rebalance
+# --------------------------------------------------------------------------- #
+
+def test_scale_event_rebalances_placement():
+    """A scale-up must re-plan replication (rebalances counter) and pull
+    planned-but-missing replicas through the contended load path."""
+    from repro.serve import Autoscaler, AutoscalerConfig
+
+    board = BoardSpec(name="T", n_components=40, n_active=24,
+                      avg_quantity=2.0, n_detection=6, zipf_s=1.8)
+    coe = build_board_coe(board)
+    fleet = FleetSpec(n_devices=2, gpu_per_device=1, n_cpu=0,
+                      links="per-device")
+    pools, specs = build_fleet(FLEET_TIER, fleet)
+    system = CoServeSystem(coe, specs, pools, policy=COSERVE,
+                           tier=FLEET_TIER, links="per-device",
+                           replication=1)
+    asc = Autoscaler(AutoscalerConfig(
+        spec=specs[0], min_executors=2, max_executors=4,
+        up_queue_per_executor=1.0, cooldown_s=0.0))
+    sim = Simulation(system)
+    sim.submit(make_task_requests(board, 400, interval=0.001))
+    sim.add_ticker(0.25, asc.step)
+    m = sim.run()
+    assert m.completed >= 400
+    ups = [e for e in asc.events if e.action == "up"]
+    assert ups, "the overloaded queue must trigger a scale-up"
+    assert system.placement.rebalances >= len(asc.events)
+
+
+def test_cpu_speculation_gates_on_disk_not_phantom_pcie():
+    """CPU executors load disk -> DRAM: their backlog gate must read the SSD
+    link, and must not conjure an unused per-device 'pcie[cpu]' channel."""
+    from repro.memory import MemoryHierarchy
+
+    coe = make_coe(n_experts=4)
+    h = MemoryHierarchy(coe, FLEET_TIER, pools={"gpu0": 1 << 30,
+                                                "cpu": 1 << 30},
+                        links="per-device")
+    h.host.insert("e000")               # host hit: a GPU load would ride PCIe
+    h.topology.disk_channel.busy_until = 50.0
+    assert h.load_backlog("e000", now=0.0, group="cpu", device="cpu") \
+        == pytest.approx(50.0)
+    assert not h.speculation_ok("e000", 0.0, "cpu", "cpu")
+    # the GPU path still prices its own (idle) link for the host hit
+    assert h.load_backlog("e000", now=0.0, group="gpu0") == 0.0
+    # and a full system never conjures a 'pcie[cpu]' channel: only device
+    # pools own links
+    board = BoardSpec(name="T", n_components=20, n_active=12, n_detection=4)
+    coe2 = build_board_coe(board)
+    pools, specs = make_executor_specs(FLEET_TIER, 2, 1)
+    system = CoServeSystem(coe2, specs, pools, policy=COSERVE,
+                           tier=FLEET_TIER, links="per-device")
+    sim = Simulation(system)
+    sim.submit(make_task_requests(board, 60))
+    m = sim.run()
+    names = set(m.memory["channels"]["pcie_channels"])
+    assert names == {"ft/pcie[gpu]"}
+
+
+def test_fleet_aware_scale_up_tie_prefers_spec_group():
+    """Equal queue pressure everywhere: the scale-up must land on the
+    spec's own pool group, not an arbitrary other device."""
+    from repro.serve import Autoscaler, AutoscalerConfig
+
+    system, coe = _two_device_system()
+    asc = Autoscaler(AutoscalerConfig(
+        spec=ExecutorSpec("gpu", system.executors[0].device_profile,
+                          64 * MB, "gpu1")))
+
+    class _Sim:
+        pass
+    sim = _Sim()
+    sim.system = system
+    assert asc._target_group(sim) == "gpu1"
+
+
+def test_fleet_aware_scale_up_targets_hottest_pool():
+    """With one pool drowning and the other idle, the fleet-aware scale-up
+    must land its executor on the drowning pool."""
+    from repro.serve import Autoscaler, AutoscalerConfig
+
+    system, coe = _two_device_system()
+    ex_a, ex_b = system.executors
+    asc = Autoscaler(AutoscalerConfig(
+        spec=ExecutorSpec("gpu", ex_a.device_profile, 64 * MB, "gpu0"),
+        min_executors=2, max_executors=3,
+        up_queue_per_executor=0.5, cooldown_s=0.0))
+    sim = Simulation(system)
+    # drown B's queue (expert resident there), leave A idle
+    for i in range(40):
+        sim.push(0.0, 0, Request(id=i, expert_id="hot", arrival_time=0.0))
+    sim.add_ticker(0.05, asc.step)
+    sim.run()
+    ups = [e for e in asc.events if e.action == "up"]
+    assert ups
+    scaled = next(e for e in system.executors if e.id == ups[0].executor_id)
+    assert scaled.pool.group == "gpu1"   # the drowning device, not the
+    #                                      spec's default gpu0
