@@ -1,0 +1,215 @@
+"""Placement benchmark: cost-model search vs greedy sweep + peer replication.
+
+Two questions, one suite (key ``placement`` in benchmarks.run, emits
+``BENCH_placement.json``):
+
+1. Does the cost-model placement search (``repro.fleet.search``) beat the
+   greedy hot-first sweep on a traced multi-tenant fleet workload? Two
+   tenants share a 4-device fleet, and — the realistic part — the system
+   was *provisioned* for equal tenants (the CoE's pre-assessed P(use) is
+   built with uniform tenant weights) while the actual traffic is 8:1
+   skewed toward the Zipf-heavy board. The greedy sweep places by the
+   stale static priors; the search replays a trace of the real request
+   stream (expected routing chains included) through
+   ``MemoryHierarchy.assignment_cost`` and fixes the layout. Reported both
+   ways: the replay's own assignment-cost delta AND a full simulation of
+   each plan (throughput / stall / switches), so the cost model is checked
+   against the ground truth it approximates.
+
+2. Does peer-link replication materialize replicas cheaper than a host-DRAM
+   reload at 4 devices? The autoscaler's actual path
+   (``CoServeSystem.rebalance_placement``) pulls planned replicas onto their
+   pools with the peer fabric off (host -> device over PCIe) vs on
+   (pool -> pool at NVLink-class bandwidth); the total stall (issue ->
+   LOAD_DONE) is compared.
+
+The workload is host-resident (loads are PCIe-leg bound, the regime where
+placement and link layout matter) with Zipf-heavy tenants so the head of
+the distribution rewards replication.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import json
+
+from repro.core import COSERVE, CoServeSystem, Simulation
+from repro.core.workload import BoardSpec
+from repro.fleet import (FleetSpec, PlacementPlan, SearchConfig, build_fleet,
+                         search_placement, trace_from_requests,
+                         validate_pool_groups)
+from repro.memory import TierSpec
+from repro.serve import TenantSpec, build_multi_board_coe, multi_tenant_stream
+
+OUT_PATH = "BENCH_placement.json"
+
+# two product lines: a Zipf-heavy high-rate tenant (replication's best case)
+# and a flatter low-rate one competing for the same pools
+BOARD_HOT = BoardSpec(name="PH", n_components=120, n_active=90,
+                      avg_quantity=1.5, n_detection=10, zipf_s=2.2)
+BOARD_FLAT = BoardSpec(name="PF", n_components=80, n_active=50,
+                       avg_quantity=1.5, n_detection=8, zipf_s=1.1)
+
+# host DRAM holds the whole ~38 GB catalog; modest PCIe so the switch path
+# (and therefore placement) is what the suite measures
+TIER = TierSpec(name="placement_numa", disk_bw=2000e6, host_to_device_bw=3e9,
+                unified=False, host_cache_bytes=48 << 30,
+                device_bytes=4 << 30)
+
+DEVICES = 4
+GPU_PER_DEVICE = 3
+PEER_BW = 50e9            # NVLink/ICI-class pool->pool fabric
+LINKS = "per-device"
+
+
+def _tenants(seed: int = 0):
+    return [TenantSpec(name="gold", board=BOARD_HOT, rate=400.0,
+                       request_class="scan", slo_seconds=2.0, seed=seed),
+            TenantSpec(name="batch", board=BOARD_FLAT, rate=50.0,
+                       request_class="random", slo_seconds=8.0,
+                       seed=seed + 1)]
+
+
+def _coe():
+    """The catalog as *provisioned*: equal tenant weights — the stale
+    static assumption the searched plan corrects from the traffic trace."""
+    return build_multi_board_coe([BOARD_HOT, BOARD_FLAT], weights=[1.0, 1.0])
+
+
+def _requests(n: int):
+    return list(itertools.islice(multi_tenant_stream(_tenants(), n), n))
+
+
+def _fleet_layout(tier):
+    fleet = FleetSpec(n_devices=DEVICES, gpu_per_device=GPU_PER_DEVICE,
+                      n_cpu=0, links=LINKS)
+    return build_fleet(tier, fleet)
+
+
+def _simulate(coe, n_requests: int, placement=None):
+    pools, specs = _fleet_layout(TIER)
+    system = CoServeSystem(coe, specs, pools, policy=COSERVE, tier=TIER,
+                           links=LINKS, placement=placement)
+    sim = Simulation(system)
+    sim.submit(_requests(n_requests))
+    return sim.run()
+
+
+def _row(m) -> dict:
+    return {"completed": m.completed,
+            "throughput_rps": round(m.throughput, 3),
+            "switches": m.switches,
+            "p99_s": round(m.p99_latency, 4),
+            "stall_s": round(m.stall_time, 3),
+            "replicas": m.memory["placement"]["replicas"]}
+
+
+def _search_vs_greedy(n_requests: int, trace_len: int, iterations: int) -> dict:
+    coe = _coe()
+    pools, specs = _fleet_layout(TIER)
+    greedy = PlacementPlan.build(coe, pools, replication=1)
+    trace = trace_from_requests(coe, _requests(trace_len),
+                                gap_s=0.0025, exec_s=0.006)
+    res = search_placement(
+        coe, pools, trace, TIER, links=LINKS,
+        pool_devices=validate_pool_groups(specs), seed_plan=greedy,
+        config=SearchConfig(iterations=iterations, replication=3,
+                            replica_fraction=0.5, seed=0))
+    m_greedy = _simulate(coe, n_requests, placement=greedy)
+    m_search = _simulate(coe, n_requests, placement=res.plan)
+    g, s = _row(m_greedy), _row(m_search)
+    return {
+        "trace_events": len(trace.events),
+        "search": res.snapshot(),
+        "assignment_cost": {
+            "greedy_s": round(res.seed_cost, 6),
+            "searched_s": round(res.cost, 6),
+            "delta": round(res.seed_cost - res.cost, 6)},
+        "sim": {"greedy": g, "searched": s},
+        "throughput_speedup": round(
+            s["throughput_rps"] / g["throughput_rps"], 3)
+        if g["throughput_rps"] else None,
+        "stall_ratio": round(s["stall_s"] / g["stall_s"], 3)
+        if g["stall_s"] else None,
+    }
+
+
+def _peer_replication(peer_bw: float, replica_fraction: float = 0.5) -> dict:
+    """Total replica-materialization stall through the autoscaler's
+    ``rebalance_placement`` path, with the peer fabric at ``peer_bw``
+    (0 = replicas reload from host DRAM over PCIe).
+
+    Scenario: a scale event just added the fleet's fourth device — the plan
+    was built while only three pools existed (``pool_order`` excludes the
+    newest), so the new pool is empty and the rebalance pass fills it with
+    replicas of the hottest experts, all of which sit settled on the three
+    original devices (the peer fabric's best case, and the autoscaler's
+    common one)."""
+    tier = dataclasses.replace(TIER, peer_bw=peer_bw)
+    coe = _coe()
+    pools, specs = _fleet_layout(tier)
+    newest = sorted(pools)[-1]
+    plan = PlacementPlan.build(coe, pools,
+                               pool_order=[g for g in pools if g != newest])
+    system = CoServeSystem(coe, specs, pools, policy=COSERVE, tier=tier,
+                           links=LINKS, placement=plan)
+    # steady state: the catalog sits in host DRAM (the reload the peer
+    # fabric is supposed to beat is the PCIe leg, not a cold SSD read)
+    host = system.hierarchy.host
+    for spec in coe.by_usage():
+        if spec.mem_bytes > host.free_bytes():
+            break
+        host.insert(spec.id)
+    # the scale event turns replication on: the empty new pool is pure
+    # replica budget, so every hot primary is a materialization candidate
+    system.placement.replication = 1
+    system.placement.replica_fraction = replica_fraction
+    # drain the rebalance path the way the post-scale autoscaler ticks would
+    now, stall, loads = 0.0, 0.0, 0
+    while loads < 500:
+        issued = system.rebalance_placement(now, max_loads=DEVICES)
+        if not issued:
+            break
+        t_next = now
+        for ex, eid, done in issued:
+            stall += done - now
+            loads += 1
+            t_next = max(t_next, done)
+        for ex, eid, done in issued:
+            ex.finish_load(eid)
+        now = t_next
+    chans = system.hierarchy.transfer.snapshot()
+    return {"replica_loads": loads,
+            "stall_s": round(stall, 4),
+            "stall_per_load_s": round(stall / loads, 5) if loads else None,
+            "peer_transfers": chans["peer_channel"]["transfers"],
+            "pcie_transfers": chans["pcie_channel"]["transfers"]}
+
+
+def run(quick: bool = False, smoke: bool = False) -> dict:
+    if smoke:
+        n, trace_len, iters = 200, 150, 60
+    elif quick:
+        n, trace_len, iters = 500, 300, 150
+    else:
+        n, trace_len, iters = 1000, 500, 300
+    out: dict = {"boards": [BOARD_HOT.name, BOARD_FLAT.name],
+                 "tier": TIER.name, "devices": DEVICES,
+                 "gpu_per_device": GPU_PER_DEVICE, "links": LINKS}
+    out["search_vs_greedy"] = _search_vs_greedy(n, trace_len, iters)
+    host_reload = _peer_replication(peer_bw=0.0)
+    peer = _peer_replication(peer_bw=PEER_BW)
+    out["peer_replication"] = {
+        "peer_bw_gbps": PEER_BW / 1e9,
+        "host_reload": host_reload,
+        "peer": peer,
+        "stall_ratio": round(peer["stall_s"] / host_reload["stall_s"], 4)
+        if host_reload["stall_s"] else None,
+    }
+    with open(OUT_PATH, "w") as f:
+        json.dump(out, f, indent=1)
+    return out
+
+
+if __name__ == "__main__":
+    print(json.dumps(run(quick=True), indent=1))

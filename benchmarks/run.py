@@ -3,25 +3,16 @@
   PYTHONPATH=src python -m benchmarks.run [--quick|--smoke] \
       [--only fig13,fig15,...] [--suite memory]
 
-| key       | paper artefact | module |
-|-----------|----------------|--------|
-| fig13_14  | Fig. 13 throughput + Fig. 14 switches | bench_throughput |
-| fig15_16  | Fig. 15/16 ablation breakdown          | bench_ablation   |
-| fig17     | Fig. 17 executor-count sweep           | bench_executors  |
-| fig18     | Fig. 18 decay-window memory allocation | bench_memory_alloc |
-| fig19     | Fig. 19 scheduling/management overhead | bench_overhead   |
-| fig5_12   | Fig. 5/12 batch-latency linearity      | bench_batch_latency |
-| kernels   | Pallas kernels vs oracles              | bench_kernels    |
-| roofline  | EXPERIMENTS.md §Roofline (from dry-run)| roofline         |
-| online    | online gateway thr/p99 @ fixed load    | bench_online     |
-| memory    | tiered-memory hierarchy (policy x      | bench_memory     |
-|           | prefetch, contention, promotion,       |                  |
-|           | prefetch-trigger traffic delta)        |                  |
-| fleet     | devices x links x replication sweep    | bench_fleet      |
+The suite registry below (``SUITES``) is the single source of truth for the
+available keys: the ``--suite`` help text and docs/benchmarks.md are
+generated from / checked against it, never hand-listed. One line per suite:
+
+  key -> (runner, what it measures)
 
 ``--suite`` is an alias of ``--only``; ``--smoke`` runs the smallest
 workload a suite supports (CI regression gate — suites without a dedicated
-smoke size fall back to their quick size).
+smoke size fall back to their quick size). See docs/benchmarks.md for the
+per-suite BENCH_*.json schemas and the headline-number trajectory.
 """
 from __future__ import annotations
 
@@ -34,21 +25,8 @@ import time
 
 from benchmarks import (bench_ablation, bench_batch_latency, bench_executors,
                         bench_fleet, bench_memory, bench_memory_alloc,
-                        bench_online, bench_overhead, bench_throughput,
-                        bench_kernels)
-
-SUITES = {
-    "fig13_14": bench_throughput.run,
-    "fig15_16": bench_ablation.run,
-    "fig17": bench_executors.run,
-    "fig18": bench_memory_alloc.run,
-    "fig19": bench_overhead.run,
-    "fig5_12": bench_batch_latency.run,
-    "kernels": bench_kernels.run,
-    "online": bench_online.run,
-    "memory": bench_memory.run,
-    "fleet": bench_fleet.run,
-}
+                        bench_online, bench_overhead, bench_placement,
+                        bench_throughput, bench_kernels)
 
 
 def _roofline(quick: bool = False):
@@ -63,7 +41,38 @@ def _roofline(quick: bool = False):
                          for d in ("compute", "memory", "collective")}}
 
 
-SUITES["roofline"] = _roofline
+# key -> (runner, one-line description). ``--suite`` help and the docs table
+# are derived from this dict — add new suites HERE only.
+SUITES_INFO = {
+    "fig13_14": (bench_throughput.run,
+                 "paper Fig. 13 throughput + Fig. 14 switches"),
+    "fig15_16": (bench_ablation.run, "paper Fig. 15/16 ablation breakdown"),
+    "fig17": (bench_executors.run, "paper Fig. 17 executor-count sweep"),
+    "fig18": (bench_memory_alloc.run,
+              "paper Fig. 18 decay-window memory allocation"),
+    "fig19": (bench_overhead.run,
+              "paper Fig. 19 scheduling/management overhead"),
+    "fig5_12": (bench_batch_latency.run,
+                "paper Fig. 5/12 batch-latency linearity"),
+    "kernels": (bench_kernels.run, "Pallas kernels vs oracles"),
+    "roofline": (_roofline, "EXPERIMENTS.md roofline (needs dry-run sweep)"),
+    "online": (bench_online.run,
+               "online gateway throughput/p99 at fixed offered load"),
+    "memory": (bench_memory.run,
+               "tiered-memory hierarchy: policy x prefetch, contention, "
+               "promotion, prefetch-trigger traffic delta"),
+    "fleet": (bench_fleet.run, "devices x links x replication sweep"),
+    "placement": (bench_placement.run,
+                  "cost-model placement search vs greedy sweep + peer-link "
+                  "replica materialization"),
+}
+
+SUITES = {key: runner for key, (runner, _) in SUITES_INFO.items()}
+
+
+def suite_help() -> str:
+    """``--suite`` help text, generated from the registry."""
+    return "comma-separated suite keys: " + ", ".join(SUITES)
 
 
 def main(argv=None):
@@ -73,11 +82,14 @@ def main(argv=None):
                     help="smallest workloads (implies --quick where a suite "
                          "has no dedicated smoke size) — the CI bench gate")
     ap.add_argument("--only", "--suite", dest="only", default=None,
-                    help="comma-separated suite keys")
+                    help=suite_help())
     ap.add_argument("--out", default="bench_results.json")
     args = ap.parse_args(argv)
 
     keys = args.only.split(",") if args.only else list(SUITES)
+    unknown = [k for k in keys if k not in SUITES]
+    if unknown:
+        ap.error(f"unknown suite keys {unknown}; {suite_help()}")
     results, failures = {}, 0
     for key in keys:
         t0 = time.perf_counter()

@@ -46,7 +46,8 @@ class SimEngine:
     def load_latency(self, ex, expert_id: str) -> float:
         if ex is not None and ex.device in ("host", "cpu"):
             return self.hierarchy.predict_host_load(expert_id)
-        return self.hierarchy.predict_device_load(expert_id)
+        group = ex.link_group if ex is not None else ""
+        return self.hierarchy.predict_device_load(expert_id, group)
 
     def exec_latency(self, ex, expert_id: str, n: int) -> float:
         prof = ex.profile(self.coe.spec(expert_id).arch)
@@ -181,19 +182,23 @@ class RealEngine:
         self.device_params: Dict[str, Any] = {}
         self._workers: Dict[str, _TransferWorker] = {}
         self._topology = None
+        self._hierarchy = None
         self._pending: Dict[str, dict] = {}
         self._lock = threading.Lock()
         self.measured_load_time = 0.0
 
     # --- topology binding (one transfer thread per transfer channel) ---- #
-    def bind_topology(self, topology) -> None:
-        """Mirror the tier topology's channels: each PCIe channel (or the
-        SSD link on unified tiers) gets its own FIFO transfer thread, so the
-        real backend serializes loads exactly where the simulator's
-        contended channels would. Called by ``CoServeSystem``."""
+    def bind_topology(self, topology, hierarchy=None) -> None:
+        """Mirror the tier topology's channels: each PCIe channel, peer
+        ingress link (or the SSD link on unified tiers) gets its own FIFO
+        transfer thread, so the real backend serializes loads exactly where
+        the simulator's contended channels would. ``hierarchy`` (when given)
+        lets loads of experts already resident on a sibling pool ride that
+        pool's peer channel thread. Called by ``CoServeSystem``."""
         self._topology = topology
+        self._hierarchy = hierarchy
 
-    def _channel_name(self, ex) -> str:
+    def _channel_name(self, ex, expert_id: str = "") -> str:
         if self._topology is None or ex is None:
             return ""                  # unbound: the seed's single thread
         t = self._topology
@@ -201,6 +206,10 @@ class RealEngine:
             # one storage link carries the load (host/CPU executors load
             # disk -> DRAM and never own a PCIe channel)
             return t.disk_channel.name
+        if expert_id and self._hierarchy is not None \
+                and self._hierarchy.peer_source(expert_id,
+                                                ex.link_group) is not None:
+            return t.peer_for(ex.link_group).name
         return t.pcie_for(ex.link_group).name
 
     def _worker_for(self, name: str) -> _TransferWorker:
@@ -235,7 +244,7 @@ class RealEngine:
                 self.measured_load_time += time.perf_counter() - t0
 
     def load(self, ex, expert_id: str, now: float = 0.0) -> float:
-        worker = self._worker_for(self._channel_name(ex))
+        worker = self._worker_for(self._channel_name(ex, expert_id))
         handle = worker.submit(lambda: self._transfer(expert_id))
         with self._lock:
             self._pending[expert_id] = handle

@@ -83,11 +83,12 @@ class RequestScheduler:
         (condition (a)). A copy still LOADING into the pool costs its
         remaining in-flight time, not zero and not a full reload. Otherwise
         the memory hierarchy prices the load from where the expert really is
-        (HOST vs DISK) plus the queue of the specific link(s) this
-        executor's device would ride — so an executor behind a congested
-        PCIe channel genuinely looks more expensive than a replica-holding
-        one, and all consumers (scheduler, TransferEngine, prefetcher) agree
-        on the same contended-channel state.
+        (a sibling pool over the peer fabric / HOST / DISK) plus the queue
+        of the specific link(s) this executor's device would ride — so an
+        executor behind a congested PCIe channel or peer ingress port
+        genuinely looks more expensive than a replica-holding one, and all
+        consumers (scheduler, TransferEngine, prefetcher) agree on the same
+        contended-channel state.
         """
         if queued_same:
             return 0.0

@@ -144,7 +144,7 @@ class CoServeSystem:
         self.engine = engine or SimEngine(coe, tier, hierarchy=self.hierarchy)
         bind = getattr(self.engine, "bind_topology", None)
         if bind is not None:     # real backend: one transfer thread per link
-            bind(self.hierarchy.topology)
+            bind(self.hierarchy.topology, self.hierarchy)
         self.manager = ExpertManager(coe, policy=policy.evict)
         self.executors: List[Executor] = []
         for i, spec in enumerate(executor_specs):
@@ -162,6 +162,9 @@ class CoServeSystem:
             SchedulerPolicy(assign=policy.assign, arrange=policy.arrange,
                             lookahead=policy.lookahead))
         self.sched_time = 0.0
+        # observed per-expert load (assignment counts): the online signal
+        # placement rebalancing uses instead of static pre-assessed P(use)
+        self.expert_load: Dict[str, int] = {}
         # system initialisation (paper §4.1 steps 1–3) through the explicit
         # plan: round-robin by descending usage probability until pools are
         # full, plus any planned replicas
@@ -198,6 +201,8 @@ class CoServeSystem:
         t0 = time.perf_counter()
         ex = self.scheduler.assign(req, now)
         self.sched_time += time.perf_counter() - t0
+        self.expert_load[req.expert_id] = \
+            self.expert_load.get(req.expert_id, 0) + 1
         # queue-arrival prefetch trigger: the request's expert just joined a
         # queue, so its likely downstream experts can start promoting now
         # (inert unless policy.prefetch_trigger == "queue")
@@ -242,6 +247,16 @@ class CoServeSystem:
         if getattr(ex.pool, "users", None) and ex in ex.pool.users:
             ex.pool.users.remove(ex)
         self.scheduler.executors = self.live_executors()
+        # orphans re-enter through assign(): un-count them so the observed
+        # per-expert load (rebalance_placement's replica signal) stays one
+        # count per served stage — a scale-down must not inflate its victim
+        # queue's experts at exactly the moment the signal is consumed
+        for r in orphans:
+            n = self.expert_load.get(r.expert_id, 0) - 1
+            if n > 0:
+                self.expert_load[r.expert_id] = n
+            else:
+                self.expert_load.pop(r.expert_id, None)
         return orphans
 
     def add_executor(self, spec: ExecutorSpec) -> Executor:
@@ -265,15 +280,19 @@ class CoServeSystem:
     def rebalance_placement(self, now: float, max_loads: int = 4
                             ) -> List[Tuple[Executor, str, float]]:
         """Re-plan replication with pools weighted by live executor count
-        (a scale event shifted capacity), then pull the plan's hottest
-        missing experts onto their pools through idle executors' contended
-        load path (one in-flight load per pool, bounded by ``max_loads``).
-        Returns (executor, expert, done_time) for each issued load; the
-        caller (autoscaler / injection) schedules their LOAD_DONE events."""
+        (a scale event shifted capacity) and experts ranked by *observed*
+        per-expert load rather than static P(use), then pull the plan's
+        hottest missing experts onto their pools through idle executors'
+        contended load path (one in-flight load per pool, bounded by
+        ``max_loads`` — a peer fabric turns these into cheap pool -> pool
+        copies). Returns (executor, expert, done_time) for each issued load;
+        the caller (autoscaler / injection) schedules their LOAD_DONE
+        events."""
         weights: Dict[str, float] = {}
         for ex in self.live_executors():
             weights[ex.pool.group] = weights.get(ex.pool.group, 0.0) + 1.0
-        self.placement.rebalance(weights)
+        self.placement.rebalance(weights,
+                                 expert_weights=self.expert_load or None)
         issued: List[Tuple[Executor, str, float]] = []
         for group, pool in self.pools.items():
             if len(issued) >= max_loads:

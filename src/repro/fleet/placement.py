@@ -1,5 +1,10 @@
 """PlacementPlan: expert -> device-pool assignment as a first-class object.
 
+Source of truth: the only record of where each expert is *supposed* to
+live and how many planned copies it has — pools hold what the plan says
+(modulo runtime eviction), and every byte-accounting question about
+placement (per-pool planned/replica budgets) is answered here.
+
 The seed decided initial expert placement inside a loop in
 ``CoServeSystem._initial_placement`` — round-robin over pools by descending
 usage probability — and then forgot the decision: nothing could ask "where
@@ -30,7 +35,8 @@ normal contended load path.
 """
 from __future__ import annotations
 
-from typing import TYPE_CHECKING, Dict, List, Mapping, Optional, Tuple
+from typing import TYPE_CHECKING, Dict, List, Mapping, Optional, Sequence, \
+    Tuple
 
 if TYPE_CHECKING:  # pragma: no cover — core imports this package
     from repro.core.coe import CoEModel
@@ -89,6 +95,45 @@ class PlacementPlan:
                 # pools full / expert too large: stays on lower tiers
                 if primary is not None and replication:
                     plan._replicate_one(spec, pools)
+        return plan
+
+    @classmethod
+    def from_assignments(cls, coe: "CoEModel", capacities: Mapping[str, int],
+                         assignments: Mapping[str, Sequence[str]],
+                         replication: int = 0,
+                         replica_fraction: float = 0.10) -> "PlacementPlan":
+        """Materialize an explicit expert -> pools mapping (e.g. a searched
+        plan) as a validated ``PlacementPlan``. The first pool of each
+        expert's list is its primary; the rest are replicas. Layout order is
+        hottest-first (``coe.by_usage``), matching the greedy sweep's warm
+        order. Raises ``ValueError`` when the mapping overflows a pool, puts
+        two copies on one pool, exceeds ``replication`` copies beyond the
+        primary, or blows a pool's replica budget
+        (``replica_fraction`` x capacity) — the invariants the seeded-random
+        tests pin."""
+        plan = cls(coe, capacities, replication, replica_fraction)
+        unknown = [e for e, pools in assignments.items()
+                   if pools and e not in coe.experts]
+        if unknown:
+            raise ValueError(
+                f"assignments name experts not in the catalog: {unknown}")
+        known = set(plan.capacities)
+        for spec in coe.by_usage():
+            pools = assignments.get(spec.id) or ()
+            for i, g in enumerate(pools):
+                if g not in known:
+                    raise ValueError(
+                        f"assignment of {spec.id!r} names unknown pool {g!r}")
+                if i > 0 and spec.mem_bytes > plan._replica_budget(g):
+                    raise ValueError(
+                        f"replica of {spec.id!r} overflows pool {g!r}'s "
+                        f"replica budget ({replica_fraction:.0%} of capacity)")
+                plan._place(spec.id, g, replica=i > 0)
+            if len(pools) > 1 + replication:
+                raise ValueError(
+                    f"{spec.id!r} plans {len(pools) - 1} replicas, "
+                    f"replication allows {replication}")
+        plan.validate()
         return plan
 
     def _place(self, expert_id: str, group: str, replica: bool = False):
@@ -156,19 +201,30 @@ class PlacementPlan:
     # ------------------------------------------------------------------ #
     # runtime reconfiguration
     # ------------------------------------------------------------------ #
-    def rebalance(self, pool_weights: Mapping[str, float]) -> List[Tuple[str, str]]:
+    def rebalance(self, pool_weights: Mapping[str, float],
+                  expert_weights: Optional[Mapping[str, float]] = None
+                  ) -> List[Tuple[str, str]]:
         """Re-run the replication pass with pools ordered hottest-first by
         ``pool_weights`` (e.g. live executors per pool after a scale event).
-        Base assignments are kept — moving primaries would invalidate warm
-        state for no modeled gain — only replicas are (re)planned. Returns
-        the newly planned (expert, pool) copies."""
+        ``expert_weights`` (e.g. observed per-expert assignment counts from
+        the online path) re-ranks which experts claim replica slots first;
+        without it the static pre-assessed P(use) order is used. Base
+        assignments are kept — moving primaries would invalidate warm state
+        for no modeled gain — only replicas are (re)planned. Returns the
+        newly planned (expert, pool) copies."""
         self.rebalances += 1
         if not self.replication:
             return []
         order = sorted(self.capacities,
                        key=lambda g: (-pool_weights.get(g, 0.0), g))
+        if expert_weights:
+            specs = sorted(self.coe.experts.values(),
+                           key=lambda e: (-expert_weights.get(e.id, 0.0),
+                                          -e.usage_prob, e.id))
+        else:
+            specs = self.coe.by_usage()
         before = len(self._layout)
-        for spec in self.coe.by_usage():
+        for spec in specs:
             self._replicate_one(spec, order)
         return self._layout[before:]
 

@@ -1,0 +1,486 @@
+"""Cost-model placement search: plans scored by the serving cost model.
+
+Source of truth: this module owns HOW a ``PlacementPlan`` is chosen beyond
+the greedy hot-first sweep — but it never invents a cost formula. Every
+candidate plan is priced by replaying a workload trace through
+``MemoryHierarchy.assignment_cost``, the same residency-aware,
+contended-channel formula the online scheduler assigns requests with, so
+the search optimizes exactly what serving pays (SN40L-style searched
+composition-of-experts layouts; the QoS-Efficient Multi-MoE partial
+reconfiguration argument).
+
+  ``WorkloadTrace``      an expert-id sequence plus replay clock spacing.
+                         Built from offline profiler traces / materialized
+                         request lists (``trace_from_requests``, expected
+                         routing chains included), from observed online
+                         per-expert load (``trace_from_counts``), or from
+                         static pre-assessed P(use) (``trace_from_usage``).
+  ``replay_cost``        score one plan: warm a fresh ``MemoryHierarchy`` to
+                         the plan's layout, then charge every trace event
+                         the queueing-plus-switch cost of its best device
+                         pool. Misses occupy the contended SSD/PCIe/peer
+                         channels and per-pool service clocks advance, so a
+                         plan that serializes the hot head of the
+                         distribution behind one pool or one link is
+                         penalized — the signal replication exists for.
+  ``search_placement``   greedy local search (replicate / drop / migrate /
+                         swap / place moves) from the greedy-sweep seed
+                         plan. Accept-only-improvements plus a seed-plan
+                         fallback guarantee the result never scores worse
+                         than the greedy sweep on the same trace (pinned by
+                         test); every candidate is materialized through
+                         ``PlacementPlan.from_assignments``, so capacity and
+                         replica-budget invariants hold by construction.
+
+The replay is a static-residency approximation: the plan's layout is held
+fixed (no eviction churn) and execution time is a per-event constant. The
+event-driven simulator stays the ground truth — the search only needs the
+*relative* ordering of candidate plans, and BENCH_placement.json checks the
+ordering against full simulations.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import TYPE_CHECKING, Dict, List, Mapping, Optional, Sequence, \
+    Tuple
+
+import numpy as np
+
+from repro.fleet.placement import PlacementPlan
+from repro.memory import MemoryHierarchy, TierSpec
+
+if TYPE_CHECKING:  # pragma: no cover — repro.core imports this package
+    from repro.core.coe import CoEModel
+
+
+# --------------------------------------------------------------------------- #
+# workload traces
+# --------------------------------------------------------------------------- #
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadTrace:
+    """A concrete expert-demand sequence the cost model replays.
+
+    ``gap_s`` spaces the replay clock between events (arrival cadence);
+    ``exec_s`` is the constant per-event service time that advances a
+    pool's busy clock — together they set how much queueing pressure the
+    replay sees (gap < exec means queues build and replication pays)."""
+    events: Tuple[str, ...]
+    gap_s: float = 0.004
+    exec_s: float = 0.020
+
+    def weights(self) -> Dict[str, int]:
+        """Per-expert event counts (the search's hot/cold ranking)."""
+        return dict(collections.Counter(self.events))
+
+
+def trace_from_requests(coe: "CoEModel", requests: Sequence,
+                        gap_s: float = 0.004, exec_s: float = 0.020,
+                        chain_threshold: float = 0.5) -> WorkloadTrace:
+    """Trace from a materialized request list (offline profiler trace): each
+    request contributes its first expert plus the *expected* routing chain —
+    the likeliest ``chain_prob`` successor is appended while its edge
+    probability clears ``chain_threshold``, so shared downstream experts
+    (the detection stage) carry their real aggregate traffic."""
+    events: List[str] = []
+    for r in requests:
+        eid = r.expert_id
+        events.append(eid)
+        seen = {eid}
+        cur = eid
+        while True:
+            edges = coe.routing.chain_prob.get(cur, {})
+            if not edges:
+                break
+            nxt, p = max(edges.items(), key=lambda kv: (kv[1], kv[0]))
+            if p < chain_threshold or nxt in seen:
+                break
+            events.append(nxt)
+            seen.add(nxt)
+            cur = nxt
+    return WorkloadTrace(tuple(events), gap_s=gap_s, exec_s=exec_s)
+
+
+def trace_from_counts(counts: Mapping[str, float], length: int = 512,
+                      gap_s: float = 0.004,
+                      exec_s: float = 0.020) -> WorkloadTrace:
+    """Deterministic trace proportional to observed per-expert load (e.g.
+    ``CoServeSystem.expert_load``): each expert gets round(share * length)
+    events (at least one while its count is positive), interleaved evenly so
+    the replay sees mixed traffic instead of sorted runs."""
+    total = float(sum(v for v in counts.values() if v > 0))
+    if total <= 0:
+        return WorkloadTrace((), gap_s=gap_s, exec_s=exec_s)
+    slots: List[Tuple[float, str]] = []
+    for eid in sorted(counts):
+        c = counts[eid]
+        if c <= 0:
+            continue
+        n = max(1, int(round(length * (c / total))))
+        for k in range(n):
+            slots.append(((k + 0.5) / n, eid))
+    slots.sort()
+    return WorkloadTrace(tuple(eid for _, eid in slots),
+                         gap_s=gap_s, exec_s=exec_s)
+
+
+def trace_from_usage(coe: "CoEModel", length: int = 512,
+                     gap_s: float = 0.004,
+                     exec_s: float = 0.020) -> WorkloadTrace:
+    """Trace from the static pre-assessed P(use) (paper §4.5) — what the
+    online path uses before any load has been observed."""
+    return trace_from_counts(
+        {e.id: e.usage_prob for e in coe.experts.values()},
+        length=length, gap_s=gap_s, exec_s=exec_s)
+
+
+# --------------------------------------------------------------------------- #
+# cost model
+# --------------------------------------------------------------------------- #
+
+def _device_groups(capacities: Mapping[str, int],
+                   pool_devices: Optional[Mapping[str, str]]) -> List[str]:
+    devices = pool_devices or {}
+    return sorted(g for g in capacities
+                  if devices.get(g, "gpu") not in ("host", "cpu"))
+
+
+def replay_cost(coe: "CoEModel", capacities: Mapping[str, int],
+                plan: PlacementPlan, trace: WorkloadTrace,
+                tier: TierSpec, links: str = "shared",
+                pool_devices: Optional[Mapping[str, str]] = None) -> float:
+    """Mean per-event queueing + switch seconds of serving ``trace`` under
+    ``plan``'s (static) layout.
+
+    A fresh ``MemoryHierarchy`` is warmed to the plan (device pools hold the
+    planned copies, host DRAM fills hottest-first with the rest), then each
+    event is assigned to the device pool minimizing
+    ``pool busy backlog + assignment_cost`` — the same two terms the online
+    scheduler's makespan argmin weighs. Misses start real transfers on the
+    contended channels (SSD / per-group PCIe / peer ingress), so hot experts
+    crowded behind one link keep getting more expensive within the replay,
+    exactly as they would in the simulator."""
+    groups = _device_groups(capacities, pool_devices)
+    if not groups or not trace.events:
+        return 0.0
+    h = MemoryHierarchy(coe, tier, pools=dict(capacities), links=links,
+                        link_groups=groups)
+    for eid, g in plan.layout():
+        pool = h.pools.get(g)
+        if pool is not None and eid not in pool \
+                and coe.spec(eid).mem_bytes <= pool.free_bytes():
+            pool.add(eid)
+            pool.ready.add(eid)
+    if h.host is not None:
+        # steady state: DRAM holds as much of the hot catalog as it can
+        for spec in coe.by_usage():
+            if spec.mem_bytes <= h.host.free_bytes():
+                h.host.insert(spec.id)
+    busy = {g: 0.0 for g in groups}
+    now, cost, n = 0.0, 0.0, 0
+    for eid in trace.events:
+        if eid not in coe.experts:
+            continue
+        best_g, best_wait, best_switch = None, 0.0, 0.0
+        for g in groups:
+            switch = 0.0 if eid in h.pools[g] \
+                else h.assignment_cost(eid, now, group=g)
+            wait = max(0.0, busy[g] - now)
+            if best_g is None or wait + switch < best_wait + best_switch:
+                best_g, best_wait, best_switch = g, wait, switch
+        cost += best_wait + best_switch
+        n += 1
+        if eid not in h.pools[best_g]:
+            h.begin_device_load(eid, now, group=best_g)
+        busy[best_g] = max(now, busy[best_g]) + best_switch + trace.exec_s
+        now += trace.gap_s
+    return cost / n if n else 0.0
+
+
+# --------------------------------------------------------------------------- #
+# local search
+# --------------------------------------------------------------------------- #
+
+@dataclasses.dataclass(frozen=True)
+class SearchConfig:
+    iterations: int = 400        # move proposals (each scored by one replay)
+    patience: int = 120          # stop after this many consecutive rejects
+    seed: int = 0                # RNG seed (the search is deterministic)
+    replication: int = 2         # max planned copies beyond the primary
+    replica_fraction: float = 0.35   # per-pool replica byte budget the
+    #                                  search may spend (the greedy sweep's
+    #                                  0.10 stays its own default)
+    hot_pool: int = 32           # replicate/drop candidates come from the
+    #                              hottest / coldest end of the trace weights
+
+    def __post_init__(self):
+        if self.iterations < 0 or self.patience <= 0:
+            raise ValueError("iterations must be >= 0, patience > 0")
+        if self.replication < 0:
+            raise ValueError(f"replication must be >= 0, "
+                             f"got {self.replication}")
+        if not 0.0 <= self.replica_fraction <= 1.0:
+            raise ValueError(f"replica_fraction must be in [0, 1], "
+                             f"got {self.replica_fraction}")
+
+
+@dataclasses.dataclass
+class SearchResult:
+    plan: PlacementPlan
+    seed_cost: float             # replay cost of the greedy seed plan
+    cost: float                  # replay cost of the returned plan (<= seed)
+    proposed: int
+    accepted: int
+    fell_back: bool              # no move improved: the seed plan itself is
+    #                              returned (pinned-equivalence fallback)
+
+    def snapshot(self) -> dict:
+        return {"seed_cost_s": round(self.seed_cost, 6),
+                "cost_s": round(self.cost, 6),
+                "improvement": round(1.0 - self.cost / self.seed_cost, 4)
+                if self.seed_cost > 0 else 0.0,
+                "proposed": self.proposed,
+                "accepted": self.accepted,
+                "fell_back": self.fell_back,
+                "plan": self.plan.snapshot()}
+
+
+class _Mover:
+    """Move proposals over an expert -> [pools] mapping (pure: every
+    proposal returns a mutated copy; feasibility beyond free capacity is
+    enforced by ``PlacementPlan.from_assignments`` at scoring time)."""
+
+    def __init__(self, coe: "CoEModel", capacities: Mapping[str, int],
+                 groups: List[str], weights: Mapping[str, int],
+                 rng: np.random.RandomState, cfg: SearchConfig):
+        self.coe = coe
+        self.capacities = capacities
+        self.groups = groups
+        self.weights = weights
+        self.rng = rng
+        self.cfg = cfg
+        by_weight = sorted(coe.experts,
+                           key=lambda e: (-weights.get(e, 0), e))
+        self.hot = by_weight[:cfg.hot_pool]
+        self.cold = by_weight[-cfg.hot_pool:]
+
+    # ------------------------------------------------------------------ #
+    def _free(self, assign: Mapping[str, List[str]]) -> Dict[str, int]:
+        free = dict(self.capacities)
+        for eid, pools in assign.items():
+            for g in pools:
+                free[g] = free.get(g, 0) - self.coe.spec(eid).mem_bytes
+        return free
+
+    def _pick(self, items: List):
+        return items[self.rng.randint(len(items))] if items else None
+
+    @staticmethod
+    def _copy(assign: Mapping[str, List[str]]) -> Dict[str, List[str]]:
+        return {e: list(p) for e, p in assign.items() if p}
+
+    # ------------------------------------------------------------------ #
+    def propose(self, assign: Mapping[str, List[str]]
+                ) -> Optional[Dict[str, List[str]]]:
+        move = self._pick(["replicate", "replicate", "replace", "replace",
+                           "replace", "drop_replica", "drop_cold", "migrate",
+                           "swap", "place"])
+        return getattr(self, "_" + move)(assign)
+
+    def _replicate(self, assign):
+        free = self._free(assign)
+        cands = []
+        for eid in self.hot:
+            pools = assign.get(eid, ())
+            if not pools or len(pools) > self.cfg.replication:
+                continue
+            mem = self.coe.spec(eid).mem_bytes
+            for g in self.groups:
+                if g not in pools and mem <= free[g]:
+                    cands.append((eid, g))
+        picked = self._pick(cands)
+        if picked is None:
+            return None
+        eid, g = picked
+        new = self._copy(assign)
+        new[eid].append(g)
+        return new
+
+    def _drop_replica(self, assign):
+        cands = [(eid, g) for eid, pools in assign.items()
+                 for g in pools[1:] if g in self.groups]
+        picked = self._pick(cands)
+        if picked is None:
+            return None
+        eid, g = picked
+        new = self._copy(assign)
+        new[eid].remove(g)
+        return new
+
+    def _replace(self, assign):
+        """Composite move for full pools: evict a colder single-copy
+        resident of a pool AND give a hotter expert a copy there in one
+        proposal — neither half alone improves strictly (dropping a
+        zero-weight expert is cost-neutral, placing needs the space first),
+        so greedy accept would plateau without it."""
+        free = self._free(assign)
+        w = self.weights
+        by_group: Dict[str, List[str]] = {}
+        for e, pools in assign.items():
+            if len(pools) == 1 and pools[0] in self.groups:
+                by_group.setdefault(pools[0], []).append(e)
+        cands = []
+        for eid in self.hot:
+            pools = assign.get(eid, ())
+            if pools and len(pools) > self.cfg.replication:
+                continue
+            mem = self.coe.spec(eid).mem_bytes
+            for g in self.groups:
+                if g in pools:
+                    continue
+                for victim in by_group.get(g, ()):
+                    if victim == eid or w.get(victim, 0) >= w.get(eid, 0):
+                        continue
+                    if mem <= free[g] + self.coe.spec(victim).mem_bytes:
+                        cands.append((eid, g, victim))
+        picked = self._pick(cands)
+        if picked is None:
+            return None
+        eid, g, victim = picked
+        new = self._copy(assign)
+        del new[victim]
+        new.setdefault(eid, []).append(g)
+        return new
+
+    def _drop_cold(self, assign):
+        """Drop a cold single-copy expert off its device pool entirely (it
+        falls back to host/disk) — the move that lets hot replicas claim
+        space the greedy sweep spent on the tail."""
+        cands = [eid for eid in self.cold
+                 if len(assign.get(eid, ())) == 1
+                 and assign[eid][0] in self.groups]
+        eid = self._pick(cands)
+        if eid is None:
+            return None
+        new = self._copy(assign)
+        del new[eid]
+        return new
+
+    def _migrate(self, assign):
+        free = self._free(assign)
+        placed = [eid for eid, pools in assign.items()
+                  if any(g in self.groups for g in pools)]
+        eid = self._pick(placed)
+        if eid is None:
+            return None
+        src = self._pick([g for g in assign[eid] if g in self.groups])
+        mem = self.coe.spec(eid).mem_bytes
+        dsts = [g for g in self.groups
+                if g != src and g not in assign[eid] and mem <= free[g]]
+        dst = self._pick(dsts)
+        if dst is None:
+            return None
+        new = self._copy(assign)
+        new[eid][new[eid].index(src)] = dst
+        return new
+
+    def _swap(self, assign):
+        singles = [eid for eid, pools in assign.items()
+                   if len(pools) == 1 and pools[0] in self.groups]
+        if len(singles) < 2:
+            return None
+        a = self._pick(singles)
+        b = self._pick([e for e in singles if assign[e][0] != assign[a][0]])
+        if b is None:
+            return None
+        new = self._copy(assign)
+        new[a][0], new[b][0] = new[b][0], new[a][0]
+        return new
+
+    def _place(self, assign):
+        free = self._free(assign)
+        cands = []
+        for eid, w in self.weights.items():
+            if w <= 0 or assign.get(eid) or eid not in self.coe.experts:
+                continue
+            mem = self.coe.spec(eid).mem_bytes
+            cands.extend((eid, g) for g in self.groups if mem <= free[g])
+        picked = self._pick(cands)
+        if picked is None:
+            return None
+        eid, g = picked
+        new = self._copy(assign)
+        new[eid] = [g]
+        return new
+
+
+def search_placement(coe: "CoEModel", capacities: Mapping[str, int],
+                     trace: WorkloadTrace, tier: TierSpec,
+                     links: str = "shared",
+                     pool_devices: Optional[Mapping[str, str]] = None,
+                     seed_plan: Optional[PlacementPlan] = None,
+                     config: Optional[SearchConfig] = None) -> SearchResult:
+    """Local search over placements, seeded by (and never worse than) the
+    greedy hot-first sweep.
+
+    Starting from ``seed_plan`` (default: ``PlacementPlan.build`` with no
+    replication — the paper's sweep), propose replicate / drop / migrate /
+    swap / place moves and accept only strict replay-cost improvements;
+    stop after ``config.patience`` consecutive rejects. When nothing
+    improves, the *original seed plan object* is returned (``fell_back``),
+    so greedy-equivalence is exact, not approximate."""
+    cfg = config or SearchConfig()
+    if seed_plan is None:
+        seed_plan = PlacementPlan.build(coe, capacities)
+    groups = _device_groups(capacities, pool_devices)
+    seed_assign = {e: list(seed_plan.pools_for(e))
+                   for e in seed_plan.assignments}
+    # a caller-supplied seed may already spend more replicas than the search
+    # config allows; widen the limits so the seed itself stays feasible
+    seed_snap = seed_plan.snapshot()
+    repl_limit = max(cfg.replication, seed_plan.replication,
+                     max((len(p) - 1 for p in seed_assign.values()),
+                         default=0))
+    frac_limit = cfg.replica_fraction
+    for g, rb in seed_snap["replica_bytes"].items():
+        cap = capacities.get(g, 0)
+        if cap > 0 and rb > 0:
+            frac_limit = max(frac_limit, min(1.0, (rb + 1) / cap))
+
+    def score(assign) -> Tuple[float, PlacementPlan]:
+        plan = PlacementPlan.from_assignments(
+            coe, capacities, assign, replication=repl_limit,
+            replica_fraction=frac_limit)
+        return replay_cost(coe, capacities, plan, trace, tier, links=links,
+                           pool_devices=pool_devices), plan
+
+    seed_cost = replay_cost(coe, capacities, seed_plan, trace, tier,
+                            links=links, pool_devices=pool_devices)
+    best_assign, best_cost, best_plan = seed_assign, seed_cost, seed_plan
+    proposed = accepted = stale = 0
+    if groups and trace.events:
+        mover = _Mover(coe, capacities, groups, trace.weights(),
+                       np.random.RandomState(cfg.seed), cfg)
+        for _ in range(cfg.iterations):
+            if stale >= cfg.patience:
+                break
+            cand = mover.propose(best_assign)
+            proposed += 1
+            if cand is None:
+                stale += 1
+                continue
+            try:
+                cost, plan = score(cand)
+            except ValueError:       # replica budget / capacity infeasible
+                stale += 1
+                continue
+            if cost < best_cost - 1e-12:
+                best_assign, best_cost, best_plan = cand, cost, plan
+                accepted += 1
+                stale = 0
+            else:
+                stale += 1
+    return SearchResult(plan=best_plan, seed_cost=seed_cost, cost=best_cost,
+                        proposed=proposed, accepted=accepted,
+                        fell_back=best_plan is seed_plan)

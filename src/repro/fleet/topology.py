@@ -1,5 +1,10 @@
 """Device-fleet topology: how many accelerators, and who owns which link.
 
+Source of truth: the only builder of multi-device (pools, executor specs)
+shapes, and the only validator of the one-pool-one-device-kind invariant
+(``validate_pool_groups``) — construction-time and runtime scale-ups both
+go through it.
+
 One physical system (paper §5.1) is a single accelerator behind one SSD and
 one PCIe link; a *fleet* is N accelerators that each own a device-memory
 pool and a host->device channel while fanning in on the shared SSD.

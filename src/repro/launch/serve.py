@@ -13,11 +13,20 @@ Three modes behind the SAME scheduler/manager code:
                  ``--engine real`` drives the same gateway over real JAX
                  experts instead of the profile-driven simulator.
 
+Fleet knobs (``--devices/--links/--replication/--peer-bw/--placement``)
+apply to both sim and online (sim-engine) modes: multi-device pools behind
+the shared SSD, per-device PCIe links, planned expert replication, an
+optional NVLink/ICI-class peer fabric for pool->pool replica copies, and
+greedy-vs-searched initial placement.
+
   PYTHONPATH=src python -m repro.launch.serve --mode sim  --board A --requests 2500
   PYTHONPATH=src python -m repro.launch.serve --mode real --requests 200
   PYTHONPATH=src python -m repro.launch.serve --mode online --tenants A,B \
       --arrival poisson --requests 2000 --rates 25,12 --slos 2.0,4.0 \
       --admission queue_depth --autoscale 2,8
+  PYTHONPATH=src python -m repro.launch.serve --mode online --devices 4 \
+      --links per-device --replication 1 --peer-bw 50 --placement search \
+      --tenants A,B --rates 25,12 --requests 2000
 """
 from __future__ import annotations
 
@@ -37,7 +46,9 @@ from repro.core import (COSERVE, COSERVE_NONE, SAMBA, SAMBA_FIFO,
 from repro.core.memory import NUMA, UMA
 from repro.core.workload import (BOARD_A, BOARD_B, build_board_coe,
                                  make_executor_specs, make_task_requests)
-from repro.fleet import FleetSpec, build_fleet
+from repro.fleet import (FleetSpec, PlacementPlan, SearchConfig, build_fleet,
+                         search_placement, trace_from_requests,
+                         trace_from_usage, validate_pool_groups)
 
 POLICIES: Dict[str, SystemPolicy] = {
     "coserve": COSERVE,
@@ -78,9 +89,43 @@ def _policy_from_args(args) -> SystemPolicy:
 # sim mode — the paper's full-scale workload
 # --------------------------------------------------------------------------- #
 
+def _fleet_tier(args, base):
+    """The run's TierSpec: the named preset, plus the optional peer
+    (NVLink/ICI-class) device<->device fabric from ``--peer-bw`` GB/s."""
+    if getattr(args, "peer_bw", 0.0):
+        return dataclasses.replace(base, peer_bw=args.peer_bw * 1e9)
+    return base
+
+
+def _fleet_pools(args, tier, n_gpu: int, n_cpu: int, devices: int):
+    """(pools, specs) for the run's fleet shape — the single-device path
+    stays ``make_executor_specs`` (seed layout) exactly."""
+    if devices > 1:
+        # multi-device fleet: n_gpu executors on EACH of --devices
+        # accelerators (shared SSD fan-in; --links picks the PCIe layout)
+        fleet = FleetSpec(n_devices=devices, gpu_per_device=n_gpu,
+                          n_cpu=n_cpu, links=args.links)
+        return build_fleet(tier, fleet)
+    return make_executor_specs(tier, n_gpu, n_cpu)
+
+
+def _searched_placement(args, coe, pools, specs, tier, trace):
+    """``--placement search``: seed with the greedy sweep and search over
+    ``trace`` under the SAME ``--replication`` budget — search never plans
+    copies the user disabled (with ``--replication 0`` it still migrates /
+    swaps / replaces primaries). Falls back to the greedy seed when nothing
+    improves."""
+    greedy = PlacementPlan.build(coe, pools, replication=args.replication)
+    res = search_placement(
+        coe, pools, trace, tier, links=args.links,
+        pool_devices=validate_pool_groups(specs), seed_plan=greedy,
+        config=SearchConfig(seed=args.seed, replication=args.replication))
+    return res.plan, res.snapshot()
+
+
 def run_sim(args) -> dict:
     board = BOARD_A if args.board == "A" else BOARD_B
-    tier = NUMA if args.tier == "numa" else UMA
+    tier = _fleet_tier(args, NUMA if args.tier == "numa" else UMA)
     coe = build_board_coe(board)
     policy = _policy_from_args(args)
     n_gpu, n_cpu = args.executors
@@ -90,31 +135,37 @@ def run_sim(args) -> dict:
         # fleet for it would spread the hot placement across pools that can
         # never serve, distorting the comparison
         n_gpu, n_cpu, devices = 1, 0, 1
-    if devices > 1:
-        # multi-device fleet: n_gpu executors on EACH of --devices
-        # accelerators (shared SSD fan-in; --links picks the PCIe layout)
-        fleet = FleetSpec(n_devices=devices, gpu_per_device=n_gpu,
-                          n_cpu=n_cpu, links=args.links)
-        pools, specs = build_fleet(tier, fleet)
-    else:
-        pools, specs = make_executor_specs(tier, n_gpu, n_cpu)
+    pools, specs = _fleet_pools(args, tier, n_gpu, n_cpu, devices)
+    requests = make_task_requests(board, args.requests)
+    placement, search_report = None, None
+    if args.placement == "search":
+        trace = trace_from_requests(coe, requests[:512])
+        placement, search_report = _searched_placement(
+            args, coe, pools, specs, tier, trace)
     system = CoServeSystem(coe, specs, pools, policy=policy, tier=tier,
-                           links=args.links, replication=args.replication)
+                           links=args.links, replication=args.replication,
+                           placement=placement)
     sim = Simulation(system)
-    sim.submit(make_task_requests(board, args.requests))
+    sim.submit(requests)
     m = sim.run()
-    return {"mode": "sim", "board": board.name, "tier": tier.name,
-            "policy": args.policy, "devices": devices,
-            "links": args.links, "completed": m.completed,
-            "throughput": round(m.throughput, 2), "switches": m.switches,
-            "makespan_s": round(m.makespan, 2),
-            "avg_latency_s": round(m.avg_latency, 4),
-            "stall_s": round(m.stall_time, 3),
-            "placement": m.memory.get("placement", {}),
-            "pcie_links": {name: ch.get("wait_time_s")
-                           for name, ch in m.memory.get(
-                               "channels", {}).get("pcie_channels", {}).items()},
-            "host_prefetch": m.memory.get("prefetch", {})}
+    out = {"mode": "sim", "board": board.name, "tier": tier.name,
+           "policy": args.policy, "devices": devices,
+           "links": args.links, "completed": m.completed,
+           "throughput": round(m.throughput, 2), "switches": m.switches,
+           "makespan_s": round(m.makespan, 2),
+           "avg_latency_s": round(m.avg_latency, 4),
+           "stall_s": round(m.stall_time, 3),
+           "placement": m.memory.get("placement", {}),
+           "pcie_links": {name: ch.get("wait_time_s")
+                          for name, ch in m.memory.get(
+                              "channels", {}).get("pcie_channels", {}).items()},
+           "peer_links": {name: ch.get("wait_time_s")
+                          for name, ch in m.memory.get(
+                              "channels", {}).get("peer_channels", {}).items()},
+           "host_prefetch": m.memory.get("prefetch", {})}
+    if search_report is not None:
+        out["placement_search"] = search_report
+    return out
 
 
 # --------------------------------------------------------------------------- #
@@ -336,16 +387,30 @@ def run_online(args) -> dict:
     from repro.serve import OnlineGateway, build_multi_board_coe
 
     tenants = _parse_tenants(args)
-    tier = NUMA if args.tier == "numa" else UMA
+    tier = _fleet_tier(args, NUMA if args.tier == "numa" else UMA)
     coe = build_multi_board_coe([t.board for t in tenants],
                                 weights=[t.rate for t in tenants])
     policy = _policy_from_args(args)
     n_gpu, n_cpu = args.executors
+    devices = args.devices
     single = policy.assign == "single"
     if single:   # same fleet normalization as run_sim
-        n_gpu, n_cpu = 1, 0
-    pools, specs = make_executor_specs(tier, n_gpu, n_cpu)
-    system = CoServeSystem(coe, specs, pools, policy=policy, tier=tier)
+        n_gpu, n_cpu, devices = 1, 0, 1
+    # multi-tenant mixes over a multi-device fleet: the same FleetSpec path
+    # sim mode uses, so --devices/--links/--replication/--peer-bw drive the
+    # streaming gateway too (ROADMAP "online fleet mode" open item)
+    pools, specs = _fleet_pools(args, tier, n_gpu, n_cpu, devices)
+    placement, search_report = None, None
+    if args.placement == "search":
+        # no requests exist yet on the online path: search over the expected
+        # load (pre-assessed P(use), already weighted by tenant rates); the
+        # autoscaler re-plans replicas from *observed* load at scale events
+        trace = trace_from_usage(coe, length=512)
+        placement, search_report = _searched_placement(
+            args, coe, pools, specs, tier, trace)
+    system = CoServeSystem(coe, specs, pools, policy=policy, tier=tier,
+                           links=args.links, replication=args.replication,
+                           placement=placement)
 
     admission = _admission_from_args(
         args, mean_rate=sum(t.rate for t in tenants) / len(tenants))
@@ -360,10 +425,13 @@ def run_online(args) -> dict:
                        tick_interval=args.tick)
     report = gw.run(max_requests=args.requests)
     out = {"mode": "online", "engine": "sim", "tier": tier.name,
-           "policy": args.policy,
+           "policy": args.policy, "devices": devices, "links": args.links,
+           "replication": args.replication,
            "tenants": {t.name: {"board": t.board.name, "rate_rps": t.rate,
                                 "process": t.process,
                                 "slo_s": t.slo_seconds} for t in tenants}}
+    if search_report is not None:
+        out["placement_search"] = search_report
     out.update(report.to_json())
     return out
 
@@ -458,8 +526,8 @@ def main(argv=None):
                     default=(3, 1), help="n_gpu,n_cpu (per device when "
                                          "--devices > 1)")
     ap.add_argument("--devices", type=int, default=1,
-                    help="sim mode: number of accelerator devices, each with "
-                         "its own pool behind the shared SSD")
+                    help="sim/online modes: number of accelerator devices, "
+                         "each with its own pool behind the shared SSD")
     ap.add_argument("--links", default="shared",
                     choices=["shared", "per-device"],
                     help="host->device channel layout: one PCIe link the "
@@ -467,6 +535,17 @@ def main(argv=None):
     ap.add_argument("--replication", type=int, default=0,
                     help="planned device-pool copies of the hottest experts "
                          "beyond the primary (0 = paper placement)")
+    ap.add_argument("--peer-bw", type=float, default=0.0,
+                    help="device<->device (NVLink/ICI-class) peer fabric "
+                         "bandwidth in GB/s; replicas of experts resident "
+                         "on a sibling pool materialize pool->pool instead "
+                         "of reloading from host DRAM (0 = no fabric)")
+    ap.add_argument("--placement", default="greedy",
+                    choices=["greedy", "search"],
+                    help="initial expert placement: the greedy hot-first "
+                         "sweep (paper §4.1) or the cost-model local search "
+                         "over a workload trace (falls back to greedy when "
+                         "nothing improves)")
     ap.add_argument("--out", default=None)
     # --- online-mode flags (repro.serve) ------------------------------- #
     ap.add_argument("--engine", default="sim", choices=["sim", "real"],
@@ -507,11 +586,17 @@ def main(argv=None):
     if args.replication < 0:
         raise SystemExit(f"--replication must be >= 0, "
                          f"got {args.replication}")
-    if args.mode != "sim" and (args.devices > 1 or args.links != "shared"
-                               or args.replication):
-        raise SystemExit("--devices/--links/--replication are --mode sim "
-                         "fleet knobs; online and real modes run the "
-                         "single-device shared-link topology")
+    if args.peer_bw < 0:
+        raise SystemExit(f"--peer-bw must be >= 0, got {args.peer_bw}")
+    fleet_flags = (args.devices > 1 or args.links != "shared"
+                   or args.replication or args.peer_bw
+                   or args.placement != "greedy")
+    if fleet_flags and (args.mode == "real"
+                        or (args.mode == "online" and args.engine == "real")):
+        raise SystemExit("--devices/--links/--replication/--peer-bw/"
+                         "--placement drive the simulated fleet; --mode real "
+                         "and --engine real run the single-device "
+                         "shared-link topology")
     if args.mode == "online":
         result = run_online(args) if args.engine == "sim" \
             else run_online_real(args)

@@ -1,5 +1,10 @@
 """Shared transfer channels with bandwidth contention.
 
+Source of truth: the only model of link occupancy — every contended
+completion time in the system comes from ``TransferChannel.begin``, and
+every backlog query reads ``busy_until`` here; no other code may track who
+owns a link.
+
 The seed modeled every executor's load path as a private link: N executors
 could each stream an expert off the *same* SSD at full bandwidth. A
 ``TransferChannel`` is the corrected model: one physical link (SSD, PCIe)

@@ -1,5 +1,10 @@
 """MemoryHierarchy: one object that owns disk -> host -> device residency.
 
+Source of truth: the only place residency, channel state and transfer
+pricing meet — every consumer that asks "what would loading expert X into
+pool Y cost *right now*" must ask ``assignment_cost`` here, never re-derive
+it.
+
 The seed scattered the hierarchy across four half-coordinated structures
 (``HostCache``, ``ModelPool``, ``HostStore``, ``RealEngine.device_params``)
 with the load-latency math duplicated in three more places. This facade is
@@ -39,6 +44,10 @@ class MemoryHierarchy:
         self.coe = coe
         self.spec = tier if tier is not None else TierSpec(name="default")
         groups = list(pools) if link_groups is None else list(link_groups)
+        # the device-pool groups: PCIe links in per-device mode, and the only
+        # legal endpoints of peer (device->device) replica copies
+        self.link_groups = set(groups)
+        self._peer_order = sorted(self.link_groups)   # deterministic sources
         self.topology = TierTopology.from_spec(self.spec, groups=groups,
                                                links=links)
         self.transfer = TransferEngine(self.topology)
@@ -81,11 +90,38 @@ class MemoryHierarchy:
     def in_host(self, expert_id: str) -> bool:
         return self.host is not None and expert_id in self.host
 
+    def peer_source(self, expert_id: str, dst_group: str) -> Optional[str]:
+        """The device pool a peer (pool -> pool) copy into ``dst_group``
+        could read from: a *sibling* device pool holding a settled copy
+        (DEVICE or PINNED — an in-flight LOADING copy cannot be forwarded).
+        None when the tier has no peer fabric, the destination is not a
+        device pool, or no sibling holds the expert — in which case the
+        load falls back to the host-DRAM / disk path."""
+        if not self.topology.has_peer or dst_group not in self.link_groups:
+            return None
+        for g in self._peer_order:
+            if g == dst_group:
+                continue
+            pool = self.pools.get(g)
+            if pool is None:
+                continue
+            st = pool.residency(expert_id)
+            if st in (Residency.DEVICE, Residency.PINNED):
+                return g
+        return None
+
     # ------------------------------------------------------------------ #
     # latency prediction (uncontended — scheduling decisions)
     # ------------------------------------------------------------------ #
-    def predict_device_load(self, expert_id: str) -> float:
+    def predict_device_load(self, expert_id: str, group: str = "") -> float:
+        """Uncontended service time of bringing the expert into ``group``'s
+        pool from its *current* tier: a sibling device pool over the peer
+        fabric when one holds it (and ``group`` identifies a device pool),
+        else host DRAM / disk. Callers that don't know the destination pool
+        omit ``group`` and get the host/disk formula (seed behaviour)."""
         mem = self.coe.spec(expert_id).mem_bytes
+        if group and self.peer_source(expert_id, group) is not None:
+            return self.transfer.predict_peer(mem)
         return self.transfer.predict(mem, in_host_cache=self.in_host(expert_id))
 
     def predict_host_load(self, expert_id: str) -> float:
@@ -97,8 +133,17 @@ class MemoryHierarchy:
     def begin_device_load(self, expert_id: str, now: float,
                           group: str = "") -> Transfer:
         """Move an expert into device ``group``'s memory over the contended
-        links, populating the host tier on the way through (NUMA)."""
+        links, populating the host tier on the way through (NUMA). When a
+        sibling device pool holds a settled copy and the tier declares a
+        peer fabric, the load is a pool -> pool copy on the destination's
+        peer ingress link instead of a host-DRAM reload — the cheap replica
+        materialization path ``PlacementPlan.rebalance`` counts on."""
         mem = self.coe.spec(expert_id).mem_bytes
+        if self.peer_source(expert_id, group) is not None:
+            tr = self.transfer.begin_peer_copy(now, mem, group)
+            # a promotion this copy strands in host DRAM was never consumed
+            self.prefetcher.note_device_load(expert_id, served_from_host=False)
+            return tr
         in_host = self.in_host(expert_id)
         ready_at = self.host.ready_time(expert_id) if in_host else 0.0
         tr = self.transfer.begin_device_load(now, mem, in_host_cache=in_host,
@@ -127,52 +172,73 @@ class MemoryHierarchy:
     def load_backlog(self, expert_id: str, now: float,
                      group: str = "", device: str = "") -> float:
         """Queueing delay a load into ``group`` issued now would face on its
-        first link: SSD for disk-sourced loads and for host/CPU executors
+        first link: the destination's peer ingress link for pool -> pool
+        copies, SSD for disk-sourced loads and for host/CPU executors
         (whose loads are disk -> DRAM and never touch a PCIe channel), the
         group's PCIe channel for device-bound host hits."""
-        if device not in ("host", "cpu") and self.in_host(expert_id) \
-                and not self.spec.unified:
-            ch = self.topology.pcie_for(group)
-        else:
-            ch = self.topology.disk_channel
+        if device not in ("host", "cpu"):
+            if self.peer_source(expert_id, group) is not None:
+                ch = self.topology.peer_for(group)
+                return max(0.0, ch.busy_until - now)
+            if self.in_host(expert_id) and not self.spec.unified:
+                ch = self.topology.pcie_for(group)
+                return max(0.0, ch.busy_until - now)
+        ch = self.topology.disk_channel
         return max(0.0, ch.busy_until - now)
 
     def link_backlog(self, expert_id: str, now: float,
                      group: str = "") -> float:
         """Total queueing delay across every link a device load into
-        ``group`` would ride: host hits pay the group's PCIe queue alone,
+        ``group`` would ride: peer-sourced copies pay the destination's peer
+        ingress queue, host hits pay the group's PCIe queue alone,
         disk-sourced loads pay the shared SSD fan-in and then the PCIe leg.
         This is the contended-channel term of the scheduler's residency-aware
         assignment cost — the same channels the TransferEngine charges and
-        the prefetcher gates on."""
-        def backlog(ch):
-            return max(0.0, ch.busy_until - now)
+        the prefetcher gates on, so a peer-backlogged replica never looks
+        free."""
+        if self.peer_source(expert_id, group) is not None:
+            return self._backlog(self.topology.peer_for(group), now)
+        return self._host_disk_backlog(expert_id, now, group)
+
+    @staticmethod
+    def _backlog(ch, now: float) -> float:
+        return max(0.0, ch.busy_until - now)
+
+    def _host_disk_backlog(self, expert_id: str, now: float,
+                           group: str) -> float:
+        """``link_backlog``'s host/disk arm, with the peer check hoisted so
+        ``assignment_cost`` resolves the peer source exactly once."""
         if self.spec.unified:
-            return backlog(self.topology.disk_channel)
+            return self._backlog(self.topology.disk_channel, now)
         if self.in_host(expert_id):
-            return backlog(self.topology.pcie_for(group))
-        return backlog(self.topology.disk_channel) \
-            + backlog(self.topology.pcie_for(group))
+            return self._backlog(self.topology.pcie_for(group), now)
+        return self._backlog(self.topology.disk_channel, now) \
+            + self._backlog(self.topology.pcie_for(group), now)
 
     def assignment_cost(self, expert_id: str, now: float, group: str = "",
                         device: str = "") -> float:
         """Residency-aware expert-switch cost of assigning a request to an
         executor on ``group``: the uncontended service time from the tier the
-        expert actually occupies (HOST vs DISK) plus the backlog of the
-        specific link(s) the load would ride. A disk->host promotion still
-        in flight delays the PCIe leg to its SSD-leg completion, so the wait
-        is the larger of the link backlog and that settle gap. Replaces the
-        executor-local ``load_latency`` guess in
-        ``RequestScheduler.additional_latency``."""
+        expert actually occupies (sibling device pool via the peer fabric /
+        HOST / DISK) plus the backlog of the specific link(s) the load would
+        ride. A disk->host promotion still in flight delays the PCIe leg to
+        its SSD-leg completion, so the wait is the larger of the link
+        backlog and that settle gap. Replaces the executor-local
+        ``load_latency`` guess in ``RequestScheduler.additional_latency``."""
         if device in ("host", "cpu"):
-            return self.predict_host_load(expert_id) + max(
-                0.0, self.topology.disk_channel.busy_until - now)
-        wait = self.link_backlog(expert_id, now, group)
+            return self.predict_host_load(expert_id) + self._backlog(
+                self.topology.disk_channel, now)
+        mem = self.coe.spec(expert_id).mem_bytes
+        if self.peer_source(expert_id, group) is not None:   # resolved once
+            return self.transfer.predict_peer(mem) \
+                + self._backlog(self.topology.peer_for(group), now)
+        wait = self._host_disk_backlog(expert_id, now, group)
         if self.host is not None and self.in_host(expert_id) \
                 and not self.spec.unified:
             # begin_device_load starts the PCIe leg at max(now, ready_at)
             wait = max(wait, self.host.ready_time(expert_id) - now)
-        return self.predict_device_load(expert_id) + wait
+        return self.transfer.predict(
+            mem, in_host_cache=self.in_host(expert_id)) + wait
 
     def speculation_ok(self, expert_id: str, now: float,
                        group: str = "", device: str = "") -> bool:

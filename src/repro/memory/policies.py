@@ -1,5 +1,9 @@
 """Pluggable eviction policies, shared by every tier of the hierarchy.
 
+Source of truth: the only place eviction *order* is defined — the device
+pool's manager and the host tier both consume this registry, so a policy
+name means the same ranking on every tier.
+
 The seed hard-coded eviction orders twice: once in ``ExpertManager`` (device
 pool) and once in ``HostCache._pick_victim`` (host tier), with subtly
 different semantics. A policy is now one object implementing ``order``:

@@ -1,5 +1,11 @@
 """Dependency-aware cross-tier prefetch (disk -> host ahead of demand).
 
+Source of truth: the only issuer of speculative disk->host promotions, and
+the owner of the speculation gates (``max_backlog_s`` /
+``overlap_backlog_s``) that keep *all* speculative traffic — including the
+executors' overlap prefetch, which asks ``speculation_ok`` — from queueing
+ahead of demand loads.
+
 The paper exploits the CoE dependency graph for device-pool *eviction*
 (§4.3); the same property predicts *future loads*: while an upstream expert
 executes, its likely downstream experts — weighted by the routing edge

@@ -1,5 +1,9 @@
 """Per-tier residency: the device pool and the host-DRAM tier.
 
+Source of truth: the only record of which experts occupy which tier's bytes
+(capacity accounting, pin counts, in-flight markers) — ``MemoryHierarchy``
+aggregates these per-tier views into the global ``Residency`` answer.
+
 Both tiers track the same explicit per-expert state machine
 (``tiers.Residency``) and both rank eviction victims through the shared
 policy registry (``policies``). Two orderings are kept per tier — use order

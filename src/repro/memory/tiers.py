@@ -1,15 +1,24 @@
 """Tier topology: the storage hierarchy as a first-class object (paper §2.2).
 
+Source of truth: this module owns the *shape* of the hierarchy — which links
+exist and who rides which one. Pricing lives in ``transfer.TransferEngine``;
+per-expert residency lives in ``residency``; this module only declares the
+graph.
+
 A CoE catalog does not fit in device memory, so every expert lives somewhere
 on a disk -> host DRAM -> device chain and serving is dominated by the
 traffic between those tiers. ``TierSpec`` carries the per-device numbers
 (bandwidths, fixed overheads, capacities); ``TierTopology`` instantiates the
-transfer links between the tiers as a per-device graph: one SSD link that
-every device fans in on, and one PCIe/NVLink-class host->device channel per
-accelerator (``links="per-device"``) or one channel shared by the whole
-fleet (``links="shared"``, the single-board layout). Every consumer —
-simulator, real engine, scheduler predictions, profiler — sees the same
-graph instead of re-deriving pieces of it.
+transfer links between the tiers as a per-device graph with three channel
+classes: one SSD link that every device fans in on, one PCIe-class
+host->device channel per accelerator (``links="per-device"``) or one channel
+shared by the whole fleet (``links="shared"``, the single-board layout), and
+— when ``TierSpec.peer_bw > 0`` — one NVLink/ICI-class *peer* ingress link
+per device pool, so a replica of an expert already resident on a sibling
+device materializes via a pool -> pool copy at peer bandwidth instead of a
+host-DRAM reload over PCIe. Every consumer — simulator, real engine,
+scheduler predictions, profiler — sees the same graph instead of
+re-deriving pieces of it.
 
 UMA devices (the paper's Apple-M2-class board) collapse the middle tier:
 there is no separate host cache and loads go disk -> unified memory over the
@@ -45,6 +54,10 @@ class TierSpec:
     unified: bool = False            # UMA: no separate host cache tier
     host_cache_bytes: int = 16 << 30
     device_bytes: int = 12 << 30
+    peer_bw: float = 0.0             # device<->device (NVLink/ICI-class)
+    #                                  pool->pool copy bandwidth; 0 = no peer
+    #                                  fabric (the single-board presets)
+    peer_overhead: float = 0.002     # fixed per-copy overhead on the fabric
 
 
 NUMA = TierSpec(name="numa", disk_bw=530e6, host_to_device_bw=12e9,
@@ -77,13 +90,19 @@ class TierTopology:
     layout — every executor queues on it), with ``links="per-device"`` each
     accelerator pool gets its own channel, so two devices can pull experts
     from host DRAM concurrently while still contending on the one SSD.
-    Concurrent transfers on one channel queue instead of each pretending it
-    has the link to itself.
+    ``peer_channels`` are the third channel class (present only when the
+    tier declares ``peer_bw``): per-pool NVLink/ICI ingress links for
+    device -> device replica copies, keyed by the *destination* pool group —
+    concurrent copies into one device queue on its ingress port while
+    different devices receive concurrently. Concurrent transfers on one
+    channel queue instead of each pretending it has the link to itself.
     """
     spec: TierSpec
     disk_channel: TransferChannel
     pcie_channels: Dict[str, TransferChannel]
     links: str = "shared"
+    peer_channels: Dict[str, TransferChannel] = dataclasses.field(
+        default_factory=dict)
 
     SHARED_KEY = ""   # pcie_channels key of the fleet-wide link (shared mode)
 
@@ -118,6 +137,26 @@ class TierTopology:
             ch = TransferChannel(f"{self.spec.name}/pcie[{group}]",
                                  self.spec.host_to_device_bw)
             self.pcie_channels[group] = ch
+        return ch
+
+    @property
+    def has_peer(self) -> bool:
+        """Whether the tier declares a device<->device fabric at all."""
+        return self.spec.peer_bw > 0 and not self.spec.unified
+
+    def peer_for(self, group: str) -> TransferChannel:
+        """The peer ingress link a pool->pool copy into ``group`` rides
+        (created on first use, like late-added per-device PCIe links).
+        Only meaningful when the tier declares ``peer_bw``."""
+        if not self.has_peer:
+            raise ValueError(
+                f"tier {self.spec.name!r} declares no peer fabric "
+                "(peer_bw == 0 or unified memory)")
+        ch = self.peer_channels.get(group)
+        if ch is None:
+            ch = TransferChannel(f"{self.spec.name}/peer[{group}]",
+                                 self.spec.peer_bw)
+            self.peer_channels[group] = ch
         return ch
 
     @property

@@ -1,16 +1,18 @@
 """TransferEngine: the single source of truth for expert-switch cost.
 
+Source of truth: this module is the ONLY load-latency formula in the system.
 The seed computed load latency in three places (``core.memory.load_latency``,
 ``SimEngine.load_latency``, and the profiled values the real engine predicts
 with) that could silently drift apart. Every path now goes through here:
 
-  ``predicted_load_latency``   the closed-form uncontended cost — what the
-                               scheduler, work stealing, pending-time and
+  ``predicted_load_latency`` /  the closed-form uncontended cost — what the
+  ``predicted_peer_copy_latency``  scheduler, work stealing, pending-time and
                                profiler use (decisions must not depend on
                                transient queue state);
   ``begin_device_load`` /      the *contended* cost — actual occupancy of the
-  ``begin_host_load`` /        shared SSD / PCIe channels, what the simulator
-  ``begin_host_promotion``     charges a transfer when it really happens.
+  ``begin_host_load`` /        shared SSD / PCIe / peer channels, what the
+  ``begin_host_promotion`` /   simulator charges a transfer when it really
+  ``begin_peer_copy``          happens.
 
 A transfer that finds its link busy queues behind the in-flight traffic, so
 the simulated latency of a load is ``channel wait + service`` while its
@@ -39,6 +41,13 @@ def predicted_host_load_latency(spec: TierSpec, mem_bytes: int) -> float:
     return spec.disk_overhead + mem_bytes / spec.disk_bw
 
 
+def predicted_peer_copy_latency(spec: TierSpec, mem_bytes: int) -> float:
+    """Uncontended device -> device replica copy over the peer fabric."""
+    if spec.peer_bw <= 0:
+        raise ValueError(f"tier {spec.name!r} declares no peer fabric")
+    return spec.peer_overhead + mem_bytes / spec.peer_bw
+
+
 class TransferEngine:
     """Owns the shared channels of one ``TierTopology`` and prices every
     cross-tier movement on them."""
@@ -53,6 +62,9 @@ class TransferEngine:
 
     def predict_host(self, mem_bytes: int) -> float:
         return predicted_host_load_latency(self.spec, mem_bytes)
+
+    def predict_peer(self, mem_bytes: int) -> float:
+        return predicted_peer_copy_latency(self.spec, mem_bytes)
 
     # --- contended transfers (occupy the shared links) ------------------ #
     def begin_device_load(self, now: float, mem_bytes: int,
@@ -96,14 +108,18 @@ class TransferEngine:
         return self.topology.disk_channel.begin(
             now, mem_bytes, overhead=self.spec.disk_overhead)
 
+    def begin_peer_copy(self, now: float, mem_bytes: int,
+                        group: str) -> Transfer:
+        """Device -> device replica copy into ``group``'s pool over the peer
+        fabric: rides (and queues on) the destination's peer ingress link
+        only — neither the SSD fan-in nor any PCIe channel is touched, which
+        is the whole point of materializing replicas pool -> pool."""
+        return self.topology.peer_for(group).begin(
+            now, mem_bytes, overhead=self.spec.peer_overhead)
+
     # ------------------------------------------------------------------ #
-    def snapshot(self) -> dict:
-        """Per-link stats. ``disk_channel``/``pcie_channel`` keep the PR 2
-        single-link keys (``pcie_channel`` aggregates across devices in
-        per-device mode so existing bench trajectories stay comparable);
-        ``pcie_channels`` breaks the host->device traffic out per link."""
-        per_link = {ch.name: ch.snapshot()
-                    for ch in self.topology.pcie_channels.values()}
+    @staticmethod
+    def _aggregate(per_link: dict) -> dict:
         agg = {"transfers": 0, "bytes_moved": 0,
                "busy_time_s": 0.0, "wait_time_s": 0.0}
         for snap in per_link.values():
@@ -111,7 +127,21 @@ class TransferEngine:
                 agg[k] += snap[k]
         agg["busy_time_s"] = round(agg["busy_time_s"], 6)
         agg["wait_time_s"] = round(agg["wait_time_s"], 6)
+        return agg
+
+    def snapshot(self) -> dict:
+        """Per-link stats. ``disk_channel``/``pcie_channel`` keep the PR 2
+        single-link keys (``pcie_channel`` aggregates across devices in
+        per-device mode so existing bench trajectories stay comparable);
+        ``pcie_channels``/``peer_channels`` break the host->device and
+        device->device traffic out per link."""
+        per_link = {ch.name: ch.snapshot()
+                    for ch in self.topology.pcie_channels.values()}
+        per_peer = {ch.name: ch.snapshot()
+                    for ch in self.topology.peer_channels.values()}
         return {"disk_channel": self.topology.disk_channel.snapshot(),
-                "pcie_channel": agg,
+                "pcie_channel": self._aggregate(per_link),
                 "pcie_channels": per_link,
+                "peer_channel": self._aggregate(per_peer),
+                "peer_channels": per_peer,
                 "links": self.topology.links}

@@ -1,5 +1,11 @@
 """Online serving subsystem: streaming arrivals, multi-tenant SLO telemetry,
-admission control and load-driven autoscaling over the CoServe core."""
+admission control and load-driven autoscaling over the CoServe core.
+
+One source-of-truth per concern (stated in each module's docstring):
+arrivals stamp tenant/deadline metadata, slo owns the targets, telemetry
+owns the streaming counts, admission owns rejection, the autoscaler owns
+runtime fleet changes, and the gateway is the single composition point.
+"""
 from repro.serve.admission import AdmissionConfig, AdmissionController
 from repro.serve.arrivals import (BOARDS, TenantSpec, board_payload_stream,
                                   build_multi_board_coe, bursty_gaps,

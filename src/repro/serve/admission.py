@@ -1,5 +1,9 @@
 """Load-shedding admission control for the online gateway.
 
+Source of truth: the only place an arrival may be rejected — shedding
+happens on fresh SOURCE arrivals in one hook, never mid-chain and never
+inside the scheduler, so "admitted" has exactly one meaning in telemetry.
+
 Under sustained overload an open queue grows without bound and *every*
 tenant's tail latency diverges. The controller gates fresh arrivals (never
 in-flight follow-ups — shedding mid-chain would strand pinned experts and

@@ -1,5 +1,10 @@
 """Composable arrival processes and multi-tenant request streams.
 
+Source of truth: the only generator of online Requests — tenant identity,
+deadline stamping (``arrival + slo_seconds``) and the chain-root arrival
+anchor are set here once, and every downstream consumer (telemetry, SLO
+classification, EDF priority) reads them instead of re-deriving.
+
 Offline evaluation materializes the whole task up front
 (``workload.make_task_requests``); the online layer instead *generates*
 arrivals lazily so a stream can run indefinitely in O(1) memory:

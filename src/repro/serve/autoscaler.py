@@ -1,5 +1,10 @@
 """Load-driven executor autoscaling over the elasticity hooks.
 
+Source of truth: the only runtime caller of ``add_executor`` /
+``fail_executor`` / ``rebalance_placement`` on the online path — fleet
+shape changes, their batch-budget re-division and the resulting placement
+rebalances all originate from this control loop's ``step``.
+
 The seed already supports runtime topology changes (``add_executor`` /
 ``fail_executor`` + INJECT, built for the fault-tolerance tests); this module
 closes the loop: a periodic controller reads queue depth and SLO-violation

@@ -1,5 +1,10 @@
 """Online serving gateway: streaming front-end over the event-driven core.
 
+Source of truth: the only composition point of the online subsystem — the
+simulation hooks (admission, completion, per-stage telemetry, ticks) are
+wired exactly once here, so there is one place where "what runs on an
+online tick" is defined.
+
 ``OnlineGateway`` wires the pieces of the online subsystem around an existing
 ``CoServeSystem`` (either engine — ``SimEngine`` advances virtual time from
 profiles, ``RealEngine`` advances it by measured wall time of real JAX

@@ -1,5 +1,9 @@
 """Per-tenant SLO targets and deadline-aware scheduling priority.
 
+Source of truth: the only mapping from tenant to latency target —
+violation classification (TelemetryHub) and EDF queue priority both read
+the targets from here, so "violates its SLO" has one definition.
+
 An SLO is an end-to-end latency target per tenant (``TenantSpec.slo_seconds``
 stamps each request's absolute ``deadline`` at generation time). Two
 consumers:

@@ -1,5 +1,9 @@
 """Streaming SLO telemetry: windowed throughput + online quantiles.
 
+Source of truth: the only accumulator of streaming per-tenant / per-expert
+statistics and SLO-violation counts — the autoscaler and reports consume
+this hub's numbers; nothing else counts violations.
+
 Offline ``Metrics`` sorts every latency after the run; a 24/7 stream cannot.
 ``P2Quantile`` is the P-square algorithm (Jain & Chlamtac 1985): O(1) memory
 per tracked quantile, five markers adjusted per observation with parabolic

@@ -1,0 +1,74 @@
+"""Docs integrity: relative links in README.md and docs/ must resolve
+(the same check CI's docs job runs via tools/check_links.py)."""
+import importlib.util
+import os
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _checker():
+    path = os.path.join(ROOT, "tools", "check_links.py")
+    spec = importlib.util.spec_from_file_location("check_links", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_docs_exist():
+    for name in ("architecture.md", "placement.md", "serving.md",
+                 "benchmarks.md"):
+        assert os.path.exists(os.path.join(ROOT, "docs", name)), name
+
+
+def test_no_dead_relative_links():
+    mod = _checker()
+    broken = []
+    for md in mod.iter_markdown([os.path.join(ROOT, "README.md"),
+                                 os.path.join(ROOT, "docs")]):
+        broken.extend(mod.dead_links(md))
+    assert broken == []
+
+
+def test_checker_handles_titles_and_ignores_code_fences(tmp_path):
+    mod = _checker()
+    md = tmp_path / "x.md"
+    md.write_text('[a](missing.md "title")\n\n```\n[b](also/missing.md)\n```\n')
+    broken = mod.dead_links(str(md))
+    assert [t for _, t in broken] == ["missing.md"]
+
+
+def test_readme_points_at_docs():
+    with open(os.path.join(ROOT, "README.md"), encoding="utf-8") as f:
+        text = f.read()
+    for target in ("docs/architecture.md", "docs/placement.md",
+                   "docs/benchmarks.md"):
+        assert target in text, f"README must link {target}"
+
+
+def test_benchmarks_doc_covers_every_registered_suite():
+    """docs/benchmarks.md must name every key in the benchmarks.run
+    registry — the registry is the source of truth, the doc follows it."""
+    import sys
+    sys.path.insert(0, ROOT)
+    try:
+        from benchmarks.run import SUITES
+    finally:
+        sys.path.pop(0)
+    with open(os.path.join(ROOT, "docs", "benchmarks.md"),
+              encoding="utf-8") as f:
+        text = f.read()
+    missing = [k for k in SUITES if f"`{k}`" not in text]
+    assert not missing, f"docs/benchmarks.md omits suites: {missing}"
+
+
+def test_suite_help_generated_from_registry():
+    import sys
+    sys.path.insert(0, ROOT)
+    try:
+        from benchmarks.run import SUITES, suite_help
+    finally:
+        sys.path.pop(0)
+    for key in SUITES:
+        assert key in suite_help()

@@ -1,0 +1,430 @@
+"""Cost-model placement search + peer-link channel tests: seeded-random
+greedy-equivalence (search never scores worse than its seed), replica-budget
+and capacity invariants by construction, peer-channel accounting (copies
+never bypass backlog pricing), and the online-fleet CLI path."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import COSERVE, CoEModel, CoServeSystem, ExpertSpec, \
+    RoutingModule
+from repro.core.workload import device_profile
+from repro.core.serving import ExecutorSpec
+from repro.fleet import (FleetSpec, PlacementPlan, SearchConfig, build_fleet,
+                         replay_cost, search_placement, trace_from_counts,
+                         trace_from_requests, trace_from_usage,
+                         validate_pool_groups)
+from repro.memory import MemoryHierarchy, Residency, TierSpec
+
+MB = 1 << 20
+
+PEER_TIER = TierSpec(name="pt", disk_bw=2000e6, host_to_device_bw=3e9,
+                     unified=False, host_cache_bytes=8 << 30,
+                     device_bytes=2 << 30, peer_bw=50e9)
+NO_PEER_TIER = dataclasses.replace(PEER_TIER, peer_bw=0.0)
+
+
+def make_coe(n_experts=12, seed=0, mem_bytes=100 * MB, chain=False):
+    rng = np.random.RandomState(seed)
+    experts = [ExpertSpec(id=f"e{i:03d}", arch="resnet101",
+                          mem_bytes=mem_bytes,
+                          usage_prob=float(rng.rand()))
+               for i in range(n_experts)]
+    chain_prob = {"e000": {"e001": 0.9}} if chain and n_experts > 1 else None
+    return CoEModel(experts, RoutingModule(lambda d: "e000",
+                                           chain_prob=chain_prob))
+
+
+def two_pool_hierarchy(tier=PEER_TIER, links="per-device"):
+    coe = make_coe()
+    h = MemoryHierarchy(coe, tier, pools={"gpu0": 500 * MB, "gpu1": 500 * MB},
+                        links=links)
+    return coe, h
+
+
+# --------------------------------------------------------------------------- #
+# workload traces
+# --------------------------------------------------------------------------- #
+
+def test_trace_from_counts_proportional_and_deterministic():
+    counts = {"a": 30, "b": 10, "c": 0}
+    t1 = trace_from_counts(counts, length=40)
+    t2 = trace_from_counts(counts, length=40)
+    assert t1.events == t2.events
+    w = t1.weights()
+    assert w["a"] == 30 and w["b"] == 10 and "c" not in w
+    # interleaved, not sorted runs: "b" appears before the last "a"
+    assert t1.events.index("b") < len(t1.events) - 1 - \
+        t1.events[::-1].index("a")
+
+
+def test_trace_from_requests_includes_expected_chain():
+    from repro.core.coe import Request
+    coe = make_coe(chain=True)
+    reqs = [Request(id=i, expert_id="e000") for i in range(3)]
+    trace = trace_from_requests(coe, reqs, chain_threshold=0.5)
+    assert trace.weights() == {"e000": 3, "e001": 3}
+    # below-threshold edges are not expanded
+    trace_hi = trace_from_requests(coe, reqs, chain_threshold=0.95)
+    assert trace_hi.weights() == {"e000": 3}
+
+
+def test_trace_from_usage_covers_positive_probability_experts():
+    coe = make_coe(n_experts=6)
+    trace = trace_from_usage(coe, length=60)
+    assert set(trace.events) == set(coe.experts)
+
+
+# --------------------------------------------------------------------------- #
+# search: greedy equivalence + invariants
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("seed", range(8))
+def test_search_never_scores_worse_than_greedy_seed_random(seed):
+    """Seeded-random equivalence: on any trace, the searched plan's replay
+    cost is <= the greedy seed plan's, its capacity/replica invariants hold,
+    and a fallback returns the seed plan object itself."""
+    rng = np.random.RandomState(seed)
+    coe = make_coe(n_experts=int(rng.randint(8, 24)), seed=seed,
+                   mem_bytes=int(rng.randint(40, 150)) * MB)
+    n_pools = int(rng.randint(1, 4))
+    caps = {f"g{p}": int(rng.randint(200, 900)) * MB for p in range(n_pools)}
+    counts = {e: float(rng.exponential(10.0)) for e in coe.experts
+              if rng.rand() < 0.7}
+    trace = trace_from_counts(counts, length=120, exec_s=0.006)
+    cfg = SearchConfig(iterations=60, patience=30, seed=seed,
+                       replication=int(rng.randint(0, 3)),
+                       replica_fraction=float(rng.uniform(0.1, 0.5)))
+    seed_plan = PlacementPlan.build(coe, caps)
+    res = search_placement(coe, caps, trace, PEER_TIER, links="per-device",
+                           seed_plan=seed_plan, config=cfg)
+    assert res.cost <= res.seed_cost + 1e-9
+    assert res.seed_cost == pytest.approx(
+        replay_cost(coe, caps, seed_plan, trace, PEER_TIER,
+                    links="per-device"))
+    res.plan.validate()
+    snap = res.plan.snapshot()
+    for g, cap in caps.items():
+        assert snap["planned_bytes"].get(g, 0) <= cap
+    if res.fell_back:
+        assert res.plan is seed_plan
+    for eid in coe.experts:
+        pools = res.plan.pools_for(eid)
+        assert len(set(pools)) == len(pools)
+
+
+def test_search_replica_bytes_within_budget():
+    """Peer-channel replication invariant: a searched plan's replica bytes
+    never exceed the configured per-pool replica budget."""
+    coe = make_coe(n_experts=10, seed=3)
+    caps = {"g0": 500 * MB, "g1": 500 * MB, "g2": 500 * MB}
+    frac = 0.3
+    trace = trace_from_counts({"e000": 50, "e001": 20, "e002": 10},
+                              length=100, exec_s=0.006)
+    res = search_placement(
+        coe, caps, trace, PEER_TIER, links="per-device",
+        config=SearchConfig(iterations=120, seed=1, replication=2,
+                            replica_fraction=frac))
+    snap = res.plan.snapshot()
+    for g, cap in caps.items():
+        assert snap["replica_bytes"].get(g, 0) <= int(cap * frac)
+
+
+def test_search_beats_greedy_on_observed_load_divergence():
+    """When observed traffic diverges from the static P(use) the greedy
+    sweep placed by, the search must strictly improve and give the truly
+    hot expert a device copy."""
+    coe = make_coe(n_experts=12, seed=0)     # e000's P(use) is mid-pack
+    caps = {"gpu0": 300 * MB, "gpu1": 300 * MB}
+    trace = trace_from_counts({"e000": 100, "e001": 5, "e002": 5},
+                              length=200, exec_s=0.006)
+    seed_plan = PlacementPlan.build(coe, caps)
+    assert "e000" not in {e for e, _ in seed_plan.layout()}
+    res = search_placement(coe, caps, trace, PEER_TIER, links="per-device",
+                           seed_plan=seed_plan,
+                           config=SearchConfig(iterations=200, seed=0,
+                                               replication=1))
+    assert res.cost < res.seed_cost
+    assert not res.fell_back
+    assert res.plan.pools_for("e000")
+
+
+def test_from_assignments_rejects_invalid_plans():
+    coe = make_coe(n_experts=4)
+    caps = {"g0": 250 * MB, "g1": 250 * MB}
+    with pytest.raises(ValueError, match="unknown pool"):
+        PlacementPlan.from_assignments(coe, caps, {"e000": ["nope"]})
+    with pytest.raises(ValueError, match="replica"):
+        PlacementPlan.from_assignments(          # replication cap exceeded
+            coe, caps, {"e000": ["g0", "g1"]}, replication=0,
+            replica_fraction=0.5)
+    with pytest.raises(ValueError, match="replica budget"):
+        PlacementPlan.from_assignments(          # 100 MB replica vs 25 MB cap
+            coe, caps, {"e000": ["g0", "g1"]}, replication=1,
+            replica_fraction=0.1)
+    with pytest.raises(ValueError, match="overflows pool"):
+        PlacementPlan.from_assignments(
+            coe, caps, {"e000": ["g0"], "e001": ["g0"], "e002": ["g0"]})
+    with pytest.raises(ValueError, match="not in the catalog"):
+        PlacementPlan.from_assignments(coe, caps, {"nope": ["g0"]})
+
+
+def test_observed_load_not_inflated_by_requeued_orphans():
+    """A scale-down / failure re-queues queued work through assign();
+    expert_load (the rebalance replica signal) must stay one count per
+    served stage, not gain a spurious count per re-queue."""
+    from repro.core.coe import Request
+    from repro.core.profiler import ArchProfile, DeviceProfile
+
+    coe = make_coe(n_experts=3)
+    arch = ArchProfile(arch="resnet101", k=0.005, b=0.02, max_batch=8,
+                       mem_bytes=100 * MB, act_bytes_per_item=MB,
+                       load_latency_host=0.05, load_latency_disk=0.3)
+    prof = DeviceProfile(device="gpu", tier=NO_PEER_TIER,
+                         arch_profiles={"resnet101": arch})
+    specs = [ExecutorSpec("gpu", prof, 64 * MB, "gpu"),
+             ExecutorSpec("gpu", prof, 64 * MB, "gpu")]
+    system = CoServeSystem(coe, specs, {"gpu": 400 * MB}, policy=COSERVE,
+                           tier=NO_PEER_TIER)
+    victim = system.executors[0]
+    for i in range(6):
+        req = Request(id=i, expert_id="e001", arrival_time=0.0)
+        system.scheduler._arrange(victim, req)   # queue on the victim only
+        system.expert_load["e001"] = system.expert_load.get("e001", 0) + 1
+    assert system.expert_load["e001"] == 6
+    orphans = system.fail_executor(victim, now=0.0)
+    assert len(orphans) == 6
+    assert system.expert_load.get("e001", 0) == 0
+    for r in orphans:                            # re-assignment re-counts once
+        system.assign(r, 0.0)
+    assert system.expert_load["e001"] == 6
+
+
+def test_rebalance_orders_replicas_by_observed_load():
+    """Observed per-expert load re-ranks who claims replica slots: the
+    statically-cold but observed-hot expert wins the budget."""
+    coe = make_coe(n_experts=6, seed=2)
+    caps = {"g0": 400 * MB, "g1": 400 * MB}
+    cold = min(coe.experts.values(), key=lambda e: e.usage_prob).id
+    base = PlacementPlan.build(coe, caps)              # primaries only
+    assign = {e: list(base.pools_for(e)) for e in base.assignments}
+    plan = PlacementPlan.from_assignments(coe, caps, assign, replication=1,
+                                          replica_fraction=0.3)
+    new = plan.rebalance({"g0": 1.0, "g1": 1.0},
+                         expert_weights={cold: 1000.0})
+    assert new and new[0][0] == cold
+
+
+# --------------------------------------------------------------------------- #
+# peer-channel accounting
+# --------------------------------------------------------------------------- #
+
+def test_peer_copy_rides_peer_channel_only():
+    coe, h = two_pool_hierarchy()
+    h.pools["gpu0"].add("e000")
+    h.pools["gpu0"].ready.add("e000")
+    assert h.peer_source("e000", "gpu1") == "gpu0"
+    assert h.peer_source("e000", "gpu0") is None      # holder needs no copy
+    tr = h.begin_device_load("e000", 0.0, group="gpu1")
+    expect = PEER_TIER.peer_overhead + 100 * MB / PEER_TIER.peer_bw
+    assert tr.latency == pytest.approx(expect)
+    snap = h.transfer.snapshot()
+    assert snap["peer_channel"]["transfers"] == 1
+    assert snap["pcie_channel"]["transfers"] == 0
+    assert snap["disk_channel"]["transfers"] == 0
+
+
+def test_peer_copies_serialize_on_destination_ingress():
+    """Two same-instant copies into one pool queue FIFO on its peer ingress
+    link (no free bandwidth), while a copy into a different pool proceeds
+    concurrently."""
+    coe, h = two_pool_hierarchy()
+    for eid in ("e000", "e001"):
+        h.pools["gpu0"].add(eid)
+        h.pools["gpu0"].ready.add(eid)
+    t1 = h.begin_device_load("e000", 0.0, group="gpu1")
+    t2 = h.begin_device_load("e001", 0.0, group="gpu1")
+    assert t2.start == pytest.approx(t1.done)
+    assert t2.latency == pytest.approx(2 * t1.latency)
+
+
+def test_peer_backlog_prices_assignment_cost():
+    """Peer copies never bypass backlog pricing: a backlogged peer ingress
+    link shows up in link_backlog, assignment_cost and the speculation
+    gate, exactly like the PCIe/SSD channels."""
+    coe, h = two_pool_hierarchy()
+    h.pools["gpu0"].add("e000")
+    h.pools["gpu0"].ready.add("e000")
+    h.topology.peer_for("gpu1").busy_until = 5.0
+    assert h.link_backlog("e000", 0.0, "gpu1") == pytest.approx(5.0)
+    expect = PEER_TIER.peer_overhead + 100 * MB / PEER_TIER.peer_bw
+    assert h.assignment_cost("e000", 0.0, group="gpu1") \
+        == pytest.approx(5.0 + expect)
+    assert h.load_backlog("e000", 0.0, group="gpu1") == pytest.approx(5.0)
+    assert not h.speculation_ok("e000", 0.0, "gpu1")
+    # the holder's own pool is unaffected by the sibling's ingress queue
+    assert h.link_backlog("e000", 0.0, "gpu0") == 0.0
+
+
+def test_loading_copy_is_not_a_peer_source():
+    coe, h = two_pool_hierarchy()
+    h.pools["gpu0"].add("e000")
+    h.pools["gpu0"].loading["e000"] = 3.0      # in flight, not settled
+    assert h.peer_source("e000", "gpu1") is None
+
+
+def test_no_peer_fabric_falls_back_to_host_path():
+    """peer_bw == 0 (every preset): a sibling-resident expert still loads
+    over the host/disk path — byte-identical to the pre-peer behaviour."""
+    coe, h = two_pool_hierarchy(tier=NO_PEER_TIER)
+    h.pools["gpu0"].add("e000")
+    h.pools["gpu0"].ready.add("e000")
+    assert h.peer_source("e000", "gpu1") is None
+    tr = h.begin_device_load("e000", 0.0, group="gpu1")
+    t = NO_PEER_TIER
+    expect = t.disk_overhead + t.host_overhead + 100 * MB / t.disk_bw \
+        + 100 * MB / t.host_to_device_bw
+    assert tr.latency == pytest.approx(expect)
+    with pytest.raises(ValueError, match="peer"):
+        h.topology.peer_for("gpu1")
+
+
+def test_scheduler_sees_peer_replica_cost():
+    """End to end through the scheduler: with the peer fabric, an executor
+    whose sibling holds the expert prices the switch at peer-copy cost plus
+    the ingress backlog — not at the host-reload cost."""
+    from repro.core.profiler import ArchProfile, DeviceProfile
+    from repro.core.coe import Request
+
+    coe = make_coe(n_experts=3)
+    arch = ArchProfile(arch="resnet101", k=0.005, b=0.02, max_batch=8,
+                       mem_bytes=100 * MB, act_bytes_per_item=MB,
+                       load_latency_host=0.05, load_latency_disk=0.3)
+    prof = DeviceProfile(device="gpu", tier=PEER_TIER,
+                         arch_profiles={"resnet101": arch})
+    pools = {"gpu0": 220 * MB, "gpu1": 220 * MB}
+    specs = [ExecutorSpec("gpu", prof, 64 * MB, "gpu0"),
+             ExecutorSpec("gpu", prof, 64 * MB, "gpu1")]
+    system = CoServeSystem(coe, specs, pools, policy=COSERVE, tier=PEER_TIER,
+                           links="per-device")
+    ex_a, ex_b = system.executors
+    for pool in system.pools.values():
+        for eid in list(pool.resident):
+            pool.remove(eid)
+    ex_b.pool.add("e000")
+    ex_b.pool.ready.add("e000")
+    sched = system.scheduler
+    peer_cost = PEER_TIER.peer_overhead + 100 * MB / PEER_TIER.peer_bw
+    assert sched.switch_cost(ex_a, "e000", now=0.0) \
+        == pytest.approx(peer_cost)
+    system.hierarchy.topology.peer_for("gpu0").busy_until = 2.0
+    assert sched.switch_cost(ex_a, "e000", now=0.0) \
+        == pytest.approx(2.0 + peer_cost)
+
+
+def test_real_engine_routes_peer_loads_to_peer_thread():
+    from repro.core.engines import HostStore, RealEngine
+    from repro.memory import TierTopology
+
+    coe, h = two_pool_hierarchy()
+    h.pools["gpu0"].add("e000")
+    h.pools["gpu0"].ready.add("e000")
+    engine = RealEngine(coe, HostStore(), apply_fns={})
+    engine.bind_topology(h.topology, h)
+
+    class _Pool:
+        def __init__(self, group):
+            self.group = group
+
+    class _Ex:
+        device = "gpu"
+
+        def __init__(self, group):
+            self.pool = _Pool(group)
+
+        @property
+        def link_group(self):
+            return self.pool.group
+
+    ex1 = _Ex("gpu1")
+    assert engine._channel_name(ex1, "e000") == "pt/peer[gpu1]"
+    # no sibling copy -> the regular PCIe thread
+    assert engine._channel_name(ex1, "e001") == "pt/pcie[gpu1]"
+    # unbound hierarchy (seed call shape) never routes to peer
+    engine2 = RealEngine(coe, HostStore(), apply_fns={})
+    engine2.bind_topology(h.topology)
+    assert engine2._channel_name(ex1, "e000") == "pt/pcie[gpu1]"
+
+
+# --------------------------------------------------------------------------- #
+# online-fleet CLI
+# --------------------------------------------------------------------------- #
+
+def test_online_fleet_cli_smoke():
+    from repro.launch.serve import main
+    res = main(["--mode", "online", "--devices", "2", "--links", "per-device",
+                "--replication", "1", "--peer-bw", "50",
+                "--requests", "120", "--rates", "30",
+                "--autoscale", "none"])
+    assert res["mode"] == "online" and res["devices"] == 2
+    assert res["links"] == "per-device"
+    assert res["completed"] > 0
+    assert res["completed"] + res["shed"] >= 120
+
+
+def test_online_fleet_cli_search_placement_and_autoscale():
+    from repro.launch.serve import main
+    res = main(["--mode", "online", "--devices", "2", "--links", "per-device",
+                "--placement", "search", "--requests", "80", "--rates", "25",
+                "--autoscale", "auto", "--tick", "0.5"])
+    assert res["placement_search"]["cost_s"] \
+        <= res["placement_search"]["seed_cost_s"] + 1e-9
+    assert res["completed"] > 0
+
+
+def test_real_modes_reject_fleet_flags():
+    from repro.launch.serve import main
+    with pytest.raises(SystemExit):
+        main(["--mode", "real", "--devices", "2"])
+    with pytest.raises(SystemExit):
+        main(["--mode", "online", "--engine", "real", "--peer-bw", "50"])
+    with pytest.raises(SystemExit):
+        main(["--mode", "online", "--engine", "real",
+              "--placement", "search"])
+
+
+def test_fleet_replication_via_peer_lowers_materialization_stall():
+    """The acceptance scenario in miniature: replicas pulled onto a fresh
+    pool through rebalance_placement cost less wall-clock with the peer
+    fabric than via host reload."""
+    def stall(peer_bw):
+        tier = dataclasses.replace(PEER_TIER, peer_bw=peer_bw)
+        coe = make_coe(n_experts=16, seed=4)
+        fleet = FleetSpec(n_devices=2, gpu_per_device=1, n_cpu=0,
+                          links="per-device")
+        pools, specs = build_fleet(tier, fleet)
+        plan = PlacementPlan.build(coe, pools, pool_order=["gpu0"])
+        system = CoServeSystem(coe, specs, pools, policy=COSERVE, tier=tier,
+                               links="per-device", placement=plan)
+        for spec in coe.by_usage():
+            if spec.mem_bytes <= system.hierarchy.host.free_bytes():
+                system.hierarchy.host.insert(spec.id)
+        system.placement.replication = 1
+        system.placement.replica_fraction = 0.5
+        now = total = 0.0
+        for _ in range(50):
+            issued = system.rebalance_placement(now, max_loads=2)
+            if not issued:
+                break
+            for ex, eid, done in issued:
+                total += done - now
+                now = max(now, done)
+            for ex, eid, done in issued:
+                ex.finish_load(eid)
+        return total
+
+    host_reload = stall(0.0)
+    peer = stall(50e9)
+    assert host_reload > 0.0
+    assert peer < host_reload

@@ -1,0 +1,63 @@
+"""Fail on dead relative links in markdown files (the CI docs gate).
+
+    python tools/check_links.py README.md docs
+
+Every ``[text](target)`` whose target is not an absolute URL (http/https/
+mailto) must resolve to an existing file or directory relative to the
+markdown file that contains it. Exit code 1 lists every dead link.
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+from typing import Iterator, List, Tuple
+
+# [text](target), [text](target#frag), [text](target "title"); images too
+_LINK_RE = re.compile(
+    r"\[[^\]]*\]\(\s*([^)#\s]+)(?:#[^)\s]*)?(?:\s+\"[^\"]*\")?\s*\)")
+_FENCE_RE = re.compile(r"```.*?```", re.DOTALL)
+_EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def iter_markdown(paths: List[str]) -> Iterator[str]:
+    for path in paths:
+        if os.path.isdir(path):
+            for root, _, files in os.walk(path):
+                for name in sorted(files):
+                    if name.endswith(".md"):
+                        yield os.path.join(root, name)
+        else:
+            yield path
+
+
+def dead_links(md_path: str) -> List[Tuple[str, str]]:
+    """(file, target) pairs whose relative target does not exist."""
+    with open(md_path, encoding="utf-8") as f:
+        text = f.read()
+    text = _FENCE_RE.sub("", text)      # code examples are not navigation
+    base = os.path.dirname(os.path.abspath(md_path))
+    out = []
+    for target in _LINK_RE.findall(text):
+        if target.startswith(_EXTERNAL):
+            continue
+        if not os.path.exists(os.path.join(base, target)):
+            out.append((md_path, target))
+    return out
+
+
+def main(argv: List[str]) -> int:
+    paths = argv or ["README.md", "docs"]
+    broken = []
+    checked = 0
+    for md in iter_markdown(paths):
+        checked += 1
+        broken.extend(dead_links(md))
+    for md, target in broken:
+        print(f"DEAD LINK: {md}: ({target})")
+    print(f"{checked} markdown files checked, {len(broken)} dead links")
+    return 1 if broken else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
