@@ -17,7 +17,8 @@ PlacementPlan replication:
 The workload is sized so the working set lives in host DRAM (loads are
 PCIe-leg bound — the regime where link layout matters) while the device
 pools only hold a fraction of it (so experts really switch). Per-link wait
-times are reported for every row.
+times are reported for every row. Every cell is one declarative
+``DeploymentSpec`` run through ``repro.api.Session``.
 
 Emits ``BENCH_fleet.json`` (suite key ``fleet`` in benchmarks.run).
 """
@@ -25,26 +26,24 @@ from __future__ import annotations
 
 import json
 
-from repro.core import COSERVE, CoServeSystem, Simulation
-from repro.core.workload import (BoardSpec, build_board_coe,
-                                 make_task_requests)
-from repro.fleet import FleetSpec, build_fleet
-from repro.memory import TierSpec
+from repro.api import (BoardSection, DeploymentSpec, FleetSection,
+                       MemorySection, ModelSpec, Session, ServingSection,
+                       WorkloadSection)
 
 OUT_PATH = "BENCH_fleet.json"
 
 # thrash-heavy board: ~21 GB of active experts against 3 GB pools (12 GB at
 # 4 devices), Zipf-hot with short same-type runs so replicating the head of
 # the distribution lets several devices serve it concurrently
-BOARD = BoardSpec(name="F", n_components=160, n_active=120,
-                  avg_quantity=1.5, n_detection=16, zipf_s=2.0)
+BOARD = BoardSection(name="F", n_components=160, n_active=120,
+                     avg_quantity=1.5, n_detection=16, zipf_s=2.0)
 
 # host DRAM holds the whole catalog (steady-state loads ride the PCIe leg,
 # not the SSD), NVMe-class disk keeps the cold phase short, PCIe is modest
 # so the link layout is what the sweep measures
-TIER = TierSpec(name="fleet_numa", disk_bw=2000e6, host_to_device_bw=3e9,
-                unified=False, host_cache_bytes=40 << 30,
-                device_bytes=4 << 30)
+TIER = MemorySection(tier="numa", name="fleet_numa", disk_bw=2000e6,
+                     host_to_device_bw=3e9, host_cache_bytes=40 << 30,
+                     device_bytes=4 << 30)
 
 DEVICES = (1, 2, 4)
 GPU_PER_DEVICE = 3
@@ -52,15 +51,16 @@ GPU_PER_DEVICE = 3
 
 def _simulate(n_devices: int, links: str, replication: int,
               n_requests: int, interval: float):
-    coe = build_board_coe(BOARD)
-    fleet = FleetSpec(n_devices=n_devices, gpu_per_device=GPU_PER_DEVICE,
-                      n_cpu=0, links=links)
-    pools, specs = build_fleet(TIER, fleet)
-    system = CoServeSystem(coe, specs, pools, policy=COSERVE, tier=TIER,
-                           links=links, replication=replication)
-    sim = Simulation(system)
-    sim.submit(make_task_requests(BOARD, n_requests, interval=interval))
-    return sim.run()
+    spec = DeploymentSpec(
+        model=ModelSpec(kind="board", board=BOARD.name, boards=(BOARD,)),
+        fleet=FleetSection(devices=n_devices, gpu_per_device=GPU_PER_DEVICE,
+                           cpu=0, links=links, replication=replication),
+        memory=TIER,
+        serving=ServingSection(mode="sim"),
+        workload=WorkloadSection(requests=n_requests, interval_s=interval))
+    sess = Session(spec)
+    sess.run()
+    return sess.metrics()
 
 
 def _row(m) -> dict:

@@ -1,11 +1,12 @@
 """Memory-hierarchy benchmark: eviction policy x prefetch on NUMA/UMA tiers.
 
-Three experiments over the unified tiered-memory subsystem, each at a fixed
+Four experiments over the unified tiered-memory subsystem, each at a fixed
 workload so future PRs (sharded experts, multi-device fleets) get a
 comparable trajectory for the hierarchy:
 
-  policy_sweep — eviction policy x prefetch mode on both tiers: switch
-                 counts, p99 latency, stall time, promotion stats
+  policy_sweep — eviction policy x prefetch mode on both tiers (every
+                 registered policy, including the observed-load-aware
+                 ``observed``): switch counts, p99 latency, stall time
   contention   — 1 vs 2 executors on one shared SSD: per-load latency and
                  channel queueing (the acceptance check that contention is
                  modeled at all)
@@ -15,58 +16,64 @@ comparable trajectory for the hierarchy:
                  stall time and the *speculative SSD traffic* the wider
                  queue-arrival window buys it with (promotion bytes delta)
 
+Every cell is one declarative ``DeploymentSpec`` (custom boards/tiers are
+spec sections) run through ``repro.api.Session`` — what the suite measures
+is exactly what ``serve --config`` would run.
+
 Emits ``BENCH_memory.json`` (also returned for benchmarks.run aggregation).
 """
 from __future__ import annotations
 
-import dataclasses
 import json
 
-from repro.core import COSERVE, CoServeSystem, Simulation, SystemPolicy
-from repro.core.workload import (BoardSpec, build_board_coe,
-                                 make_executor_specs, make_task_requests)
-from repro.memory import POLICY_NAMES, TierSpec
+from repro.api import (BoardSection, DeploymentSpec, FleetSection,
+                       MemorySection, ModelSpec, PolicySection, Session,
+                       ServingSection, WorkloadSection)
+from repro.memory import POLICY_NAMES
 
 OUT_PATH = "BENCH_memory.json"
 
 # scaled-down board that thrashes the pool (same shape as the system tests)
-SWEEP_BOARD = BoardSpec(name="M", n_components=80, n_active=48,
-                        avg_quantity=3.0, n_detection=10, zipf_s=1.6)
+SWEEP_BOARD = BoardSection(name="M", n_components=80, n_active=48,
+                           avg_quantity=3.0, n_detection=10, zipf_s=1.6)
 # detector-heavy board: classifiers fit on device, detectors spill to disk —
 # the regime where disk->host promotion has downstream traffic to hide
-DET_BOARD = BoardSpec(name="D", n_components=80, n_active=20,
-                      avg_quantity=4.0, n_detection=20,
-                      detection_fraction=1.0, ok_prob=0.98, zipf_s=0.8)
+DET_BOARD = BoardSection(name="D", n_components=80, n_active=20,
+                         avg_quantity=4.0, n_detection=20,
+                         detection_fraction=1.0, ok_prob=0.98, zipf_s=0.8)
 
 TIERS = {
-    "numa": TierSpec(name="numa_s", disk_bw=530e6, host_to_device_bw=12e9,
-                     unified=False, host_cache_bytes=2 << 30,
-                     device_bytes=4 << 30),
-    "uma": TierSpec(name="uma_s", disk_bw=3000e6, host_to_device_bw=40e9,
-                    host_overhead=0.030, unified=True, host_cache_bytes=0,
-                    device_bytes=6 << 30),
+    "numa": MemorySection(tier="numa", name="numa_s", disk_bw=530e6,
+                          host_to_device_bw=12e9,
+                          host_cache_bytes=2 << 30, device_bytes=4 << 30),
+    "uma": MemorySection(tier="uma", name="uma_s", disk_bw=3000e6,
+                         host_to_device_bw=40e9, host_overhead=0.030,
+                         host_cache_bytes=0, device_bytes=6 << 30),
 }
 # prefetch experiment: host tier sized so promoted detectors survive until
 # their demand load (classifier pass-through traffic evicts them otherwise)
-DET_TIER = TierSpec(name="numa_det", disk_bw=530e6, host_to_device_bw=12e9,
-                    unified=False, host_cache_bytes=4 << 30,
-                    device_bytes=4 << 30)
+DET_TIER = MemorySection(tier="numa", name="numa_det", disk_bw=530e6,
+                         host_to_device_bw=12e9,
+                         host_cache_bytes=4 << 30, device_bytes=4 << 30)
 
-PREFETCH_MODES = {
-    "off": {"prefetch": False, "host_prefetch": False},
-    "device": {"prefetch": True, "host_prefetch": False},
-    "all": {"prefetch": True, "host_prefetch": True},
-}
+PREFETCH_MODES = ("off", "device", "all")
 
 
-def _simulate(board: BoardSpec, tier: TierSpec, policy: SystemPolicy,
-              n_requests: int, n_gpu: int = 2, n_cpu: int = 0):
-    coe = build_board_coe(board)
-    pools, specs = make_executor_specs(tier, n_gpu, n_cpu)
-    system = CoServeSystem(coe, specs, pools, policy=policy, tier=tier)
-    sim = Simulation(system)
-    sim.submit(make_task_requests(board, n_requests))
-    return sim.run()
+def _simulate(board: BoardSection, memory: MemorySection, n_requests: int,
+              evict=None, prefetch=None, prefetch_trigger=None,
+              n_gpu: int = 2, n_cpu: int = 0):
+    import dataclasses
+    spec = DeploymentSpec(
+        model=ModelSpec(kind="board", board=board.name, boards=(board,)),
+        fleet=FleetSection(gpu_per_device=n_gpu, cpu=n_cpu),
+        memory=dataclasses.replace(memory, prefetch=prefetch,
+                                   prefetch_trigger=prefetch_trigger),
+        policy=PolicySection(name="coserve", evict=evict),
+        serving=ServingSection(mode="sim"),
+        workload=WorkloadSection(requests=n_requests))
+    sess = Session(spec)
+    sess.run()
+    return sess.metrics()
 
 
 def _row(m) -> dict:
@@ -90,34 +97,32 @@ def run(quick: bool = False) -> dict:
     out = {"policy_sweep": {}, "contention": {}, "prefetch": {}}
 
     # --- eviction policy x prefetch mode x tier ------------------------- #
-    for tier_name, tier in TIERS.items():
+    for tier_name, mem in TIERS.items():
         for evict in POLICY_NAMES:
-            for mode, knobs in PREFETCH_MODES.items():
-                policy = dataclasses.replace(COSERVE, evict=evict, **knobs)
-                m = _simulate(SWEEP_BOARD, tier, policy, n)
+            for mode in PREFETCH_MODES:
+                m = _simulate(SWEEP_BOARD, mem, n, evict=evict,
+                              prefetch=mode)
                 key = f"{tier_name}/{evict}/{mode}"
                 out["policy_sweep"][key] = _row(m)
 
     # --- shared-SSD contention: 1 vs 2 executors ------------------------ #
     for n_gpu in (1, 2):
-        m = _simulate(SWEEP_BOARD, TIERS["numa"], COSERVE, n, n_gpu=n_gpu)
+        m = _simulate(SWEEP_BOARD, TIERS["numa"], n, n_gpu=n_gpu)
         out["contention"][f"{n_gpu}_executor"] = _row(m)
     solo = out["contention"]["1_executor"]["per_load_s"]
     duo = out["contention"]["2_executor"]["per_load_s"]
     out["contention"]["per_load_ratio"] = round(duo / solo, 3) if solo else None
 
     # --- cross-tier prefetch vs off on the detector-spill workload ------ #
-    for mode, knobs in PREFETCH_MODES.items():
-        policy = dataclasses.replace(COSERVE, **knobs)
-        m = _simulate(DET_BOARD, DET_TIER, policy, n)
+    for mode in PREFETCH_MODES:
+        m = _simulate(DET_BOARD, DET_TIER, n, prefetch=mode)
         out["prefetch"][mode] = _row(m)
 
     # --- promotion trigger: execution-start vs queue-arrival ------------ #
     out["prefetch_trigger"] = {}
     for trigger in ("exec", "queue"):
-        policy = dataclasses.replace(COSERVE, prefetch_trigger=trigger,
-                                     **PREFETCH_MODES["all"])
-        m = _simulate(DET_BOARD, DET_TIER, policy, n)
+        m = _simulate(DET_BOARD, DET_TIER, n, prefetch="all",
+                      prefetch_trigger=trigger)
         out["prefetch_trigger"][trigger] = _row(m)
     exec_b = out["prefetch_trigger"]["exec"]["prefetch"]["promoted_bytes"]
     queue_b = out["prefetch_trigger"]["queue"]["prefetch"]["promoted_bytes"]

@@ -8,38 +8,43 @@ trajectory for the online path:
   autoscale  — same load, elastic fleet (queue/SLO-driven scaling)
   overload   — 3x capacity with queue-depth admission vs unbounded baseline
 
+Every scenario is one declarative ``DeploymentSpec`` run through
+``repro.api.Session`` — the suite no longer hand-wires
+``CoServeSystem``/``OnlineGateway``; what it measures is exactly what
+``serve --config`` would run.
+
 Emits ``BENCH_online.json`` (also returned for benchmarks.run aggregation).
 """
 from __future__ import annotations
 
-import dataclasses
 import json
 
-from repro.core import COSERVE, CoServeSystem
-from repro.core.memory import NUMA
-from repro.core.workload import BOARD_A, BOARD_B, make_executor_specs
-from repro.serve import (AdmissionConfig, AdmissionController, Autoscaler,
-                         AutoscalerConfig, OnlineGateway, TenantSpec,
-                         build_multi_board_coe)
+from repro.api import (DeploymentSpec, MemorySection, ModelSpec, Session,
+                       ServingSection, TenantSection, WorkloadSection)
 
 OUT_PATH = "BENCH_online.json"
 
 
-def _tenants(rate_a: float, rate_b: float):
-    return [
-        TenantSpec(name="A", board=BOARD_A, rate=rate_a, process="poisson",
-                   slo_seconds=2.0, seed=1),
-        TenantSpec(name="B", board=BOARD_B, rate=rate_b, process="bursty",
-                   slo_seconds=4.0, seed=2),
-    ]
+def _spec(rate_a: float, rate_b: float, n: int, prefetch=None,
+          autoscale: str = "none", admission: str = "none",
+          max_queue: int = 200) -> DeploymentSpec:
+    return DeploymentSpec(
+        model=ModelSpec(kind="tenants"),
+        memory=MemorySection(tier="numa", prefetch=prefetch),
+        serving=ServingSection(mode="online", admission=admission,
+                               max_queue=max_queue, autoscale=autoscale),
+        workload=WorkloadSection(requests=n, tenants=(
+            TenantSection(name="A", board="A", rate=rate_a,
+                          arrival="poisson", slo_seconds=2.0),
+            TenantSection(name="B", board="B", rate=rate_b,
+                          arrival="bursty", slo_seconds=4.0))),
+        seed=1)   # per-tenant seeds derive as seed+index: A=1, B=2
 
 
-def _system(tenants, policy=COSERVE):
-    coe = build_multi_board_coe([t.board for t in tenants],
-                                weights=[t.rate for t in tenants])
-    pools, specs = make_executor_specs(NUMA, 3, 1)
-    system = CoServeSystem(coe, specs, pools, policy=policy, tier=NUMA)
-    return system, specs
+def _run(spec: DeploymentSpec):
+    sess = Session(spec)
+    sess.run()
+    return sess.report
 
 
 def _row(report, offered_rps: float) -> dict:
@@ -68,40 +73,26 @@ def run(quick: bool = False) -> dict:
     offered = rate_a + rate_b
     out = {}
 
-    tenants = _tenants(rate_a, rate_b)
-    system, _ = _system(tenants)
-    out["steady"] = _row(OnlineGateway(system, tenants).run(n), offered)
+    out["steady"] = _row(_run(_spec(rate_a, rate_b, n)), offered)
 
     # same load with ALL prefetch off (device-pool overlap + cross-tier
     # promotion — the ISSUE acceptance control): the stall_s delta is the
     # combined overlap machinery, NOT cross-tier promotion alone; compare
     # BENCH_memory.json's prefetch experiment for the isolated split
-    tenants = _tenants(rate_a, rate_b)
-    system, _ = _system(tenants, policy=dataclasses.replace(
-        COSERVE, prefetch=False, host_prefetch=False))
     out["steady_prefetch_off"] = _row(
-        OnlineGateway(system, tenants).run(n), offered)
+        _run(_spec(rate_a, rate_b, n, prefetch="off")), offered)
 
-    tenants = _tenants(rate_a, rate_b)
-    system, specs = _system(tenants)
-    asc = Autoscaler(AutoscalerConfig(spec=specs[0], min_executors=4,
-                                      max_executors=8))
-    report = OnlineGateway(system, tenants, autoscaler=asc).run(n)
+    report = _run(_spec(rate_a, rate_b, n, autoscale="4,8"))
     out["autoscale"] = _row(report, offered)
     out["autoscale"]["scale_ups"] = report.autoscaler["scale_ups"]
     out["autoscale"]["scale_downs"] = report.autoscaler["scale_downs"]
 
     hot_a, hot_b = 3.0 * rate_a, 3.0 * rate_b
-    tenants = _tenants(hot_a, hot_b)
-    system, _ = _system(tenants)
     out["overload_baseline"] = _row(
-        OnlineGateway(system, tenants).run(n), hot_a + hot_b)
-    tenants = _tenants(hot_a, hot_b)
-    system, _ = _system(tenants)
-    adm = AdmissionController(AdmissionConfig(policy="queue_depth",
-                                              max_queue=150))
+        _run(_spec(hot_a, hot_b, n)), hot_a + hot_b)
     out["overload_admission"] = _row(
-        OnlineGateway(system, tenants, admission=adm).run(n), hot_a + hot_b)
+        _run(_spec(hot_a, hot_b, n, admission="queue_depth",
+                   max_queue=150)), hot_a + hot_b)
 
     with open(OUT_PATH, "w") as f:
         json.dump(out, f, indent=1)

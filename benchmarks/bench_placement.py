@@ -6,15 +6,18 @@ Two questions, one suite (key ``placement`` in benchmarks.run, emits
 1. Does the cost-model placement search (``repro.fleet.search``) beat the
    greedy hot-first sweep on a traced multi-tenant fleet workload? Two
    tenants share a 4-device fleet, and — the realistic part — the system
-   was *provisioned* for equal tenants (the CoE's pre-assessed P(use) is
-   built with uniform tenant weights) while the actual traffic is 8:1
-   skewed toward the Zipf-heavy board. The greedy sweep places by the
-   stale static priors; the search replays a trace of the real request
-   stream (expected routing chains included) through
+   was *provisioned* for equal tenants (``model.tenant_weights`` pins the
+   catalog's pre-assessed P(use) to uniform tenant shares) while the actual
+   traffic is 8:1 skewed toward the Zipf-heavy board. The greedy sweep
+   places by the stale static priors; the search replays a trace of the
+   real request stream (expected routing chains included) through
    ``MemoryHierarchy.assignment_cost`` and fixes the layout. Reported both
    ways: the replay's own assignment-cost delta AND a full simulation of
    each plan (throughput / stall / switches), so the cost model is checked
-   against the ground truth it approximates.
+   against the ground truth it approximates. The searched plan is also
+   round-tripped through the ``repro.api`` artifact serializer, so the
+   simulated win is the *reloaded* plan's — what ``--plan``/``--config``
+   reuse gives you without re-searching.
 
 2. Does peer-link replication materialize replicas cheaper than a host-DRAM
    reload at 4 devices? The autoscaler's actual path
@@ -25,74 +28,66 @@ Two questions, one suite (key ``placement`` in benchmarks.run, emits
 
 The workload is host-resident (loads are PCIe-leg bound, the regime where
 placement and link layout matter) with Zipf-heavy tenants so the head of
-the distribution rewards replication.
+the distribution rewards replication. Systems are built from one
+declarative ``DeploymentSpec`` via ``repro.api``.
 """
 from __future__ import annotations
 
-import dataclasses
-import itertools
 import json
+import os
+import tempfile
 
-from repro.core import COSERVE, CoServeSystem, Simulation
-from repro.core.workload import BoardSpec
-from repro.fleet import (FleetSpec, PlacementPlan, SearchConfig, build_fleet,
-                         search_placement, trace_from_requests,
-                         validate_pool_groups)
-from repro.memory import TierSpec
-from repro.serve import TenantSpec, build_multi_board_coe, multi_tenant_stream
+from repro.api import (BoardSection, DeploymentSpec, FleetSection,
+                       MemorySection, ModelSpec, Session, ServingSection,
+                       TenantSection, WorkloadSection, build_catalog,
+                       build_layout, build_system, load_plan, make_requests,
+                       resolve_tier, save_plan)
+from repro.fleet import (PlacementPlan, SearchConfig, search_placement,
+                         trace_from_requests, validate_pool_groups)
 
 OUT_PATH = "BENCH_placement.json"
 
 # two product lines: a Zipf-heavy high-rate tenant (replication's best case)
 # and a flatter low-rate one competing for the same pools
-BOARD_HOT = BoardSpec(name="PH", n_components=120, n_active=90,
-                      avg_quantity=1.5, n_detection=10, zipf_s=2.2)
-BOARD_FLAT = BoardSpec(name="PF", n_components=80, n_active=50,
-                       avg_quantity=1.5, n_detection=8, zipf_s=1.1)
-
-# host DRAM holds the whole ~38 GB catalog; modest PCIe so the switch path
-# (and therefore placement) is what the suite measures
-TIER = TierSpec(name="placement_numa", disk_bw=2000e6, host_to_device_bw=3e9,
-                unified=False, host_cache_bytes=48 << 30,
-                device_bytes=4 << 30)
+BOARD_HOT = BoardSection(name="PH", n_components=120, n_active=90,
+                         avg_quantity=1.5, n_detection=10, zipf_s=2.2)
+BOARD_FLAT = BoardSection(name="PF", n_components=80, n_active=50,
+                          avg_quantity=1.5, n_detection=8, zipf_s=1.1)
 
 DEVICES = 4
 GPU_PER_DEVICE = 3
-PEER_BW = 50e9            # NVLink/ICI-class pool->pool fabric
+PEER_BW_GBPS = 50.0       # NVLink/ICI-class pool->pool fabric
 LINKS = "per-device"
 
 
-def _tenants(seed: int = 0):
-    return [TenantSpec(name="gold", board=BOARD_HOT, rate=400.0,
-                       request_class="scan", slo_seconds=2.0, seed=seed),
-            TenantSpec(name="batch", board=BOARD_FLAT, rate=50.0,
-                       request_class="random", slo_seconds=8.0,
-                       seed=seed + 1)]
+def _spec(n_requests: int, peer_bw_gbps: float = 0.0) -> DeploymentSpec:
+    """The suite's deployment: a 4-device per-device-link fleet serving an
+    8:1-skewed two-tenant mix over a catalog *provisioned* for equal
+    tenants (the stale static assumption the searched plan corrects)."""
+    return DeploymentSpec(
+        model=ModelSpec(kind="tenants", boards=(BOARD_HOT, BOARD_FLAT),
+                        tenant_weights=(1.0, 1.0)),
+        fleet=FleetSection(devices=DEVICES, gpu_per_device=GPU_PER_DEVICE,
+                           cpu=0, links=LINKS, peer_bw_gbps=peer_bw_gbps),
+        # host DRAM holds the whole ~38 GB catalog; modest PCIe so the
+        # switch path (and therefore placement) is what the suite measures
+        memory=MemorySection(tier="numa", name="placement_numa",
+                             disk_bw=2000e6, host_to_device_bw=3e9,
+                             host_cache_bytes=48 << 30,
+                             device_bytes=4 << 30),
+        serving=ServingSection(mode="sim"),
+        workload=WorkloadSection(requests=n_requests, tenants=(
+            TenantSection(name="gold", board="PH", rate=400.0,
+                          request_class="scan", slo_seconds=2.0),
+            TenantSection(name="batch", board="PF", rate=50.0,
+                          arrival="poisson", request_class="random",
+                          slo_seconds=8.0))))
 
 
-def _coe():
-    """The catalog as *provisioned*: equal tenant weights — the stale
-    static assumption the searched plan corrects from the traffic trace."""
-    return build_multi_board_coe([BOARD_HOT, BOARD_FLAT], weights=[1.0, 1.0])
-
-
-def _requests(n: int):
-    return list(itertools.islice(multi_tenant_stream(_tenants(), n), n))
-
-
-def _fleet_layout(tier):
-    fleet = FleetSpec(n_devices=DEVICES, gpu_per_device=GPU_PER_DEVICE,
-                      n_cpu=0, links=LINKS)
-    return build_fleet(tier, fleet)
-
-
-def _simulate(coe, n_requests: int, placement=None):
-    pools, specs = _fleet_layout(TIER)
-    system = CoServeSystem(coe, specs, pools, policy=COSERVE, tier=TIER,
-                           links=LINKS, placement=placement)
-    sim = Simulation(system)
-    sim.submit(_requests(n_requests))
-    return sim.run()
+def _simulate(n_requests: int, placement=None):
+    sess = Session(_spec(n_requests), placement=placement)
+    sess.run()
+    return sess.metrics()
 
 
 def _row(m) -> dict:
@@ -105,22 +100,36 @@ def _row(m) -> dict:
 
 
 def _search_vs_greedy(n_requests: int, trace_len: int, iterations: int) -> dict:
-    coe = _coe()
-    pools, specs = _fleet_layout(TIER)
+    # build_catalog/build_layout are deterministic in the spec, so plans
+    # built against THIS catalog instance apply cleanly to the fresh (equal)
+    # catalog each _simulate's Session builds — plans only reference expert
+    # ids and footprints, never the instance
+    spec = _spec(trace_len)
+    tier = resolve_tier(spec)
+    coe = build_catalog(spec)
+    pools, specs = build_layout(spec, tier)
     greedy = PlacementPlan.build(coe, pools, replication=1)
-    trace = trace_from_requests(coe, _requests(trace_len),
+    trace = trace_from_requests(coe, make_requests(spec),
                                 gap_s=0.0025, exec_s=0.006)
     res = search_placement(
-        coe, pools, trace, TIER, links=LINKS,
+        coe, pools, trace, tier, links=LINKS,
         pool_devices=validate_pool_groups(specs), seed_plan=greedy,
         config=SearchConfig(iterations=iterations, replication=3,
                             replica_fraction=0.5, seed=0))
-    m_greedy = _simulate(coe, n_requests, placement=greedy)
-    m_search = _simulate(coe, n_requests, placement=res.plan)
+    # artifact round trip: the plan the simulation scores is the RELOADED
+    # one, so the reported win is exactly what --plan / --config reuse gives
+    with tempfile.TemporaryDirectory(prefix="coserve_plan_") as tmp:
+        plan_path = os.path.join(tmp, "searched_plan.json")
+        save_plan(res.plan, plan_path)
+        reloaded = load_plan(plan_path, coe, capacities=pools)
+    m_greedy = _simulate(n_requests, placement=greedy)
+    m_search = _simulate(n_requests, placement=reloaded)
     g, s = _row(m_greedy), _row(m_search)
     return {
         "trace_events": len(trace.events),
         "search": res.snapshot(),
+        "plan_artifact": {"round_trip_identical":
+                          reloaded.layout() == res.plan.layout()},
         "assignment_cost": {
             "greedy_s": round(res.seed_cost, 6),
             "searched_s": round(res.cost, 6),
@@ -134,9 +143,10 @@ def _search_vs_greedy(n_requests: int, trace_len: int, iterations: int) -> dict:
     }
 
 
-def _peer_replication(peer_bw: float, replica_fraction: float = 0.5) -> dict:
+def _peer_replication(peer_bw_gbps: float,
+                      replica_fraction: float = 0.5) -> dict:
     """Total replica-materialization stall through the autoscaler's
-    ``rebalance_placement`` path, with the peer fabric at ``peer_bw``
+    ``rebalance_placement`` path, with the peer fabric at ``peer_bw_gbps``
     (0 = replicas reload from host DRAM over PCIe).
 
     Scenario: a scale event just added the fleet's fourth device — the plan
@@ -145,21 +155,21 @@ def _peer_replication(peer_bw: float, replica_fraction: float = 0.5) -> dict:
     replicas of the hottest experts, all of which sit settled on the three
     original devices (the peer fabric's best case, and the autoscaler's
     common one)."""
-    tier = dataclasses.replace(TIER, peer_bw=peer_bw)
-    coe = _coe()
-    pools, specs = _fleet_layout(tier)
+    spec = _spec(1, peer_bw_gbps=peer_bw_gbps)
+    tier = resolve_tier(spec)
+    coe = build_catalog(spec)
+    pools, _ = build_layout(spec, tier)
     newest = sorted(pools)[-1]
     plan = PlacementPlan.build(coe, pools,
                                pool_order=[g for g in pools if g != newest])
-    system = CoServeSystem(coe, specs, pools, policy=COSERVE, tier=tier,
-                           links=LINKS, placement=plan)
+    system = build_system(spec, placement=plan)
     # steady state: the catalog sits in host DRAM (the reload the peer
     # fabric is supposed to beat is the PCIe leg, not a cold SSD read)
     host = system.hierarchy.host
-    for spec in coe.by_usage():
-        if spec.mem_bytes > host.free_bytes():
+    for espec in coe.by_usage():
+        if espec.mem_bytes > host.free_bytes():
             break
-        host.insert(spec.id)
+        host.insert(espec.id)
     # the scale event turns replication on: the empty new pool is pure
     # replica budget, so every hot primary is a materialization candidate
     system.placement.replication = 1
@@ -194,13 +204,13 @@ def run(quick: bool = False, smoke: bool = False) -> dict:
     else:
         n, trace_len, iters = 1000, 500, 300
     out: dict = {"boards": [BOARD_HOT.name, BOARD_FLAT.name],
-                 "tier": TIER.name, "devices": DEVICES,
+                 "tier": "placement_numa", "devices": DEVICES,
                  "gpu_per_device": GPU_PER_DEVICE, "links": LINKS}
     out["search_vs_greedy"] = _search_vs_greedy(n, trace_len, iters)
-    host_reload = _peer_replication(peer_bw=0.0)
-    peer = _peer_replication(peer_bw=PEER_BW)
+    host_reload = _peer_replication(peer_bw_gbps=0.0)
+    peer = _peer_replication(peer_bw_gbps=PEER_BW_GBPS)
     out["peer_replication"] = {
-        "peer_bw_gbps": PEER_BW / 1e9,
+        "peer_bw_gbps": PEER_BW_GBPS,
         "host_reload": host_reload,
         "peer": peer,
         "stall_ratio": round(peer["stall_s"] / host_reload["stall_s"], 4)

@@ -70,6 +70,29 @@ SUITES_INFO = {
 SUITES = {key: runner for key, (runner, _) in SUITES_INFO.items()}
 
 
+def suite_out_paths() -> dict:
+    """Suite key -> the BENCH_*.json its module emits (None: no artifact)."""
+    return {key: getattr(inspect.getmodule(fn), "OUT_PATH", None)
+            for key, fn in SUITES.items()}
+
+
+def validate_registry():
+    """Every suite that emits a BENCH_*.json artifact must name it after
+    its registered key — the suites used to hard-code their paths
+    independently of this registry, so a renamed key silently orphaned the
+    artifact docs/CI consume. Raises on any mismatch."""
+    problems = [
+        f"suite {key!r} writes {out!r}, expected 'BENCH_{key}.json'"
+        for key, out in suite_out_paths().items()
+        if out is not None and out != f"BENCH_{key}.json"]
+    if problems:
+        raise RuntimeError(
+            "suite registry / artifact filename mismatch: "
+            + "; ".join(problems)
+            + " — rename OUT_PATH or the SUITES_INFO key so docs and CI "
+              "find the artifact")
+
+
 def suite_help() -> str:
     """``--suite`` help text, generated from the registry."""
     return "comma-separated suite keys: " + ", ".join(SUITES)
@@ -86,6 +109,7 @@ def main(argv=None):
     ap.add_argument("--out", default="bench_results.json")
     args = ap.parse_args(argv)
 
+    validate_registry()
     keys = args.only.split(",") if args.only else list(SUITES)
     unknown = [k for k in keys if k not in SUITES]
     if unknown:

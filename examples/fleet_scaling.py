@@ -1,7 +1,9 @@
 """Fleet scaling: 4 accelerator devices behind one shared SSD.
 
 Walks the device-fleet topology subsystem end to end on a scaled-down
-circuit-board workload:
+circuit-board workload, with the whole deployment declared as one
+``DeploymentSpec`` (custom board and tier included — the spec could be
+``save()``d and re-run via ``serve --config``):
 
   1. describe the fleet (4 devices x 3 executors, per-device PCIe links)
   2. inspect the explicit PlacementPlan (primaries + replicated hot head)
@@ -11,44 +13,43 @@ circuit-board workload:
 
   PYTHONPATH=src python examples/fleet_scaling.py
 """
-from repro.core import COSERVE, CoServeSystem, Simulation
-from repro.core.workload import BoardSpec, build_board_coe, make_task_requests
-from repro.fleet import FleetSpec, PlacementPlan, build_fleet
-from repro.memory import TierSpec
+from __future__ import annotations
+
+from repro.api import (BoardSection, DeploymentSpec, FleetSection,
+                       MemorySection, ModelSpec, Session, ServingSection,
+                       WorkloadSection, build_catalog, build_layout,
+                       resolve_tier)
+from repro.fleet import PlacementPlan
 
 GB = 1 << 30
 
 # a board whose active expert set (~21 GB) dwarfs one device pool (3 GB):
 # serving is dominated by expert switches, which is where topology matters.
 # (Same shape as benchmarks/bench_fleet.py, so numbers track BENCH_fleet.)
-BOARD = BoardSpec(name="X", n_components=160, n_active=120,
-                  avg_quantity=1.5, n_detection=16, zipf_s=2.0)
-
-# each accelerator: 4 GB of device memory behind a 3 GB/s host link; all
-# four share one NVMe SSD, and host DRAM holds the whole catalog once warm
-TIER = TierSpec(name="fleet_demo", disk_bw=2000e6, host_to_device_bw=3e9,
-                unified=False, host_cache_bytes=40 * GB,
-                device_bytes=4 * GB)
+BOARD = BoardSection(name="X", n_components=160, n_active=120,
+                     avg_quantity=1.5, n_detection=16, zipf_s=2.0)
 
 N_REQUESTS = 800
 
 
-def serve(links: str, replication: int):
-    coe = build_board_coe(BOARD)
-    fleet = FleetSpec(n_devices=4, gpu_per_device=3, n_cpu=0, links=links)
-    pools, specs = build_fleet(TIER, fleet)
-    system = CoServeSystem(coe, specs, pools, policy=COSERVE, tier=TIER,
-                           links=links, replication=replication)
-    sim = Simulation(system)
-    sim.submit(make_task_requests(BOARD, N_REQUESTS, interval=0.002))
-    return system, sim.run()
+def fleet_spec(links: str, replication: int) -> DeploymentSpec:
+    """Each accelerator: 4 GB of device memory behind a 3 GB/s host link;
+    all four share one NVMe SSD, and host DRAM holds the whole catalog."""
+    return DeploymentSpec(
+        model=ModelSpec(kind="board", board="X", boards=(BOARD,)),
+        fleet=FleetSection(devices=4, gpu_per_device=3, cpu=0, links=links,
+                           replication=replication),
+        memory=MemorySection(tier="numa", name="fleet_demo", disk_bw=2000e6,
+                             host_to_device_bw=3e9,
+                             host_cache_bytes=40 * GB, device_bytes=4 * GB),
+        serving=ServingSection(mode="sim"),
+        workload=WorkloadSection(requests=N_REQUESTS, interval_s=0.002))
 
 
 # --- 1+2: the explicit placement plan --------------------------------------- #
-coe = build_board_coe(BOARD)
-fleet = FleetSpec(n_devices=4, gpu_per_device=3, n_cpu=0,
-                  links="per-device")
-pools, _ = build_fleet(TIER, fleet)
+spec = fleet_spec("per-device", 1)
+coe = build_catalog(spec)
+pools, _ = build_layout(spec, resolve_tier(spec))
 plan = PlacementPlan.build(coe, pools, replication=1)
 print("fleet pools:", {g: f"{b / GB:.1f} GB" for g, b in pools.items()})
 print("plan:", plan.snapshot())
@@ -62,7 +63,9 @@ for links, repl, label in (
         ("shared", 0, "shared link, no replication (PR 2 baseline)"),
         ("per-device", 0, "per-device links"),
         ("per-device", 1, "per-device links + replication")):
-    system, m = serve(links, repl)
+    sess = Session(fleet_spec(links, repl))
+    sess.run()
+    m = sess.metrics()
     chans = m.memory["channels"]
     print(f"\n  [{label}]")
     print(f"    throughput {m.throughput:7.2f} req/s   "

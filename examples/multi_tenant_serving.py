@@ -1,42 +1,50 @@
-"""Multi-tenant online serving walkthrough (repro.serve).
+"""Multi-tenant online serving walkthrough (repro.api + repro.serve).
 
 Two product lines share one CoServe deployment: a latency-sensitive "gold"
 tenant inspecting BOARD_A under a tight 1.5 s SLO, and a bursty "batch"
-tenant sweeping BOARD_B with a relaxed 6 s SLO. The demo runs the same
-traffic three ways and prints a comparison:
+tenant sweeping BOARD_B with a relaxed 6 s SLO. The demo declares the same
+traffic three ways as ``DeploymentSpec``s — each one line of diff away from
+the last — runs each through a ``Session`` and prints a comparison:
 
   1. static fleet, FIFO queues (no SLO awareness)
   2. + deadline-EDF scheduling and queue-depth admission control
   3. + load-driven autoscaling
 
+Any of the three specs could be ``save()``d and re-run verbatim with
+``python -m repro.launch.serve --config spec.json``.
+
   PYTHONPATH=src python examples/multi_tenant_serving.py
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 
-from repro.core import COSERVE, CoServeSystem
-from repro.core.memory import NUMA
-from repro.core.workload import BOARD_A, BOARD_B, make_executor_specs
-from repro.serve import (AdmissionConfig, AdmissionController, Autoscaler,
-                         AutoscalerConfig, OnlineGateway, TenantSpec,
-                         build_multi_board_coe)
+from repro.api import (DeploymentSpec, ModelSpec, Session, ServingSection,
+                       TenantSection, WorkloadSection)
 
 N_REQUESTS = 1500
 
-TENANTS = [
-    TenantSpec(name="gold", board=BOARD_A, rate=30.0, process="poisson",
-               slo_seconds=1.5, seed=1),
-    TenantSpec(name="batch", board=BOARD_B, rate=25.0, process="bursty",
-               request_class="random", slo_seconds=6.0, seed=2),
+BASE = DeploymentSpec(
+    model=ModelSpec(kind="tenants"),
+    serving=ServingSection(mode="online", slo_priority=False,
+                           autoscale="none"),
+    workload=WorkloadSection(requests=N_REQUESTS, tenants=(
+        TenantSection(name="gold", board="A", rate=30.0, arrival="poisson",
+                      slo_seconds=1.5, seed=1),
+        TenantSection(name="batch", board="B", rate=25.0, arrival="bursty",
+                      request_class="random", slo_seconds=6.0, seed=2))))
+
+CONFIGS = [
+    ("static FIFO", BASE),
+    ("EDF + admission", dataclasses.replace(BASE, serving=ServingSection(
+        mode="online", slo_priority=True, admission="queue_depth",
+        max_queue=250, autoscale="none"))),
+    ("EDF + admission + autoscale", dataclasses.replace(
+        BASE, serving=ServingSection(
+            mode="online", slo_priority=True, admission="queue_depth",
+            max_queue=250, autoscale="4,8"))),
 ]
-
-
-def build_system():
-    coe = build_multi_board_coe([t.board for t in TENANTS],
-                                weights=[t.rate for t in TENANTS])
-    pools, specs = make_executor_specs(NUMA, 3, 1)
-    return CoServeSystem(coe, specs, pools, policy=COSERVE, tier=NUMA), specs
 
 
 def describe(label: str, report) -> dict:
@@ -57,27 +65,10 @@ def describe(label: str, report) -> dict:
 
 def main():
     rows = []
-
-    system, _ = build_system()
-    gw = OnlineGateway(system, TENANTS, slo_priority=False)
-    rows.append(describe("static FIFO", gw.run(N_REQUESTS)))
-
-    system, _ = build_system()
-    gw = OnlineGateway(
-        system, TENANTS, slo_priority=True,
-        admission=AdmissionController(AdmissionConfig(policy="queue_depth",
-                                                      max_queue=250)))
-    rows.append(describe("EDF + admission", gw.run(N_REQUESTS)))
-
-    system, specs = build_system()
-    gw = OnlineGateway(
-        system, TENANTS, slo_priority=True,
-        admission=AdmissionController(AdmissionConfig(policy="queue_depth",
-                                                      max_queue=250)),
-        autoscaler=Autoscaler(AutoscalerConfig(spec=specs[0],
-                                               min_executors=4,
-                                               max_executors=8)))
-    rows.append(describe("EDF + admission + autoscale", gw.run(N_REQUESTS)))
+    for label, spec in CONFIGS:
+        sess = Session(spec)
+        sess.run()
+        rows.append(describe(label, sess.report))
 
     print(json.dumps(rows, indent=1))
     gold = {r["label"]: r["gold"]["violation_rate"] for r in rows}

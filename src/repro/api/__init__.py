@@ -1,0 +1,36 @@
+"""The user-facing API: one declarative spec in, one serving system out.
+
+    from repro.api import DeploymentSpec, Session, build_system
+
+    spec = DeploymentSpec.load("examples/specs/sim.json")
+    result = Session(spec).run()
+
+``DeploymentSpec`` (repro.api.spec) is the single serializable description
+of a deployment; ``build_system`` (repro.api.build) turns it into a wired
+``CoServeSystem``; ``Session`` (repro.api.session) runs it and produces
+metrics and artifacts; ``save_trace``/``load_trace`` and
+``save_plan``/``load_plan`` (repro.api.artifacts) round-trip workload
+traces and placement plans so searched configurations are reusable files,
+not one-off in-memory state. ``repro.launch.serve`` is a thin CLI adapter
+over this package.
+"""
+from repro.api.artifacts import load_plan, load_trace, save_plan, save_trace
+from repro.api.build import (POLICIES, BuildContext, build_catalog,
+                             build_context, build_layout, build_real_system,
+                             build_system, make_requests, make_tenants,
+                             resolve_policy, resolve_tier)
+from repro.api.session import Session
+from repro.api.spec import (BoardSection, DeploymentSpec, FleetSection,
+                            MemorySection, ModelSpec, PolicySection,
+                            ServingSection, SpecError, TenantSection,
+                            WorkloadSection)
+
+__all__ = [
+    "BoardSection", "BuildContext", "DeploymentSpec", "FleetSection",
+    "MemorySection", "ModelSpec", "POLICIES", "PolicySection", "Session",
+    "ServingSection", "SpecError", "TenantSection", "WorkloadSection",
+    "build_catalog", "build_context", "build_layout", "build_real_system",
+    "build_system", "load_plan", "load_trace", "make_requests",
+    "make_tenants", "resolve_policy", "resolve_tier", "save_plan",
+    "save_trace",
+]

@@ -32,6 +32,10 @@ class ExpertManager:
         self.coe = coe
         self.policy = policy
         self.strategy = make_policy(policy)   # raises on unknown names
+        # live per-expert assignment counts for the "observed" policy: the
+        # owning CoServeSystem shares its expert_load dict (same object, so
+        # updates are visible without re-wiring); None = cold start
+        self.observed_load = None
 
     # ------------------------------------------------------------------ #
     def pick_victims(self, pool: DevicePool, incoming_id: str,
@@ -67,7 +71,8 @@ class ExpertManager:
     def _eviction_order(self, pool: DevicePool, incoming_id: str,
                         load_cost_fn=None) -> List[str]:
         return self.strategy.order(
-            pool.eviction_view(incoming_id, load_cost_fn))
+            pool.eviction_view(incoming_id, load_cost_fn,
+                               observed_load=self.observed_load))
 
     # ------------------------------------------------------------------ #
     def ensure_loadable(self, pool: DevicePool, expert_id: str,

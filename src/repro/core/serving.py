@@ -163,8 +163,12 @@ class CoServeSystem:
                             lookahead=policy.lookahead))
         self.sched_time = 0.0
         # observed per-expert load (assignment counts): the online signal
-        # placement rebalancing uses instead of static pre-assessed P(use)
+        # placement rebalancing and the "observed" eviction policy use
+        # instead of static pre-assessed P(use)
         self.expert_load: Dict[str, int] = {}
+        self.manager.observed_load = self.expert_load
+        if self.hierarchy.host is not None:
+            self.hierarchy.host.observed_load = self.expert_load
         # system initialisation (paper §4.1 steps 1–3) through the explicit
         # plan: round-robin by descending usage probability until pools are
         # full, plus any planned replicas

@@ -199,6 +199,44 @@ class PlacementPlan:
         return list(self._layout)
 
     # ------------------------------------------------------------------ #
+    # artifact serialization (repro.api.artifacts wraps file io)
+    # ------------------------------------------------------------------ #
+    def to_dict(self) -> dict:
+        """Lossless JSON-ready form. ``from_dict`` rebuilds an equivalent
+        plan (same assignments, layout order, budgets) against the same
+        catalog — the capacities are stored so a reload onto a different
+        fleet shape fails loudly instead of silently misplacing."""
+        return {"replication": self.replication,
+                "replica_fraction": self.replica_fraction,
+                "capacities": dict(self.capacities),
+                "assignments": {e: list(p)
+                                for e, p in self.assignments.items()}}
+
+    @classmethod
+    def from_dict(cls, coe: "CoEModel", d: Mapping,
+                  capacities: Optional[Mapping[str, int]] = None
+                  ) -> "PlacementPlan":
+        """Rebuild a saved plan against ``coe``. ``capacities`` (e.g. the
+        pools of the system about to apply the plan) must match the saved
+        pool shape byte for byte — a plan searched for one fleet is not
+        valid on another."""
+        for key in ("capacities", "assignments"):
+            if key not in d:
+                raise ValueError(
+                    f"placement plan dict is missing {key!r} "
+                    f"(got keys {sorted(d)})")
+        saved = {str(g): int(b) for g, b in d["capacities"].items()}
+        if capacities is not None and dict(capacities) != saved:
+            raise ValueError(
+                "saved placement plan was built for pools "
+                f"{saved} but the target fleet has {dict(capacities)} — "
+                "re-run the placement search for this fleet shape")
+        return cls.from_assignments(
+            coe, saved, {str(e): list(p) for e, p in d["assignments"].items()},
+            replication=int(d.get("replication", 0)),
+            replica_fraction=float(d.get("replica_fraction", 0.10)))
+
+    # ------------------------------------------------------------------ #
     # runtime reconfiguration
     # ------------------------------------------------------------------ #
     def rebalance(self, pool_weights: Mapping[str, float],

@@ -74,6 +74,23 @@ class WorkloadTrace:
         """Per-expert event counts (the search's hot/cold ranking)."""
         return dict(collections.Counter(self.events))
 
+    # --- artifact serialization (repro.api.artifacts wraps file io) ----- #
+    def to_dict(self) -> dict:
+        """Lossless JSON-ready form; ``from_dict(to_dict(t)) == t``."""
+        return {"events": list(self.events), "gap_s": self.gap_s,
+                "exec_s": self.exec_s}
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "WorkloadTrace":
+        try:
+            events = tuple(str(e) for e in d["events"])
+        except (KeyError, TypeError):
+            raise ValueError(
+                "workload trace dict needs an 'events' list of expert ids "
+                f"(got keys {sorted(d)})") from None
+        return cls(events, gap_s=float(d.get("gap_s", 0.004)),
+                   exec_s=float(d.get("exec_s", 0.020)))
+
 
 def trace_from_requests(coe: "CoEModel", requests: Sequence,
                         gap_s: float = 0.004, exec_s: float = 0.020,

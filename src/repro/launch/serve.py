@@ -1,320 +1,59 @@
-"""Serving driver (deliverable b): the CoServe system end to end.
+"""Serving CLI: a thin flag -> DeploymentSpec adapter over ``repro.api``.
 
+Every flag parses into the one declarative ``DeploymentSpec`` (byte-identical
+behaviour to the pre-spec wiring, pinned by equivalence tests); the spec
+builds the system (``repro.api.build_system``) and a ``Session`` runs it.
 Three modes behind the SAME scheduler/manager code:
 
   --mode sim     paper-scale circuit-board workload (352 experts, 2500+ reqs)
                  on the event-driven engine — reproduces the paper's numbers.
   --mode real    actually loads JAX expert params across host/disk tiers and
-                 runs jitted forwards on the local device, with measured wall
-                 time (scaled-down pool so experts really switch).
+                 runs jitted forwards on the local device.
   --mode online  streaming multi-tenant front-end (repro.serve): generator
-                 arrivals, per-tenant SLO telemetry (p50/p95/p99), optional
-                 admission control and queue/SLO-driven autoscaling.
-                 ``--engine real`` drives the same gateway over real JAX
-                 experts instead of the profile-driven simulator.
+                 arrivals, per-tenant SLO telemetry, admission control and
+                 autoscaling (``--engine real`` for real JAX experts).
 
-Fleet knobs (``--devices/--links/--replication/--peer-bw/--placement``)
-apply to both sim and online (sim-engine) modes: multi-device pools behind
-the shared SSD, per-device PCIe links, planned expert replication, an
-optional NVLink/ICI-class peer fabric for pool->pool replica copies, and
-greedy-vs-searched initial placement.
+Config artifacts (docs/configuration.md has the full workflow):
+
+  --config spec.json   run a saved spec instead of flags
+  --dump-config PATH   write the resolved spec (then exit) — the run's full
+                       configuration as a reproducible, diffable artifact
+  --dump-trace PATH    after the run, save the observed traffic as a
+                       replayable WorkloadTrace artifact
+  --trace PATH         ``--placement search`` replays this saved trace
+                       (yesterday's traffic) instead of static priors
+  --plan PATH          apply a saved PlacementPlan verbatim (no re-search)
+  --save-plan PATH     save the plan this run actually served
 
   PYTHONPATH=src python -m repro.launch.serve --mode sim  --board A --requests 2500
-  PYTHONPATH=src python -m repro.launch.serve --mode real --requests 200
-  PYTHONPATH=src python -m repro.launch.serve --mode online --tenants A,B \
-      --arrival poisson --requests 2000 --rates 25,12 --slos 2.0,4.0 \
-      --admission queue_depth --autoscale 2,8
+  PYTHONPATH=src python -m repro.launch.serve --config examples/specs/online_fleet.json
   PYTHONPATH=src python -m repro.launch.serve --mode online --devices 4 \
       --links per-device --replication 1 --peer-bw 50 --placement search \
-      --tenants A,B --rates 25,12 --requests 2000
+      --tenants A,B --rates 25,12 --requests 2000 --save-plan plan.json
 """
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import json
-import tempfile
-from typing import Dict, List, Optional, Tuple
+import warnings
 
-import numpy as np
-
-from repro.core import (COSERVE, COSERVE_NONE, SAMBA, SAMBA_FIFO,
-                        SAMBA_PARALLEL, CoEModel, CoServeSystem, DeviceProfile,
-                        ExecutorSpec, ExpertSpec, HostStore, RealEngine,
-                        Request, RoutingModule, Simulation, SystemPolicy,
-                        TierSpec, microbenchmark_arch, run_real)
-from repro.core.memory import NUMA, UMA
-from repro.core.workload import (BOARD_A, BOARD_B, build_board_coe,
-                                 make_executor_specs, make_task_requests)
-from repro.fleet import (FleetSpec, PlacementPlan, SearchConfig, build_fleet,
-                         search_placement, trace_from_requests,
-                         trace_from_usage, validate_pool_groups)
-
-POLICIES: Dict[str, SystemPolicy] = {
-    "coserve": COSERVE,
-    "coserve_none": COSERVE_NONE,
-    "samba": SAMBA,
-    "samba_fifo": SAMBA_FIFO,
-    "samba_parallel": SAMBA_PARALLEL,
-}
-
-
-def _policy_from_args(args) -> SystemPolicy:
-    """Base policy + the ``--prefetch`` / ``--prefetch-trigger`` overrides.
-
-    ``off``  — no load/execute overlap, no cross-tier promotion;
-    ``device`` — device-pool overlap only (the seed's behaviour);
-    ``all``  — device overlap + dependency-aware disk->host prefetch;
-    default  — whatever the named policy declares.
-    ``--prefetch-trigger queue`` fires the disk->host promotion when the
-    upstream request joins a queue instead of when it starts executing.
-    """
-    policy = POLICIES[args.policy]
-    mode = getattr(args, "prefetch", None)
-    if mode == "off":
-        policy = dataclasses.replace(policy, prefetch=False,
-                                     host_prefetch=False)
-    elif mode == "device":
-        policy = dataclasses.replace(policy, host_prefetch=False)
-    elif mode == "all":
-        policy = dataclasses.replace(policy, prefetch=True,
-                                     host_prefetch=True)
-    trigger = getattr(args, "prefetch_trigger", None)
-    if trigger is not None:
-        policy = dataclasses.replace(policy, prefetch_trigger=trigger)
-    return policy
+# legacy re-exports: the system builders lived here before repro.api
+from repro.api import DeploymentSpec, Session, SpecError
+from repro.api.build import POLICIES, build_real_system  # noqa: F401
+from repro.api.build import real_board_layout as _real_board_layout  # noqa: F401
+from repro.api.spec import (FleetSection, MemorySection, ModelSpec,
+                            PolicySection, ServingSection, TenantSection,
+                            WorkloadSection)
+from repro.memory import POLICY_NAMES
 
 
 # --------------------------------------------------------------------------- #
-# sim mode — the paper's full-scale workload
+# flags -> spec
 # --------------------------------------------------------------------------- #
 
-def _fleet_tier(args, base):
-    """The run's TierSpec: the named preset, plus the optional peer
-    (NVLink/ICI-class) device<->device fabric from ``--peer-bw`` GB/s."""
-    if getattr(args, "peer_bw", 0.0):
-        return dataclasses.replace(base, peer_bw=args.peer_bw * 1e9)
-    return base
-
-
-def _fleet_pools(args, tier, n_gpu: int, n_cpu: int, devices: int):
-    """(pools, specs) for the run's fleet shape — the single-device path
-    stays ``make_executor_specs`` (seed layout) exactly."""
-    if devices > 1:
-        # multi-device fleet: n_gpu executors on EACH of --devices
-        # accelerators (shared SSD fan-in; --links picks the PCIe layout)
-        fleet = FleetSpec(n_devices=devices, gpu_per_device=n_gpu,
-                          n_cpu=n_cpu, links=args.links)
-        return build_fleet(tier, fleet)
-    return make_executor_specs(tier, n_gpu, n_cpu)
-
-
-def _searched_placement(args, coe, pools, specs, tier, trace):
-    """``--placement search``: seed with the greedy sweep and search over
-    ``trace`` under the SAME ``--replication`` budget — search never plans
-    copies the user disabled (with ``--replication 0`` it still migrates /
-    swaps / replaces primaries). Falls back to the greedy seed when nothing
-    improves."""
-    greedy = PlacementPlan.build(coe, pools, replication=args.replication)
-    res = search_placement(
-        coe, pools, trace, tier, links=args.links,
-        pool_devices=validate_pool_groups(specs), seed_plan=greedy,
-        config=SearchConfig(seed=args.seed, replication=args.replication))
-    return res.plan, res.snapshot()
-
-
-def run_sim(args) -> dict:
-    board = BOARD_A if args.board == "A" else BOARD_B
-    tier = _fleet_tier(args, NUMA if args.tier == "numa" else UMA)
-    coe = build_board_coe(board)
-    policy = _policy_from_args(args)
-    n_gpu, n_cpu = args.executors
-    devices = args.devices
-    if policy.assign == "single":
-        # a single-assign baseline only ever uses executors[0]: building a
-        # fleet for it would spread the hot placement across pools that can
-        # never serve, distorting the comparison
-        n_gpu, n_cpu, devices = 1, 0, 1
-    pools, specs = _fleet_pools(args, tier, n_gpu, n_cpu, devices)
-    requests = make_task_requests(board, args.requests)
-    placement, search_report = None, None
-    if args.placement == "search":
-        trace = trace_from_requests(coe, requests[:512])
-        placement, search_report = _searched_placement(
-            args, coe, pools, specs, tier, trace)
-    system = CoServeSystem(coe, specs, pools, policy=policy, tier=tier,
-                           links=args.links, replication=args.replication,
-                           placement=placement)
-    sim = Simulation(system)
-    sim.submit(requests)
-    m = sim.run()
-    out = {"mode": "sim", "board": board.name, "tier": tier.name,
-           "policy": args.policy, "devices": devices,
-           "links": args.links, "completed": m.completed,
-           "throughput": round(m.throughput, 2), "switches": m.switches,
-           "makespan_s": round(m.makespan, 2),
-           "avg_latency_s": round(m.avg_latency, 4),
-           "stall_s": round(m.stall_time, 3),
-           "placement": m.memory.get("placement", {}),
-           "pcie_links": {name: ch.get("wait_time_s")
-                          for name, ch in m.memory.get(
-                              "channels", {}).get("pcie_channels", {}).items()},
-           "peer_links": {name: ch.get("wait_time_s")
-                          for name, ch in m.memory.get(
-                              "channels", {}).get("peer_channels", {}).items()},
-           "host_prefetch": m.memory.get("prefetch", {})}
-    if search_report is not None:
-        out["placement_search"] = search_report
-    return out
-
-
-# --------------------------------------------------------------------------- #
-# real mode — tiny JAX experts, actual loads + jitted execution
-# --------------------------------------------------------------------------- #
-
-def _tiny_apply_fns():
-    import jax
-    import jax.numpy as jnp
-
-    def mlp(params, x):
-        h = jnp.tanh(x @ params["w1"] + params["b1"])
-        return h @ params["w2"] + params["b2"]
-
-    return {"tiny_cls": jax.jit(mlp), "tiny_det": jax.jit(mlp)}
-
-
-def _tiny_params(key, d_in: int, d_h: int, d_out: int):
-    import jax
-    ks = jax.random.split(key, 2)
-    return {"w1": jax.random.normal(ks[0], (d_in, d_h)) * 0.1,
-            "b1": np.zeros((d_h,), np.float32),
-            "w2": jax.random.normal(ks[1], (d_h, d_out)) * 0.1,
-            "b2": np.zeros((d_out,), np.float32)}
-
-
-def _real_board_layout(n_components: int, n_detection: int):
-    """Deterministic component->detection wiring of the tiny real-JAX CoE.
-    One seeded stream, drawn in this exact order — request generators must
-    use this helper (not fresh RandomState(0) draws) to match the catalog's
-    declared dependencies."""
-    rng = np.random.RandomState(0)
-    det_assign = rng.randint(0, n_detection, n_components)
-    needs_det = rng.rand(n_components) < 0.5
-    return needs_det, det_assign
-
-
-def build_real_system(n_components: int = 24, n_detection: int = 4,
-                      pool_experts: int = 6, n_executors: int = 2,
-                      store_root: Optional[str] = None,
-                      policy: SystemPolicy = COSERVE,
-                      d_hidden: int = 256,
-                      ) -> Tuple[CoServeSystem, CoEModel]:
-    """A small CoE of real JAX MLP experts over host+disk tiers."""
-    import jax
-
-    apply_fns = _tiny_apply_fns()
-    store = HostStore(root=store_root or tempfile.mkdtemp(prefix="coserve_"))
-    needs_det, det_assign = _real_board_layout(n_components, n_detection)
-
-    payload = {
-        "make_batch": lambda reqs: np.stack([r.data["x"] for r in reqs]),
-        "interpret": lambda out: ["ok" if o == 0 else "defect"
-                                  for o in np.argmax(out, -1)],
-    }
-    experts: List[ExpertSpec] = []
-    key = jax.random.PRNGKey(0)
-    keys = jax.random.split(key, n_components + n_detection)
-    mem = (64 * d_hidden + d_hidden * 2 + d_hidden + 2) * 4
-    for c in range(n_components):
-        eid = f"cls{c:03d}"
-        params = _tiny_params(keys[c], 64, d_hidden, 2)
-        # half the catalog starts on the disk tier, half in host DRAM
-        (store.put_disk if c % 2 else store.put_host)(eid, params)
-        experts.append(ExpertSpec(
-            id=eid, arch="tiny_cls", mem_bytes=mem, payload=payload,
-            usage_prob=1.0 / n_components))
-    for dnum in range(n_detection):
-        eid = f"det{dnum:02d}"
-        params = _tiny_params(keys[n_components + dnum], 64, d_hidden, 2)
-        store.put_disk(eid, params)
-        ups = tuple(f"cls{c:03d}" for c in range(n_components)
-                    if needs_det[c] and det_assign[c] == dnum)
-        experts.append(ExpertSpec(
-            id=eid, arch="tiny_det", mem_bytes=mem, payload=payload,
-            depends_on=ups, usage_prob=0.2))
-
-    def first_expert(data) -> str:
-        return f"cls{data['component']:03d}"
-
-    def next_expert(req: Request, eid: str, output) -> Optional[str]:
-        if eid.startswith("cls") and req.data.get("needs_detection") \
-                and output == "ok":
-            return f"det{req.data['det_expert']:02d}"
-        return None
-
-    coe = CoEModel(experts, RoutingModule(first_expert, next_expert))
-    engine = RealEngine(coe, store, apply_fns)
-
-    # offline profiling with the real runner (paper §4.5)
-    import time as _t
-
-    def run_batch_factory(arch_params):
-        def run_batch(n: int) -> float:
-            x = np.zeros((n, 64), np.float32)
-            fn = apply_fns["tiny_cls"]
-            fn(arch_params, x)  # warm
-            t0 = _t.perf_counter()
-            jax.block_until_ready(fn(arch_params, x))
-            return _t.perf_counter() - t0
-        return run_batch
-
-    tier = TierSpec(name="local", unified=True, host_cache_bytes=0,
-                    device_bytes=pool_experts * mem + 4 * mem)
-    sample = _tiny_params(jax.random.PRNGKey(9), 64, d_hidden, 2)
-    prof = microbenchmark_arch("tiny_cls", run_batch_factory(sample), mem,
-                               act_bytes_per_item=64 * 4, tier=tier,
-                               batch_sizes=(1, 2, 4, 8), repeats=2)
-    det_prof = dataclasses.replace(prof, arch="tiny_det")
-    dev_prof = DeviceProfile(device="gpu", tier=tier,
-                             arch_profiles={"tiny_cls": prof,
-                                            "tiny_det": det_prof})
-    pools = {"gpu": pool_experts * mem}
-    specs = [ExecutorSpec("gpu", dev_prof, 4 * mem, "gpu")
-             for _ in range(n_executors)]
-    system = CoServeSystem(coe, specs, pools, policy=policy, tier=tier,
-                           engine=engine)
-    return system, coe
-
-
-def run_real_mode(args) -> dict:
-    system, coe = build_real_system(policy=_policy_from_args(args))
-    rng = np.random.RandomState(1)
-    n_components = sum(1 for e in coe.experts if e.startswith("cls"))
-    needs_det, det_assign = _real_board_layout(
-        n_components, sum(1 for e in coe.experts if e.startswith("det")))
-    reqs = []
-    for i in range(args.requests):
-        c = int(rng.randint(n_components))
-        reqs.append(Request(
-            id=i, expert_id=f"cls{c:03d}",
-            data={"component": c, "x": rng.randn(64).astype(np.float32),
-                  "needs_detection": bool(needs_det[c]),
-                  "det_expert": int(det_assign[c])}))
-    m = run_real(system, reqs)
-    return {"mode": "real", "policy": args.policy, "completed": m.completed,
-            "throughput": round(m.throughput, 2), "switches": m.switches,
-            "makespan_s": round(m.makespan, 3)}
-
-
-# --------------------------------------------------------------------------- #
-# online mode — streaming multi-tenant serving (repro.serve)
-# --------------------------------------------------------------------------- #
-
-def _parse_tenants(args):
+def _tenant_sections(args) -> tuple:
     """``--tenants A,B`` (or ``gold:A,batch:B``) + per-tenant rate/SLO/arrival
     lists (singletons broadcast)."""
-    from repro.serve import BOARDS, TenantSpec
-
     tokens = [t.strip() for t in args.tenants.split(",") if t.strip()]
 
     def broadcast(raw, cast):
@@ -325,191 +64,145 @@ def _parse_tenants(args):
             raise SystemExit(f"expected 1 or {len(tokens)} values, got {raw!r}")
         return vals
 
-    names = [t.partition(":")[0] for t in tokens]
-    if len(set(names)) != len(names):
-        raise SystemExit(f"duplicate tenant names in {args.tenants!r} — "
-                         "per-tenant SLOs and telemetry are keyed by name")
     rates = broadcast(args.rates, float)
     slos = broadcast(args.slos, float)
     procs = broadcast(args.arrival, str)
-    classes = broadcast(args.request_class, str)
-    tenants = []
+    classes = broadcast(getattr(args, "request_class", "scan"), str)
+    sections = []
     for i, tok in enumerate(tokens):
         name, _, board_key = tok.partition(":")
-        board_key = board_key or name
-        if board_key not in BOARDS:
-            raise SystemExit(f"unknown board {board_key!r} in tenant {tok!r}")
-        try:
-            tenants.append(TenantSpec(
-                name=name, board=BOARDS[board_key], rate=rates[i],
-                process=procs[i], request_class=classes[i],
-                slo_seconds=slos[i], seed=args.seed + i))
-        except ValueError as e:
-            raise SystemExit(str(e))
-    return tenants
+        sections.append(TenantSection(
+            name=name, board=board_key or name, rate=rates[i],
+            arrival=procs[i], request_class=classes[i],
+            slo_seconds=slos[i]))
+    return tuple(sections)
 
 
-def _admission_from_args(args, mean_rate: float):
-    """Shared ``--admission`` wiring. The token bucket defaults its refill
-    to the tenant mix's mean per-tenant rate, so the policy actually bites
-    under a burst instead of idling at its library default."""
-    from repro.serve import AdmissionConfig, AdmissionController
+def spec_from_args(args) -> DeploymentSpec:
+    """The CLI's entire flag surface as one DeploymentSpec (validation —
+    including the old ad-hoc flag checks — happens in the spec)."""
+    mode = getattr(args, "mode", "sim")
+    engine = getattr(args, "engine", "sim")
+    n_gpu, n_cpu = getattr(args, "executors", (3, 1))
 
-    if args.admission == "none":
-        return None
-    bucket_rate = args.bucket_rate if args.bucket_rate is not None \
-        else mean_rate
-    return AdmissionController(AdmissionConfig(
-        policy=args.admission, max_queue=args.max_queue,
-        bucket_rate=bucket_rate, bucket_burst=args.bucket_burst))
+    plan_path = getattr(args, "plan", None) or ""
+    placement = getattr(args, "placement", "greedy")
+    if plan_path and placement == "search":
+        raise SystemExit("--plan applies a saved placement verbatim; it "
+                         "cannot be combined with --placement search "
+                         "(use --trace to reuse a saved traffic trace)")
+    fleet = FleetSection(
+        devices=getattr(args, "devices", 1), gpu_per_device=n_gpu,
+        cpu=n_cpu, links=getattr(args, "links", "shared"),
+        replication=getattr(args, "replication", 0),
+        peer_bw_gbps=getattr(args, "peer_bw", 0.0),
+        placement="plan" if plan_path else placement,
+        trace_path=getattr(args, "trace", None) or "",
+        plan_path=plan_path)
+    memory = MemorySection(
+        tier=getattr(args, "tier", "numa"),
+        prefetch=getattr(args, "prefetch", None),
+        prefetch_trigger=getattr(args, "prefetch_trigger", None))
+    policy = PolicySection(name=args.policy,
+                           evict=getattr(args, "evict", None))
+    serving = ServingSection(
+        mode=mode, engine=engine,
+        admission=getattr(args, "admission", "none"),
+        max_queue=getattr(args, "max_queue", 200),
+        bucket_rate=getattr(args, "bucket_rate", None),
+        bucket_burst=getattr(args, "bucket_burst", 50.0),
+        autoscale=getattr(args, "autoscale", "auto"),
+        slo_priority=not getattr(args, "no_slo_priority", False),
+        tick=getattr(args, "tick", 0.5))
 
-
-def _autoscaler_from_args(args, scale_spec: ExecutorSpec, fleet: int):
-    """Shared ``--autoscale`` parsing for both online engines."""
-    from repro.serve import Autoscaler, AutoscalerConfig
-
-    if args.autoscale == "none":
-        return None
-    if args.autoscale == "auto":
-        lo, hi = fleet, 2 * fleet
-    else:
-        try:
-            lo, hi = map(int, args.autoscale.split(","))
-        except ValueError:
+    tenants: tuple = ()
+    if mode == "online" and engine == "sim":
+        model = ModelSpec(kind="tenants")
+        tenants = _tenant_sections(args)
+    elif mode == "online":
+        if any("," in str(v) for v in (args.rates, args.slos, args.arrival)):
             raise SystemExit(
-                f"--autoscale expects 'min,max', 'auto' or 'none', "
-                f"got {args.autoscale!r}")
-    return Autoscaler(AutoscalerConfig(
-        spec=scale_spec, min_executors=lo, max_executors=hi))
+                "--engine real serves a single tenant over the tiny local "
+                "CoE: pass scalar --rates/--slos/--arrival (multi-tenant "
+                "mixes need --engine sim); --tenants is ignored here")
+        model = ModelSpec(kind="tiny")
+        # the tiny CoE's source draws uniformly at random — "random" is
+        # served as asked; "scan" has no board-scan analogue here and also
+        # gets the uniform stream (the Session reports it as served)
+        tenants = (TenantSection(
+            name="local", board="A", rate=float(args.rates),
+            arrival=args.arrival, request_class=args.request_class,
+            slo_seconds=float(args.slos)),)
+    elif mode == "real":
+        model = ModelSpec(kind="tiny")
+    else:
+        model = ModelSpec(kind="board", board=getattr(args, "board", "A"))
+
+    return DeploymentSpec(
+        model=model, fleet=fleet, memory=memory, policy=policy,
+        serving=serving,
+        workload=WorkloadSection(requests=args.requests, tenants=tenants),
+        seed=getattr(args, "seed", 0))
+
+
+# --------------------------------------------------------------------------- #
+# legacy runners (pre-spec downstream callers) — thin Session wrappers
+# --------------------------------------------------------------------------- #
+
+def run_sim(args) -> dict:
+    return Session(spec_from_args(args)).run()
+
+
+def run_real_mode(args) -> dict:
+    return Session(spec_from_args(args)).run()
 
 
 def run_online(args) -> dict:
-    from repro.serve import OnlineGateway, build_multi_board_coe
-
-    tenants = _parse_tenants(args)
-    tier = _fleet_tier(args, NUMA if args.tier == "numa" else UMA)
-    coe = build_multi_board_coe([t.board for t in tenants],
-                                weights=[t.rate for t in tenants])
-    policy = _policy_from_args(args)
-    n_gpu, n_cpu = args.executors
-    devices = args.devices
-    single = policy.assign == "single"
-    if single:   # same fleet normalization as run_sim
-        n_gpu, n_cpu, devices = 1, 0, 1
-    # multi-tenant mixes over a multi-device fleet: the same FleetSpec path
-    # sim mode uses, so --devices/--links/--replication/--peer-bw drive the
-    # streaming gateway too (ROADMAP "online fleet mode" open item)
-    pools, specs = _fleet_pools(args, tier, n_gpu, n_cpu, devices)
-    placement, search_report = None, None
-    if args.placement == "search":
-        # no requests exist yet on the online path: search over the expected
-        # load (pre-assessed P(use), already weighted by tenant rates); the
-        # autoscaler re-plans replicas from *observed* load at scale events
-        trace = trace_from_usage(coe, length=512)
-        placement, search_report = _searched_placement(
-            args, coe, pools, specs, tier, trace)
-    system = CoServeSystem(coe, specs, pools, policy=policy, tier=tier,
-                           links=args.links, replication=args.replication,
-                           placement=placement)
-
-    admission = _admission_from_args(
-        args, mean_rate=sum(t.rate for t in tenants) / len(tenants))
-    # single-assign policies route everything to executor 0: scaling the
-    # fleet could never receive work, so the autoscaler is disabled
-    autoscaler = None if single \
-        else _autoscaler_from_args(args, specs[0], len(specs))
-
-    gw = OnlineGateway(system, tenants, admission=admission,
-                       autoscaler=autoscaler,
-                       slo_priority=not args.no_slo_priority,
-                       tick_interval=args.tick)
-    report = gw.run(max_requests=args.requests)
-    out = {"mode": "online", "engine": "sim", "tier": tier.name,
-           "policy": args.policy, "devices": devices, "links": args.links,
-           "replication": args.replication,
-           "tenants": {t.name: {"board": t.board.name, "rate_rps": t.rate,
-                                "process": t.process,
-                                "slo_s": t.slo_seconds} for t in tenants}}
-    if search_report is not None:
-        out["placement_search"] = search_report
-    out.update(report.to_json())
-    return out
+    warnings.warn(
+        "run_online(args) positional wiring is deprecated — build a "
+        "DeploymentSpec (serving.mode='online') and run it through "
+        "repro.api.Session",
+        DeprecationWarning, stacklevel=2)
+    return Session(spec_from_args(args)).run()
 
 
 def run_online_real(args) -> dict:
-    """The same gateway over the RealEngine: actual JAX expert loads and
-    jitted forwards advance the clock by measured wall time."""
-    import numpy as np
-
-    from repro.core.coe import Request
-    from repro.serve import OnlineGateway, TenantSpec, make_gaps
-    from repro.core.workload import BOARD_A
-
-    if any("," in str(v) for v in (args.rates, args.slos, args.arrival)):
-        raise SystemExit(
-            "--engine real serves a single tenant over the tiny local CoE: "
-            "pass scalar --rates/--slos/--arrival (multi-tenant mixes need "
-            "--engine sim); --tenants is ignored here")
-    if args.request_class not in ("scan", "random"):
-        raise SystemExit(f"unknown request class {args.request_class!r}")
-    # the real engine's source always draws uniformly at random — "random"
-    # is served as asked; the default "scan" has no board-scan analogue on
-    # the tiny local CoE and also gets the uniform stream
-    system, coe = build_real_system(policy=_policy_from_args(args))
-    n_components = sum(1 for e in coe.experts if e.startswith("cls"))
-    n_detection = sum(1 for e in coe.experts if e.startswith("det"))
-    needs_det, det_assign = _real_board_layout(n_components, n_detection)
-    try:
-        tenant = TenantSpec(name="local", board=BOARD_A,
-                            rate=float(args.rates),
-                            process=args.arrival,
-                            request_class="random",   # what the source does
-                            slo_seconds=float(args.slos),
-                            seed=args.seed)
-    except ValueError as e:
-        raise SystemExit(str(e))
-
-    def source():
-        rng = np.random.RandomState(args.seed)
-        gaps = make_gaps(tenant.process, tenant.rate, rng)
-        t = 0.0
-        for i in range(args.requests):
-            t += next(gaps)
-            c = int(rng.randint(n_components))
-            yield Request(
-                id=i, expert_id=f"cls{c:03d}", arrival_time=t,
-                task_id="local", tenant="local",
-                deadline=t + tenant.slo_seconds, root_arrival_time=t,
-                data={"component": c, "x": rng.randn(64).astype(np.float32),
-                      "needs_detection": bool(needs_det[c]),
-                      "det_expert": int(det_assign[c])})
-
-    admission = _admission_from_args(args, mean_rate=tenant.rate)
-    ex0 = system.executors[0]
-    scale_spec = ExecutorSpec("gpu", ex0.device_profile, ex0.batch_bytes,
-                              "gpu")
-    autoscaler = _autoscaler_from_args(args, scale_spec,
-                                       len(system.executors))
-    gw = OnlineGateway(system, [tenant], admission=admission,
-                       autoscaler=autoscaler,
-                       slo_priority=not args.no_slo_priority,
-                       tick_interval=args.tick)
-    report = gw.run(source=source())
-    out = {"mode": "online", "engine": "real", "policy": args.policy,
-           "tenants": {"local": {"rate_rps": tenant.rate,
-                                 "process": tenant.process,
-                                 "request_class": tenant.request_class,
-                                 "slo_s": tenant.slo_seconds}}}
-    out.update(report.to_json())
-    return out
+    return Session(spec_from_args(args)).run()
 
 
-def main(argv=None):
+# --------------------------------------------------------------------------- #
+# CLI
+# --------------------------------------------------------------------------- #
+
+# dests that configure the run (a --config file replaces all of them; the
+# artifact/io flags --out/--dump-config/--dump-trace/--save-plan compose)
+_CONFIG_DESTS = ("mode", "board", "tier", "policy", "evict", "prefetch",
+                 "prefetch_trigger", "requests", "executors", "devices",
+                 "links", "replication", "peer_bw", "placement", "trace",
+                 "plan", "engine", "tenants", "arrival", "rates", "slos",
+                 "request_class", "admission", "max_queue", "bucket_rate",
+                 "bucket_burst", "autoscale", "no_slo_priority", "tick",
+                 "seed")
+
+
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
+    ap.add_argument("--config", default=None, metavar="SPEC_JSON",
+                    help="run a saved DeploymentSpec instead of flags "
+                         "(docs/configuration.md; other config flags must "
+                         "be left at their defaults)")
+    ap.add_argument("--dump-config", default=None, metavar="PATH",
+                    help="write the resolved DeploymentSpec JSON ('-' for "
+                         "stdout) and exit without serving")
     ap.add_argument("--mode", default="sim", choices=["sim", "real", "online"])
     ap.add_argument("--board", default="A", choices=["A", "B"])
     ap.add_argument("--tier", default="numa", choices=["numa", "uma"])
     ap.add_argument("--policy", default="coserve", choices=list(POLICIES))
+    ap.add_argument("--evict", default=None, choices=list(POLICY_NAMES),
+                    help="override the policy's eviction order (e.g. "
+                         "'observed' ranks victims by live per-expert load "
+                         "with the dependency_prob order as cold-start "
+                         "fallback); default: the policy's own setting")
     ap.add_argument("--prefetch", default=None,
                     choices=["off", "device", "all"],
                     help="override the policy's prefetch behaviour: off | "
@@ -546,6 +239,19 @@ def main(argv=None):
                          "sweep (paper §4.1) or the cost-model local search "
                          "over a workload trace (falls back to greedy when "
                          "nothing improves)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="--placement search: replay this saved "
+                         "WorkloadTrace artifact (from --dump-trace) "
+                         "instead of deriving a trace from the spec")
+    ap.add_argument("--plan", default=None, metavar="PATH",
+                    help="apply a saved PlacementPlan artifact verbatim "
+                         "(from --save-plan) — yesterday's search, no "
+                         "re-search")
+    ap.add_argument("--dump-trace", default=None, metavar="PATH",
+                    help="after the run, save the observed per-expert "
+                         "traffic as a WorkloadTrace artifact")
+    ap.add_argument("--save-plan", default=None, metavar="PATH",
+                    help="save the placement plan this run served")
     ap.add_argument("--out", default=None)
     # --- online-mode flags (repro.serve) ------------------------------- #
     ap.add_argument("--engine", default="sim", choices=["sim", "real"],
@@ -577,31 +283,47 @@ def main(argv=None):
     ap.add_argument("--tick", type=float, default=0.5,
                     help="telemetry/autoscaler control interval, sim seconds")
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args(argv)
+    return ap
 
-    if args.tick <= 0:
-        raise SystemExit(f"--tick must be positive, got {args.tick}")
-    if args.devices < 1:
-        raise SystemExit(f"--devices must be >= 1, got {args.devices}")
-    if args.replication < 0:
-        raise SystemExit(f"--replication must be >= 0, "
-                         f"got {args.replication}")
-    if args.peer_bw < 0:
-        raise SystemExit(f"--peer-bw must be >= 0, got {args.peer_bw}")
-    fleet_flags = (args.devices > 1 or args.links != "shared"
-                   or args.replication or args.peer_bw
-                   or args.placement != "greedy")
-    if fleet_flags and (args.mode == "real"
-                        or (args.mode == "online" and args.engine == "real")):
-        raise SystemExit("--devices/--links/--replication/--peer-bw/"
-                         "--placement drive the simulated fleet; --mode real "
-                         "and --engine real run the single-device "
-                         "shared-link topology")
-    if args.mode == "online":
-        result = run_online(args) if args.engine == "sim" \
-            else run_online_real(args)
-    else:
-        result = run_sim(args) if args.mode == "sim" else run_real_mode(args)
+
+def _resolve_spec(args, ap: argparse.ArgumentParser) -> DeploymentSpec:
+    if not args.config:
+        return spec_from_args(args)
+    overridden = [d for d in _CONFIG_DESTS
+                  if getattr(args, d) != ap.get_default(d)]
+    if overridden:
+        flags = ", ".join("--" + d.replace("_", "-") for d in overridden)
+        raise SystemExit(
+            f"--config carries the full run configuration; drop {flags} "
+            "(edit the spec file instead)")
+    return DeploymentSpec.load(args.config)
+
+
+def main(argv=None):
+    ap = build_parser()
+    args = ap.parse_args(argv)
+    try:
+        spec = _resolve_spec(args, ap)
+    except SpecError as e:
+        raise SystemExit(str(e))
+
+    if args.dump_config:
+        if args.dump_config == "-":
+            print(json.dumps(spec.to_dict(), indent=2, sort_keys=True))
+        else:
+            spec.save(args.dump_config)
+            print(f"wrote {args.dump_config}")
+        return spec.to_dict()
+
+    try:
+        sess = Session(spec)
+    except (SpecError, ValueError) as e:
+        raise SystemExit(str(e))
+    result = sess.run()
+    if args.dump_trace:
+        sess.save_trace(args.dump_trace)
+    if args.save_plan:
+        sess.save_plan(args.save_plan)
     print(json.dumps(result, indent=2))
     if args.out:
         with open(args.out, "w") as f:

@@ -25,6 +25,12 @@ Policies (paper §4.3 + baselines + beyond-paper):
                    seed conflated the two counters, silently turning FIFO
                    into LRU under load.
   cost_benefit     P(use) * reload_cost / byte ascending (beyond-paper).
+  observed         least *observed* load first (``CoServeSystem.expert_load``
+                   assignment counts), with the ``dependency_prob`` order as
+                   the cold-start fallback and tie-break — when traffic
+                   diverges from the static priors (the regime the placement
+                   search wins in), eviction stops thrashing the truly-hot
+                   experts (ROADMAP "Eviction under wrong priors").
 """
 from __future__ import annotations
 
@@ -35,7 +41,8 @@ from typing import (TYPE_CHECKING, Callable, Dict, List, Mapping, Optional,
 if TYPE_CHECKING:  # pragma: no cover — repro.core imports this package
     from repro.core.coe import CoEModel
 
-POLICY_NAMES = ("dependency_prob", "lru", "fifo", "prob", "cost_benefit")
+POLICY_NAMES = ("dependency_prob", "lru", "fifo", "prob", "cost_benefit",
+                "observed")
 
 
 @dataclasses.dataclass
@@ -48,6 +55,10 @@ class EvictionView:
     resident: Set[str]                     # everything resident on this tier
     incoming_id: Optional[str] = None      # expert the eviction makes room for
     load_cost_fn: Optional[Callable[[str], float]] = None
+    observed_load: Optional[Mapping[str, float]] = None
+    #                                      # live per-expert assignment counts
+    #                                      # (CoServeSystem.expert_load); None
+    #                                      # or empty = nothing observed yet
 
 
 class EvictionPolicy:
@@ -112,9 +123,29 @@ class DependencyProbPolicy(EvictionPolicy):
         return stage1 + rest
 
 
+class ObservedLoadPolicy(EvictionPolicy):
+    """Least observed load first; ``dependency_prob`` as cold-start fallback.
+
+    ``view.observed_load`` carries the live assignment counts the system
+    accumulated online. Before any traffic exists (or for experts that never
+    received a request) the ranking degrades exactly to the two-stage
+    ``dependency_prob`` order, so a cold system behaves like the paper's
+    policy and diverging traffic re-ranks victims by what actually ran.
+    """
+    name = "observed"
+
+    def order(self, view: EvictionView) -> List[str]:
+        fallback = DependencyProbPolicy().order(view)
+        if not view.observed_load:
+            return fallback
+        rank = {e: i for i, e in enumerate(fallback)}
+        return sorted(view.candidates,
+                      key=lambda e: (view.observed_load.get(e, 0), rank[e]))
+
+
 _REGISTRY: Dict[str, type] = {p.name: p for p in (
     LRUPolicy, FIFOPolicy, ProbPolicy, CostBenefitPolicy,
-    DependencyProbPolicy)}
+    DependencyProbPolicy, ObservedLoadPolicy)}
 
 
 def make_policy(name: str) -> EvictionPolicy:

@@ -105,14 +105,15 @@ class DevicePool:
         return Residency.DEVICE
 
     def eviction_view(self, incoming_id: Optional[str] = None,
-                      load_cost_fn=None) -> EvictionView:
+                      load_cost_fn=None, observed_load=None) -> EvictionView:
         cands = [e for e in self.evictable() if e != incoming_id]
         return EvictionView(coe=self.coe, candidates=cands,
                             use_order=self.resident,
                             insert_order=self.insert_seq,
                             resident=set(self.resident),
                             incoming_id=incoming_id,
-                            load_cost_fn=load_cost_fn)
+                            load_cost_fn=load_cost_fn,
+                            observed_load=observed_load)
 
     def snapshot(self) -> dict:
         return {"capacity_bytes": self.capacity,
@@ -142,6 +143,9 @@ class HostTier:
         self.ready_at: Dict[str, float] = {}  # promotion-in-flight done times
         self.used_bytes = 0
         self._clock = 0
+        # live per-expert assignment counts ("observed" policy): the owning
+        # CoServeSystem shares its expert_load dict here; None until wired
+        self.observed_load = None
 
     def __contains__(self, expert_id: str) -> bool:
         return expert_id in self.resident
@@ -210,7 +214,7 @@ class HostTier:
         order = self._strategy.order(EvictionView(
             coe=self.coe, candidates=list(self.resident),
             use_order=self.resident, insert_order=self.insert_seq,
-            resident=set(self.resident)))
+            resident=set(self.resident), observed_load=self.observed_load))
         return order[0] if order else None
 
     def residency(self, expert_id: str) -> Optional[Residency]:

@@ -9,7 +9,8 @@ runtime fleet changes, and the gateway is the single composition point.
 from repro.serve.admission import AdmissionConfig, AdmissionController
 from repro.serve.arrivals import (BOARDS, TenantSpec, board_payload_stream,
                                   build_multi_board_coe, bursty_gaps,
-                                  diurnal_gaps, make_gaps, merge_streams,
+                                  diurnal_gaps, make_gaps, merge_board_coe,
+                                  merge_streams,
                                   multi_tenant_stream, poisson_gaps,
                                   step_gaps, tenant_stream)
 from repro.serve.autoscaler import Autoscaler, AutoscalerConfig, ScaleEvent
@@ -21,7 +22,8 @@ from repro.serve.telemetry import (LatencyTracker, P2Quantile, TelemetryHub,
 __all__ = [
     "AdmissionConfig", "AdmissionController", "BOARDS", "TenantSpec",
     "board_payload_stream", "build_multi_board_coe", "bursty_gaps",
-    "diurnal_gaps", "make_gaps", "merge_streams", "multi_tenant_stream",
+    "diurnal_gaps", "make_gaps", "merge_board_coe", "merge_streams",
+    "multi_tenant_stream",
     "poisson_gaps", "step_gaps", "tenant_stream", "Autoscaler",
     "AutoscalerConfig", "ScaleEvent", "OnlineGateway", "OnlineReport",
     "SLOPolicy", "SLOTarget", "deadline_priority", "LatencyTracker",

@@ -243,14 +243,19 @@ def multi_tenant_stream(tenants: Sequence[TenantSpec],
 # multi-board CoE (tenants over different boards share one system)
 # --------------------------------------------------------------------------- #
 
-def build_multi_board_coe(boards: Sequence[BoardSpec],
-                          weights: Optional[Sequence[float]] = None
-                          ) -> CoEModel:
+def merge_board_coe(boards: Sequence[BoardSpec],
+                    weights: Optional[Sequence[float]] = None
+                    ) -> CoEModel:
     """Merge several boards' expert catalogs into one CoE. Expert ids are
     already board-prefixed (``A_cls000``), so distinct boards union
     disjointly; a board named by several tenants appears once with its
     tenants' traffic shares summed. Usage probabilities are scaled by each
-    board's total share so initial placement favours the hot experts."""
+    board's total share so initial placement favours the hot experts.
+
+    Prefer the declarative path: a ``DeploymentSpec`` with
+    ``model.kind="tenants"`` builds this catalog via
+    ``repro.api.build_catalog`` — spec-driven callers get the tenant-rate
+    weighting (or ``model.tenant_weights``) for free."""
     if weights is None:
         weights = [1.0] * len(boards)
     total = sum(weights) or 1.0
@@ -283,3 +288,19 @@ def build_multi_board_coe(boards: Sequence[BoardSpec],
 
     return CoEModel(experts,
                     RoutingModule(first_expert, next_expert, chain_prob))
+
+
+def build_multi_board_coe(boards: Sequence[BoardSpec],
+                          weights: Optional[Sequence[float]] = None
+                          ) -> CoEModel:
+    """Deprecated alias of ``merge_board_coe`` (kept so downstream callers
+    migrate without breaking): new code should declare the tenant mix in a
+    ``DeploymentSpec`` (``model.kind="tenants"``) and let
+    ``repro.api.build_catalog`` build the merged catalog."""
+    import warnings
+    warnings.warn(
+        "build_multi_board_coe(...) direct kwargs are deprecated — declare "
+        'the tenant mix in a DeploymentSpec (model.kind="tenants") and use '
+        "repro.api.build_catalog, or call merge_board_coe for the raw merge",
+        DeprecationWarning, stacklevel=2)
+    return merge_board_coe(boards, weights)

@@ -1,0 +1,528 @@
+"""DeploymentSpec API: round-trip property, CLI-flags-vs-spec equivalence
+against the pre-refactor wiring, trace/plan artifact reuse, suite-registry
+filename validation, the observed eviction policy and deprecation shims."""
+import dataclasses
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.api import (BoardSection, DeploymentSpec, FleetSection,
+                       MemorySection, ModelSpec, PolicySection, Session,
+                       ServingSection, SpecError, TenantSection,
+                       WorkloadSection, build_catalog, build_layout,
+                       build_system, load_plan, load_trace, make_requests,
+                       resolve_policy, resolve_tier, save_plan, save_trace)
+from repro.core import COSERVE, CoServeSystem, Simulation
+from repro.fleet import (PlacementPlan, SearchConfig, WorkloadTrace,
+                         replay_cost, search_placement, trace_from_requests,
+                         validate_pool_groups)
+from repro.launch.serve import build_parser, spec_from_args
+from repro.memory import POLICY_NAMES, EvictionView, make_policy
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# --------------------------------------------------------------------------- #
+# seeded-random round-trip property
+# --------------------------------------------------------------------------- #
+
+def _random_spec(rng: np.random.RandomState) -> DeploymentSpec:
+    """A random VALID spec: mode-consistent model kind + tenants."""
+    mode = ("sim", "real", "online")[rng.randint(3)]
+    engine = ("sim", "real")[rng.randint(2)] if mode == "online" else "sim"
+    boards = ()
+    if rng.rand() < 0.5:
+        boards = (BoardSection(
+            name=f"R{rng.randint(100)}", n_components=int(rng.randint(8, 80)),
+            n_active=int(rng.randint(1, 8)), zipf_s=float(rng.rand() * 2)),)
+    names = [b.name for b in boards] + ["A", "B"]
+    tenants = ()
+    real_exec = mode == "real" or engine == "real"
+    if mode == "online" and engine == "sim":
+        kind = "tenants"
+        tenants = tuple(
+            TenantSection(
+                name=f"t{i}", board=names[rng.randint(len(names))],
+                rate=float(1 + rng.rand() * 40),
+                arrival=("poisson", "bursty", "diurnal",
+                         "step")[rng.randint(4)],
+                request_class=("scan", "random")[rng.randint(2)],
+                slo_seconds=float(0.5 + rng.rand() * 5),
+                seed=int(rng.randint(10)) if rng.rand() < 0.5 else None)
+            for i in range(rng.randint(1, 4)))
+    elif real_exec:
+        kind = "tiny"
+        if engine == "real":
+            tenants = (TenantSection(name="local", rate=20.0),)
+    else:
+        kind = "board"
+    fleet = FleetSection() if real_exec else FleetSection(
+        devices=int(rng.randint(1, 5)),
+        gpu_per_device=int(rng.randint(1, 4)), cpu=int(rng.randint(3)),
+        links=("shared", "per-device")[rng.randint(2)],
+        replication=int(rng.randint(3)),
+        peer_bw_gbps=float(rng.choice([0.0, 25.0, 50.0])),
+        placement=("greedy", "search")[rng.randint(2)])
+    return DeploymentSpec(
+        model=ModelSpec(kind=kind,
+                        board=names[rng.randint(len(names))]
+                        if kind == "board" else "A",
+                        boards=boards),
+        fleet=fleet,
+        memory=MemorySection(
+            tier=("numa", "uma", "tpu_v5e")[rng.randint(3)],
+            prefetch=(None, "off", "device", "all")[rng.randint(4)],
+            prefetch_trigger=(None, "exec", "queue")[rng.randint(3)],
+            device_bytes=int(rng.randint(1, 32)) << 30
+            if rng.rand() < 0.5 else None),
+        policy=PolicySection(
+            name=("coserve", "coserve_none", "samba")[rng.randint(3)],
+            evict=(None, *POLICY_NAMES)[rng.randint(
+                1 + len(POLICY_NAMES))]),
+        serving=ServingSection(
+            mode=mode, engine=engine,
+            admission=("none", "queue_depth", "deadline",
+                       "token_bucket")[rng.randint(4)],
+            autoscale=("auto", "none", "2,6")[rng.randint(3)],
+            slo_priority=bool(rng.rand() < 0.5),
+            tick=float(0.1 + rng.rand())),
+        workload=WorkloadSection(requests=int(rng.randint(1, 3000)),
+                                 interval_s=float(0.001 + rng.rand() * 0.01),
+                                 tenants=tenants),
+        seed=int(rng.randint(100)))
+
+
+@pytest.mark.parametrize("seed", range(25))
+def test_spec_round_trip_property(seed, tmp_path):
+    spec = _random_spec(np.random.RandomState(seed))
+    assert DeploymentSpec.from_dict(spec.to_dict()) == spec
+    path = str(tmp_path / "s.json")
+    spec.save(path)
+    assert DeploymentSpec.load(path) == spec
+    # canonical serialization is byte-stable
+    DeploymentSpec.load(path).save(str(tmp_path / "s2.json"))
+    assert open(path).read() == open(str(tmp_path / "s2.json")).read()
+
+
+def test_example_specs_round_trip_and_are_canonical():
+    specs_dir = os.path.join(ROOT, "examples", "specs")
+    files = sorted(f for f in os.listdir(specs_dir) if f.endswith(".json"))
+    assert {"sim.json", "online_fleet.json", "real.json"} <= set(files)
+    for f in files:
+        path = os.path.join(specs_dir, f)
+        spec = DeploymentSpec.load(path)
+        assert DeploymentSpec.from_dict(spec.to_dict()) == spec
+        canonical = json.dumps(spec.to_dict(), indent=2, sort_keys=True) + "\n"
+        assert open(path).read() == canonical, f"{f} not canonical"
+
+
+# --------------------------------------------------------------------------- #
+# eager validation with actionable errors
+# --------------------------------------------------------------------------- #
+
+def test_unknown_key_rejected_with_known_keys():
+    with pytest.raises(SpecError, match="unknown key.*devcies.*known keys"):
+        DeploymentSpec.from_dict({"fleet": {"devcies": 2}})
+
+
+def test_real_mode_rejects_fleet_shape():
+    with pytest.raises(SpecError, match="single-device shared-link"):
+        DeploymentSpec(model=ModelSpec(kind="tiny"),
+                       fleet=FleetSection(devices=2),
+                       serving=ServingSection(mode="real"))
+
+
+def test_mode_kind_mismatch_is_actionable():
+    with pytest.raises(SpecError, match='kind="tiny"'):
+        DeploymentSpec(model=ModelSpec(kind="board"),
+                       serving=ServingSection(mode="real"))
+
+
+def test_plan_placement_requires_path_and_vice_versa():
+    with pytest.raises(SpecError, match="plan_path"):
+        FleetSection(placement="plan")
+    with pytest.raises(SpecError, match="plan_path"):
+        FleetSection(placement="greedy", plan_path="x.json")
+    with pytest.raises(SpecError, match="trace_path"):
+        FleetSection(placement="greedy", trace_path="x.json")
+
+
+def test_unknown_board_and_duplicate_tenants_rejected():
+    with pytest.raises(SpecError, match="unknown board"):
+        DeploymentSpec(model=ModelSpec(kind="tenants"),
+                       serving=ServingSection(mode="online"),
+                       workload=WorkloadSection(tenants=(
+                           TenantSection(name="t", board="Z"),)))
+    with pytest.raises(SpecError, match="duplicate tenant names"):
+        WorkloadSection(tenants=(TenantSection(name="t"),
+                                 TenantSection(name="t")))
+
+
+def test_bad_autoscale_and_tick_rejected():
+    with pytest.raises(SpecError, match="autoscale"):
+        ServingSection(autoscale="lots")
+    with pytest.raises(SpecError, match="tick"):
+        ServingSection(tick=0.0)
+
+
+def test_tenant_weights_must_match_tenant_count():
+    with pytest.raises(SpecError, match="tenant_weights"):
+        DeploymentSpec(model=ModelSpec(kind="tenants",
+                                       tenant_weights=(1.0, 2.0)),
+                       serving=ServingSection(mode="online"),
+                       workload=WorkloadSection(tenants=(
+                           TenantSection(name="a"),)))
+
+
+# --------------------------------------------------------------------------- #
+# CLI flags -> spec -> system equivalence (every mode), pinned against the
+# pre-refactor wiring (inlined below exactly as launch/serve.py had it)
+# --------------------------------------------------------------------------- #
+
+def _legacy_sim(board_name, n_requests, n_gpu, n_cpu, policy=COSERVE):
+    """run_sim's wiring before DeploymentSpec, verbatim."""
+    from repro.core.workload import (BOARD_A, BOARD_B, build_board_coe,
+                                     make_executor_specs, make_task_requests)
+    from repro.memory import NUMA
+
+    board = BOARD_A if board_name == "A" else BOARD_B
+    coe = build_board_coe(board)
+    pools, specs = make_executor_specs(NUMA, n_gpu, n_cpu)
+    system = CoServeSystem(coe, specs, pools, policy=policy, tier=NUMA)
+    sim = Simulation(system)
+    sim.submit(make_task_requests(board, n_requests))
+    return sim.run()
+
+
+def test_sim_flags_vs_spec_equivalence():
+    from repro.launch.serve import main
+    legacy = _legacy_sim("A", 150, 2, 0)
+    res = main(["--mode", "sim", "--requests", "150", "--executors", "2,0"])
+    assert res["completed"] == legacy.completed
+    assert res["switches"] == legacy.switches
+    assert res["throughput"] == round(legacy.throughput, 2)
+    assert res["makespan_s"] == round(legacy.makespan, 2)
+    assert res["avg_latency_s"] == round(legacy.avg_latency, 4)
+
+
+def _legacy_online(n_requests, rates, n_gpu=3, n_cpu=1, seed=0):
+    """run_online's wiring before DeploymentSpec, verbatim (no admission,
+    no autoscaling, default EDF + tick)."""
+    from repro.core.workload import make_executor_specs
+    from repro.memory import NUMA
+    from repro.serve import (BOARDS, OnlineGateway, TenantSpec,
+                             merge_board_coe)
+
+    tenants = [TenantSpec(name=n, board=BOARDS[n], rate=r,
+                          process="poisson", request_class="scan",
+                          slo_seconds=2.0, seed=seed + i)
+               for i, (n, r) in enumerate(zip("AB", rates))]
+    coe = merge_board_coe([t.board for t in tenants],
+                          weights=[t.rate for t in tenants])
+    pools, specs = make_executor_specs(NUMA, n_gpu, n_cpu)
+    system = CoServeSystem(coe, specs, pools, policy=COSERVE, tier=NUMA)
+    gw = OnlineGateway(system, tenants)
+    return gw.run(max_requests=n_requests)
+
+
+def test_online_flags_vs_spec_equivalence():
+    from repro.launch.serve import main
+    legacy = _legacy_online(150, (20.0, 10.0))
+    res = main(["--mode", "online", "--requests", "150",
+                "--rates", "20,10", "--slos", "2.0", "--autoscale", "none"])
+    # identical streams, identical system: the whole report matches
+    assert res["completed"] == legacy.metrics.completed
+    assert res["switches"] == legacy.metrics.switches
+    assert res["latency_s"]["p99"] == round(legacy.metrics.p99_latency, 4)
+    assert res["throughput"] == round(legacy.metrics.throughput, 3)
+
+
+def test_real_mode_spec_equivalence_structure():
+    """Real-engine timings are wall-clock; equivalence is structural: same
+    catalog, same request stream, all requests served."""
+    from repro.launch.serve import main
+    res = main(["--mode", "real", "--requests", "20"])
+    assert res["mode"] == "real" and res["completed"] == 20
+    assert sorted(res) == ["completed", "makespan_s", "mode", "policy",
+                           "switches", "throughput"]
+
+
+def test_online_real_spec_equivalence_structure():
+    from repro.launch.serve import main
+    res = main(["--mode", "online", "--engine", "real", "--requests", "15",
+                "--rates", "30", "--autoscale", "none"])
+    assert res["mode"] == "online" and res["engine"] == "real"
+    assert res["tenants"]["local"]["request_class"] == "random"
+    assert res["completed"] + res["shed"] == 15
+
+
+@pytest.mark.parametrize("argv,mode,kind", [
+    (["--mode", "sim", "--board", "B"], "sim", "board"),
+    (["--mode", "real"], "real", "tiny"),
+    (["--mode", "online", "--rates", "25,12", "--slos", "2,4"],
+     "online", "tenants"),
+    (["--mode", "online", "--engine", "real", "--rates", "30"],
+     "online", "tiny"),
+])
+def test_spec_from_args_every_mode(argv, mode, kind):
+    args = build_parser().parse_args(argv)
+    spec = spec_from_args(args)
+    assert spec.serving.mode == mode and spec.model.kind == kind
+    assert DeploymentSpec.from_dict(spec.to_dict()) == spec
+
+
+def test_dump_config_then_config_reproduces_run(tmp_path, capsys):
+    from repro.launch.serve import main
+    flags = ["--mode", "sim", "--requests", "120", "--executors", "2,0"]
+    cfg = str(tmp_path / "spec.json")
+    main(flags + ["--dump-config", cfg])
+    direct = main(flags)
+    via_config = main(["--config", cfg])
+    assert direct == via_config
+
+
+def test_config_rejects_conflicting_flags(tmp_path):
+    from repro.launch.serve import main
+    cfg = str(tmp_path / "spec.json")
+    main(["--mode", "sim", "--requests", "60", "--executors", "1,0",
+          "--dump-config", cfg])
+    with pytest.raises(SystemExit, match="drop --requests"):
+        main(["--config", cfg, "--requests", "10"])
+
+
+# --------------------------------------------------------------------------- #
+# trace / plan artifacts: save -> load -> search reuse
+# --------------------------------------------------------------------------- #
+
+SMALL_BOARD = BoardSection(name="S", n_components=24, n_active=16,
+                           avg_quantity=2.0, n_detection=4, zipf_s=1.8)
+
+
+def _fleet_spec(n_requests=120, **fleet_kw):
+    fleet_kw.setdefault("devices", 2)
+    fleet_kw.setdefault("gpu_per_device", 2)
+    fleet_kw.setdefault("cpu", 0)
+    fleet_kw.setdefault("links", "per-device")
+    return DeploymentSpec(
+        model=ModelSpec(kind="board", board="S", boards=(SMALL_BOARD,)),
+        fleet=FleetSection(**fleet_kw),
+        memory=MemorySection(tier="numa", device_bytes=2 << 30,
+                             host_cache_bytes=8 << 30),
+        serving=ServingSection(mode="sim"),
+        workload=WorkloadSection(requests=n_requests))
+
+
+def test_trace_artifact_round_trip(tmp_path):
+    trace = WorkloadTrace(("a", "b", "a"), gap_s=0.01, exec_s=0.03)
+    path = str(tmp_path / "t.json")
+    save_trace(trace, path)
+    assert load_trace(path) == trace
+
+
+def test_artifact_kind_mismatch_is_actionable(tmp_path):
+    trace_path = str(tmp_path / "t.json")
+    save_trace(WorkloadTrace(("a",)), trace_path)
+    with pytest.raises(ValueError, match="not a 'coserve.placement_plan'"):
+        load_plan(trace_path, None)
+
+
+def test_plan_artifact_round_trip_and_capacity_guard(tmp_path):
+    spec = _fleet_spec()
+    coe = build_catalog(spec)
+    pools, _ = build_layout(spec, resolve_tier(spec))
+    plan = PlacementPlan.build(coe, pools, replication=1)
+    path = str(tmp_path / "p.json")
+    save_plan(plan, path)
+    reloaded = load_plan(path, coe, capacities=pools)
+    assert reloaded.layout() == plan.layout()
+    assert reloaded.assignments == plan.assignments
+    with pytest.raises(ValueError, match="re-run the placement search"):
+        load_plan(path, coe, capacities={"gpu0": 123})
+
+
+def test_saved_trace_drives_search_and_saved_plan_skips_it(tmp_path):
+    """ISSUE acceptance: dump trace -> search over it -> save plan ->
+    reload via the spec -> identical system placement, no re-search."""
+    spec = _fleet_spec()
+    tier = resolve_tier(spec)
+    coe = build_catalog(spec)
+    pools, especs = build_layout(spec, tier)
+    requests = make_requests(spec)
+    trace = trace_from_requests(coe, requests[:128])
+    trace_path = str(tmp_path / "trace.json")
+    save_trace(trace, trace_path)
+
+    # search over the SAVED trace through the spec
+    searched_spec = dataclasses.replace(
+        spec, fleet=dataclasses.replace(spec.fleet, placement="search",
+                                        trace_path=trace_path,
+                                        replication=1))
+    sess = Session(searched_spec)
+    report = sess.ctx.search_report
+    assert report is not None
+    assert report["cost_s"] <= report["seed_cost_s"] + 1e-9
+
+    # the searched plan scores exactly like a direct search over the trace
+    greedy = PlacementPlan.build(coe, pools, replication=1)
+    direct = search_placement(
+        coe, pools, load_trace(trace_path), tier, links="per-device",
+        pool_devices=validate_pool_groups(especs), seed_plan=greedy,
+        config=SearchConfig(seed=spec.seed, replication=1))
+    assert sess.system.placement.assignments == direct.plan.assignments
+
+    # save the served plan; a placement="plan" spec applies it verbatim
+    plan_path = str(tmp_path / "plan.json")
+    sess.save_plan(plan_path)
+    plan_spec = dataclasses.replace(
+        spec, fleet=dataclasses.replace(spec.fleet, placement="plan",
+                                        plan_path=plan_path,
+                                        replication=1))
+    system2 = build_system(plan_spec)
+    assert system2.placement.assignments == direct.plan.assignments
+    # and it prices identically on the trace — the win is reproduced
+    # without re-searching
+    cost = replay_cost(coe, pools, system2.placement, trace, tier,
+                       links="per-device",
+                       pool_devices=validate_pool_groups(especs))
+    assert cost == pytest.approx(direct.cost)
+
+
+def test_session_dump_trace_roundtrips_observed_load(tmp_path):
+    spec = _fleet_spec(n_requests=80)
+    sess = Session(spec)
+    sess.run()
+    path = str(tmp_path / "obs.json")
+    sess.save_trace(path)
+    trace = load_trace(path)
+    assert trace.events
+    served = {e for e in sess.system.expert_load}
+    assert set(trace.events) <= served
+
+
+def test_session_single_shot_and_submit_guard():
+    spec = _fleet_spec(n_requests=40)
+    sess = Session(spec)
+    sess.run()
+    with pytest.raises(RuntimeError, match="single-shot"):
+        sess.run()
+    online = DeploymentSpec(
+        model=ModelSpec(kind="tenants"),
+        serving=ServingSection(mode="online"),
+        workload=WorkloadSection(requests=10, tenants=(
+            TenantSection(name="A", board="A"),)))
+    with pytest.raises(ValueError, match="online"):
+        Session(online).submit([])
+
+
+# --------------------------------------------------------------------------- #
+# benchmark suite registry: artifact filenames follow the registered key
+# --------------------------------------------------------------------------- #
+
+def test_suite_registry_outpaths_match_keys():
+    import sys
+    sys.path.insert(0, ROOT)
+    try:
+        from benchmarks.run import suite_out_paths, validate_registry
+    finally:
+        sys.path.pop(0)
+    validate_registry()   # must not raise on the real registry
+    outs = suite_out_paths()
+    for key in ("online", "memory", "fleet", "placement"):
+        assert outs[key] == f"BENCH_{key}.json"
+
+
+def test_suite_registry_detects_mismatch(monkeypatch):
+    import sys
+    sys.path.insert(0, ROOT)
+    try:
+        from benchmarks import bench_fleet, run as bench_run
+    finally:
+        sys.path.pop(0)
+    monkeypatch.setattr(bench_fleet, "OUT_PATH", "BENCH_wrong.json")
+    with pytest.raises(RuntimeError, match="fleet.*BENCH_fleet.json"):
+        bench_run.validate_registry()
+
+
+# --------------------------------------------------------------------------- #
+# observed eviction policy
+# --------------------------------------------------------------------------- #
+
+def _view(coe, candidates, observed=None):
+    order = {e: i for i, e in enumerate(candidates)}
+    return EvictionView(coe=coe, candidates=list(candidates),
+                        use_order=order, insert_order=order,
+                        resident=set(candidates), observed_load=observed)
+
+
+def test_observed_policy_registered_and_in_sweep_names():
+    assert "observed" in POLICY_NAMES
+    assert make_policy("observed").name == "observed"
+
+
+def test_observed_policy_protects_hot_experts():
+    spec = _fleet_spec()
+    coe = build_catalog(spec)
+    cands = sorted(coe.experts)[:6]
+    observed = {cands[0]: 50, cands[1]: 3}   # cands[2:] never ran
+    order = make_policy("observed").order(_view(coe, cands, observed))
+    # never-observed experts go first, the hottest observed expert last
+    assert order[-1] == cands[0] and order[-2] == cands[1]
+    assert set(order[:4]) == set(cands[2:])
+
+
+def test_observed_policy_cold_start_falls_back_to_dependency_prob():
+    spec = _fleet_spec()
+    coe = build_catalog(spec)
+    cands = sorted(coe.experts)[:8]
+    dep = make_policy("dependency_prob").order(_view(coe, cands))
+    assert make_policy("observed").order(_view(coe, cands, None)) == dep
+    assert make_policy("observed").order(_view(coe, cands, {})) == dep
+    # all-equal observations tie-break by the dependency_prob order too
+    assert make_policy("observed").order(
+        _view(coe, cands, {e: 1 for e in cands})) == dep
+
+
+def test_system_wires_observed_load_into_manager_and_host():
+    spec = dataclasses.replace(_fleet_spec(n_requests=60),
+                               policy=PolicySection(evict="observed"))
+    sess = Session(spec)
+    system = sess.system
+    assert system.manager.observed_load is system.expert_load
+    assert system.hierarchy.host.observed_load is system.expert_load
+    res = sess.run()
+    assert res["completed"] == 60
+    assert system.expert_load      # counts accumulated during the run
+
+
+def test_observed_evict_via_cli_flag():
+    from repro.launch.serve import main
+    res = main(["--mode", "sim", "--requests", "80", "--executors", "1,0",
+                "--evict", "observed"])
+    assert res["completed"] == 80
+
+
+# --------------------------------------------------------------------------- #
+# deprecation shims
+# --------------------------------------------------------------------------- #
+
+def test_build_multi_board_coe_shim_warns_and_matches():
+    from repro.core.workload import BOARD_A
+    from repro.serve import build_multi_board_coe, merge_board_coe
+
+    with pytest.warns(DeprecationWarning, match="DeploymentSpec"):
+        old = build_multi_board_coe([BOARD_A], weights=[1.0])
+    new = merge_board_coe([BOARD_A], weights=[1.0])
+    assert sorted(old.experts) == sorted(new.experts)
+
+
+def test_run_online_shim_warns_and_runs():
+    from repro.launch import serve
+
+    args = build_parser().parse_args(
+        ["--mode", "online", "--requests", "40", "--rates", "30",
+         "--autoscale", "none"])
+    with pytest.warns(DeprecationWarning, match="Session"):
+        res = serve.run_online(args)
+    assert res["mode"] == "online" and res["completed"] > 0

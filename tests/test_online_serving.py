@@ -10,7 +10,7 @@ from repro.core.memory import NUMA
 from repro.core.workload import BoardSpec, make_executor_specs
 from repro.serve import (AdmissionConfig, AdmissionController, Autoscaler,
                          AutoscalerConfig, OnlineGateway, P2Quantile,
-                         TenantSpec, build_multi_board_coe, make_gaps,
+                         TenantSpec, make_gaps, merge_board_coe,
                          multi_tenant_stream, tenant_stream)
 
 SMALL_A = BoardSpec(name="A", n_components=40, n_active=20, n_detection=4)
@@ -18,7 +18,7 @@ SMALL_B = BoardSpec(name="B", n_components=36, n_active=18, n_detection=4)
 
 
 def build_system(boards, n_gpu=2, n_cpu=1, weights=None):
-    coe = build_multi_board_coe(boards, weights)
+    coe = merge_board_coe(boards, weights)
     pools, specs = make_executor_specs(NUMA, n_gpu, n_cpu)
     return CoServeSystem(coe, specs, pools, policy=COSERVE, tier=NUMA), specs
 

@@ -1,0 +1,49 @@
+#!/usr/bin/env python
+"""Round-trip every DeploymentSpec file under a directory (CI `config` job).
+
+For each ``*.json``: load (eager cross-field validation), re-serialize, and
+require ``from_dict(to_dict(spec)) == spec`` plus byte-stable re-save — a
+spec file in the repo that cannot reproduce itself is a broken artifact.
+
+  PYTHONPATH=src python tools/check_specs.py examples/specs
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+
+def check_dir(root: str) -> int:
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent
+                           / "src"))
+    from repro.api import DeploymentSpec, SpecError
+
+    paths = sorted(pathlib.Path(root).glob("*.json"))
+    if not paths:
+        print(f"no spec files under {root}")
+        return 1
+    failures = 0
+    for path in paths:
+        try:
+            spec = DeploymentSpec.load(str(path))
+            if DeploymentSpec.from_dict(spec.to_dict()) != spec:
+                raise SpecError("from_dict(to_dict(spec)) != spec")
+            stable = json.dumps(spec.to_dict(), indent=2, sort_keys=True) \
+                + "\n"
+            on_disk = path.read_text()
+            if stable != on_disk:
+                raise SpecError(
+                    "file is not in canonical form — re-save it with "
+                    "DeploymentSpec.save (or serve --dump-config)")
+            print(f"ok   {path}")
+        except (SpecError, ValueError) as e:
+            failures += 1
+            print(f"FAIL {path}: {e}")
+    print(f"{len(paths) - failures}/{len(paths)} specs ok")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(check_dir(sys.argv[1] if len(sys.argv) > 1 else
+                       "examples/specs"))
