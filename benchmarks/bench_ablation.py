@@ -8,7 +8,8 @@ import json
 
 from repro.core import COSERVE
 
-from benchmarks.common import ABLATIONS, TASKS, TIERS, run_task
+from benchmarks.common import (ABLATIONS, TASKS, TIERS, perf_fields,
+                               run_task, suite_perf)
 
 BEYOND = {
     "coserve_cb": dataclasses.replace(COSERVE, name="coserve_cb",
@@ -35,8 +36,9 @@ def run(quick: bool = False) -> dict:
             for name, pol in {**ABLATIONS, **BEYOND}.items():
                 m = run_task(pol, board, n, tier)
                 row[name] = {"throughput": round(m.throughput, 2),
-                             "switches": m.switches}
+                             "switches": m.switches, **perf_fields(m)}
             out[f"{tier_name}/{task}"] = row
+    out["perf"] = suite_perf(out)
     return out
 
 

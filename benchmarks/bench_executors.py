@@ -6,7 +6,7 @@ import json
 
 from repro.core import COSERVE
 
-from benchmarks.common import TASKS, TIERS, run_task
+from benchmarks.common import TASKS, TIERS, run_task, suite_perf
 
 
 def run(quick: bool = False) -> dict:
@@ -18,11 +18,19 @@ def run(quick: bool = False) -> dict:
             board, n = TASKS[task]
             n = min(n, 1200) if quick else n
             row = {}
+            events, wall = 0, 0.0
             for g, c in configs:
                 m = run_task(COSERVE, board, n, tier, n_gpu=g, n_cpu=c)
                 row[f"{g}G{c}C"] = round(m.throughput, 2)
+                events += m.events_processed
+                wall += m.wall_s
             best = max(row, key=row.get)
-            out[f"{tier_name}/{task}"] = {"throughput": row, "best": best}
+            # the sweep cell is the row here: throughput values are scalars
+            # per config, so the perf fields aggregate the whole sweep
+            out[f"{tier_name}/{task}"] = {"throughput": row, "best": best,
+                                          "events_processed": events,
+                                          "wall_s": round(wall, 4)}
+    out["perf"] = suite_perf(out)
     return out
 
 

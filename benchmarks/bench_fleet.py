@@ -30,6 +30,8 @@ from repro.api import (BoardSection, DeploymentSpec, FleetSection,
                        MemorySection, ModelSpec, Session, ServingSection,
                        WorkloadSection)
 
+from benchmarks.common import perf_fields, suite_perf
+
 OUT_PATH = "BENCH_fleet.json"
 
 # thrash-heavy board: ~21 GB of active experts against 3 GB pools (12 GB at
@@ -76,6 +78,7 @@ def _row(m) -> dict:
         "pcie_wait_s": chans["pcie_channel"]["wait_time_s"],   # fleet total
         "per_link_wait_s": {name: ch["wait_time_s"]
                             for name, ch in chans["pcie_channels"].items()},
+        **perf_fields(m),
     }
 
 
@@ -107,6 +110,7 @@ def run(quick: bool = False, smoke: bool = False) -> dict:
         / sweep["1dev/shared/repl0"]["throughput_rps"], 3) \
         if sweep["1dev/shared/repl0"]["throughput_rps"] else None
 
+    out["perf"] = suite_perf(out)
     with open(OUT_PATH, "w") as f:
         json.dump(out, f, indent=1)
     return out

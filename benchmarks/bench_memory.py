@@ -31,6 +31,8 @@ from repro.api import (BoardSection, DeploymentSpec, FleetSection,
                        ServingSection, WorkloadSection)
 from repro.memory import POLICY_NAMES
 
+from benchmarks.common import perf_fields, suite_perf
+
 OUT_PATH = "BENCH_memory.json"
 
 # scaled-down board that thrashes the pool (same shape as the system tests)
@@ -89,6 +91,7 @@ def _row(m) -> dict:
         "per_load_s": round(total_load / max(1, m.switches), 4),
         "disk_wait_s": m.memory["channels"]["disk_channel"]["wait_time_s"],
         "prefetch": m.memory["prefetch"],
+        **perf_fields(m),
     }
 
 
@@ -142,6 +145,7 @@ def run(quick: bool = False) -> dict:
     out["prefetch"]["cross_tier_marginal"] = \
         round(1 - all_stall / dev_stall, 3) if dev_stall else None
 
+    out["perf"] = suite_perf(out)
     with open(OUT_PATH, "w") as f:
         json.dump(out, f, indent=1)
     return out

@@ -11,7 +11,7 @@ from repro.core.profiler import (decay_window_search,
 from repro.core.workload import build_board_coe
 from repro.core.memory import NUMA
 
-from benchmarks.common import TASKS, run_task
+from benchmarks.common import TASKS, run_task, suite_perf
 
 
 def run(quick: bool = False) -> dict:
@@ -23,6 +23,7 @@ def run(quick: bool = False) -> dict:
         coe = build_board_coe(board)
 
         history = []
+        perf = {"events": 0, "wall": 0.0}
 
         def throughput_fn(n_experts: int) -> float:
             pool, _ = pool_split_from_expert_count(coe, n_experts,
@@ -30,6 +31,8 @@ def run(quick: bool = False) -> dict:
             m = run_task(COSERVE, board, n_sample, NUMA,
                          gpu_pool_bytes=pool)
             history.append((n_experts, round(m.throughput, 2)))
+            perf["events"] += m.events_processed
+            perf["wall"] += m.wall_s
             return m.throughput
 
         res = decay_window_search(throughput_fn, max_experts=len(coe),
@@ -41,7 +44,10 @@ def run(quick: bool = False) -> dict:
             "chosen_n_experts": res.n_experts,
             "linear_error": round(res.linear_error, 4),
             "peak_inside_window": res.window[0] <= peak_n <= res.window[1],
+            "events_processed": perf["events"],
+            "wall_s": round(perf["wall"], 4),
         }
+    out["perf"] = suite_perf(out)
     return out
 
 

@@ -22,6 +22,8 @@ import json
 from repro.api import (DeploymentSpec, MemorySection, ModelSpec, Session,
                        ServingSection, TenantSection, WorkloadSection)
 
+from benchmarks.common import perf_fields, suite_perf
+
 OUT_PATH = "BENCH_online.json"
 
 
@@ -61,6 +63,7 @@ def _row(report, offered_rps: float) -> dict:
         "switches": m.switches,
         "stall_s": round(m.stall_time, 3),
         "host_prefetch": m.memory.get("prefetch", {}),
+        **perf_fields(m),
     }
 
 
@@ -94,6 +97,7 @@ def run(quick: bool = False) -> dict:
         _run(_spec(hot_a, hot_b, n, admission="queue_depth",
                    max_queue=150)), hot_a + hot_b)
 
+    out["perf"] = suite_perf(out)
     with open(OUT_PATH, "w") as f:
         json.dump(out, f, indent=1)
     return out

@@ -14,7 +14,7 @@ from repro.core.memory import NUMA
 from repro.core.workload import (build_board_coe, make_executor_specs,
                                  make_task_requests)
 
-from benchmarks.common import TASKS, run_task
+from benchmarks.common import TASKS, perf_fields, run_task, suite_perf
 
 
 def run(quick: bool = False) -> dict:
@@ -26,7 +26,7 @@ def run(quick: bool = False) -> dict:
     # inference latency of one request = K (amortised in-batch)
     from repro.core.workload import device_profile
     prof = device_profile("gpu", NUMA).arch_profiles["resnet101"]
-    return {
+    out = {
         "per_request_scheduling_ms": round(per_req_sched * 1e3, 4),
         "per_request_management_ms": round(per_req_mgmt * 1e3, 4),
         "per_request_inference_ms": round(prof.k * 1e3, 4),
@@ -34,7 +34,10 @@ def run(quick: bool = False) -> dict:
         "mgmt_fraction_of_makespan": round(m.mgmt_time / m.makespan, 6),
         "sched_faster_than_inference": per_req_sched < prof.k,
         "mgmt_under_0.2pct": m.mgmt_time / m.makespan < 0.002,
+        **perf_fields(m),
     }
+    out["perf"] = suite_perf(out)
+    return out
 
 
 def main():

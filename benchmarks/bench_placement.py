@@ -45,6 +45,8 @@ from repro.api import (BoardSection, DeploymentSpec, FleetSection,
 from repro.fleet import (PlacementPlan, SearchConfig, search_placement,
                          trace_from_requests, validate_pool_groups)
 
+from benchmarks.common import perf_fields, suite_perf
+
 OUT_PATH = "BENCH_placement.json"
 
 # two product lines: a Zipf-heavy high-rate tenant (replication's best case)
@@ -96,7 +98,8 @@ def _row(m) -> dict:
             "switches": m.switches,
             "p99_s": round(m.p99_latency, 4),
             "stall_s": round(m.stall_time, 3),
-            "replicas": m.memory["placement"]["replicas"]}
+            "replicas": m.memory["placement"]["replicas"],
+            **perf_fields(m)}
 
 
 def _search_vs_greedy(n_requests: int, trace_len: int, iterations: int) -> dict:
@@ -216,6 +219,7 @@ def run(quick: bool = False, smoke: bool = False) -> dict:
         "stall_ratio": round(peer["stall_s"] / host_reload["stall_s"], 4)
         if host_reload["stall_s"] else None,
     }
+    out["perf"] = suite_perf(out)
     with open(OUT_PATH, "w") as f:
         json.dump(out, f, indent=1)
     return out

@@ -13,7 +13,8 @@ from repro.core.profiler import (decay_window_search,
                                  pool_split_from_expert_count)
 from repro.core.workload import build_board_coe
 
-from benchmarks.common import BASELINES, TASKS, TIERS, run_task
+from benchmarks.common import (BASELINES, TASKS, TIERS, perf_fields,
+                               run_task, suite_perf)
 
 
 def best_pool_bytes(board, tier, n_requests=1500):
@@ -48,10 +49,11 @@ def run(quick: bool = False) -> dict:
             for name, pol in BASELINES.items():
                 m = run_task(pol, board, n, tier)
                 row[name] = {"throughput": round(m.throughput, 2),
-                             "switches": m.switches}
+                             "switches": m.switches, **perf_fields(m)}
             m = run_task(COSERVE, board, n, tier)   # casual 75/25 split
             row["coserve_casual"] = {"throughput": round(m.throughput, 2),
-                                     "switches": m.switches}
+                                     "switches": m.switches,
+                                     **perf_fields(m)}
             if board.name not in best_cache:
                 best_cache[board.name] = best_pool_bytes(
                     board, tier, n_requests=800 if quick else 1500)
@@ -60,7 +62,8 @@ def run(quick: bool = False) -> dict:
             row["coserve_best"] = {"throughput": round(m.throughput, 2),
                                    "switches": m.switches,
                                    "pool_experts": res.n_experts,
-                                   "window": list(res.window)}
+                                   "window": list(res.window),
+                                   **perf_fields(m)}
             base = row["samba_coe"]["throughput"]
             row["speedup_vs_samba"] = round(
                 row["coserve_best"]["throughput"] / base, 2)
@@ -68,6 +71,7 @@ def run(quick: bool = False) -> dict:
             row["switch_reduction"] = round(
                 1 - row["coserve_best"]["switches"] / sw_base, 4)
             out[f"{tier_name}/{task}"] = row
+    out["perf"] = suite_perf(out)
     return out
 
 

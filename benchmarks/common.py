@@ -34,6 +34,42 @@ ABLATIONS = {
 }
 
 
+# --------------------------------------------------------------------------- #
+# simulator-performance accounting (every suite row carries these, and
+# every suite summary aggregates them via ``suite_perf``)
+# --------------------------------------------------------------------------- #
+
+def perf_fields(m: Metrics) -> Dict[str, object]:
+    """The per-run simulator-cost fields benchmark rows embed."""
+    return {"events_processed": m.events_processed,
+            "wall_s": round(m.wall_s, 4)}
+
+
+def collect_perf_rows(obj) -> list:
+    """Every dict under ``obj`` that looks like a perf-carrying row."""
+    rows = []
+    if isinstance(obj, dict):
+        if "events_processed" in obj and "wall_s" in obj:
+            rows.append(obj)
+        else:
+            for v in obj.values():
+                rows.extend(collect_perf_rows(v))
+    elif isinstance(obj, (list, tuple)):
+        for v in obj:
+            rows.extend(collect_perf_rows(v))
+    return rows
+
+
+def suite_perf(out: dict) -> Dict[str, object]:
+    """Aggregate simulator cost across a suite's rows: total events, total
+    wall time, and the headline events/sec rate (None with no timed work)."""
+    rows = collect_perf_rows(out)
+    events = sum(r["events_processed"] for r in rows)
+    wall = sum(r["wall_s"] for r in rows)
+    return {"events_processed": events, "wall_s": round(wall, 4),
+            "events_per_sec": round(events / wall) if wall > 0 else None}
+
+
 def executors_for(tier: TierSpec, policy: SystemPolicy,
                   n_gpu: Optional[int] = None, n_cpu: Optional[int] = None
                   ) -> Tuple[int, int]:

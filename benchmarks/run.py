@@ -27,6 +27,9 @@ from benchmarks import (bench_ablation, bench_batch_latency, bench_executors,
                         bench_fleet, bench_memory, bench_memory_alloc,
                         bench_online, bench_overhead, bench_placement,
                         bench_throughput, bench_kernels)
+from repro.obs import log as obslog
+
+log = obslog.get_logger("bench")
 
 
 def _roofline(quick: bool = False):
@@ -107,8 +110,16 @@ def main(argv=None):
     ap.add_argument("--only", "--suite", dest="only", default=None,
                     help=suite_help())
     ap.add_argument("--out", default="bench_results.json")
+    group = ap.add_mutually_exclusive_group()
+    group.add_argument("--quiet", action="store_true",
+                       help="warnings/errors only (suppresses per-suite "
+                            "result dumps)")
+    group.add_argument("--verbose", action="store_true",
+                       help="debug-level progress")
     args = ap.parse_args(argv)
 
+    obslog.set_level(obslog.level_from_flags(quiet=args.quiet,
+                                             verbose=args.verbose))
     validate_registry()
     keys = args.only.split(",") if args.only else list(SUITES)
     unknown = [k for k in keys if k not in SUITES]
@@ -118,7 +129,7 @@ def main(argv=None):
     for key in keys:
         t0 = time.perf_counter()
         mode = "(smoke)" if args.smoke else "(quick)" if args.quick else ""
-        print(f"\n=== {key} {mode} ===", flush=True)
+        log.info(f"\n=== {key} {mode} ===")
         try:
             fn = SUITES[key]
             kwargs = {"quick": args.quick or args.smoke}
@@ -126,16 +137,16 @@ def main(argv=None):
                 kwargs["smoke"] = True
             res = fn(**kwargs)
             results[key] = res
-            print(json.dumps(res, indent=1, default=str))
+            log.info(json.dumps(res, indent=1, default=str))
         except Exception as e:  # noqa: BLE001 — report and continue
             failures += 1
             results[key] = {"error": f"{type(e).__name__}: {e}"}
             import traceback
             traceback.print_exc()
-        print(f"[{key}] {time.perf_counter() - t0:.1f}s")
+        log.info(f"[{key}] {time.perf_counter() - t0:.1f}s")
     with open(args.out, "w") as f:
         json.dump(results, f, indent=1, default=str)
-    print(f"\n{len(keys) - failures}/{len(keys)} suites ok -> {args.out}")
+    log.info(f"\n{len(keys) - failures}/{len(keys)} suites ok -> {args.out}")
     if failures:
         sys.exit(1)
 

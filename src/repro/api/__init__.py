@@ -21,13 +21,14 @@ from repro.api.build import (POLICIES, BuildContext, build_catalog,
                              resolve_policy, resolve_tier)
 from repro.api.session import Session
 from repro.api.spec import (BoardSection, DeploymentSpec, FleetSection,
-                            MemorySection, ModelSpec, PolicySection,
-                            ServingSection, SpecError, TenantSection,
-                            WorkloadSection)
+                            MemorySection, ModelSpec, ObservabilitySection,
+                            PolicySection, ServingSection, SpecError,
+                            TenantSection, WorkloadSection)
 
 __all__ = [
     "BoardSection", "BuildContext", "DeploymentSpec", "FleetSection",
-    "MemorySection", "ModelSpec", "POLICIES", "PolicySection", "Session",
+    "MemorySection", "ModelSpec", "ObservabilitySection", "POLICIES",
+    "PolicySection", "Session",
     "ServingSection", "SpecError", "TenantSection", "WorkloadSection",
     "build_catalog", "build_context", "build_layout", "build_real_system",
     "build_system", "load_plan", "load_trace", "make_requests",

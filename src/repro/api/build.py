@@ -30,6 +30,7 @@ from repro.fleet import (FleetSpec, PlacementPlan, SearchConfig, build_fleet,
                          search_placement, trace_from_requests,
                          trace_from_usage, validate_pool_groups)
 from repro.memory import NUMA, TPU_V5E, UMA, TierSpec
+from repro.obs import NULL_TRACER, Tracer
 
 POLICIES: Dict[str, SystemPolicy] = {
     "coserve": COSERVE,
@@ -230,6 +231,7 @@ def build_real_system(n_components: int = 24, n_detection: int = 4,
                       store_root: Optional[str] = None,
                       policy: SystemPolicy = COSERVE,
                       d_hidden: int = 256,
+                      tracer: Optional[Tracer] = None,
                       ) -> Tuple[CoServeSystem, CoEModel]:
     """A small CoE of real JAX MLP experts over host+disk tiers."""
     import jax
@@ -306,7 +308,7 @@ def build_real_system(n_components: int = 24, n_detection: int = 4,
     specs = [ExecutorSpec("gpu", dev_prof, 4 * mem, "gpu")
              for _ in range(n_executors)]
     system = CoServeSystem(coe, specs, pools, policy=policy, tier=tier,
-                           engine=engine)
+                           engine=engine, tracer=tracer)
     return system, coe
 
 
@@ -326,6 +328,7 @@ class BuildContext:
     search_report: Optional[dict]           # placement == "search"
     tenants: list                           # online modes: TenantSpec list
     executor_specs: Optional[List[ExecutorSpec]] = None  # layout (sim path)
+    tracer: Tracer = NULL_TRACER            # flight recorder (observability)
 
 
 def build_context(spec: DeploymentSpec,
@@ -335,17 +338,20 @@ def build_context(spec: DeploymentSpec,
     the hook benchmark suites use to score externally-searched plans."""
     mode, engine = spec.serving.mode, spec.serving.engine
     policy = resolve_policy(spec)
+    obs = spec.observability
+    tracer = NULL_TRACER if obs.trace == "off" \
+        else Tracer(level=obs.trace, capacity=obs.buffer_events)
 
     if spec.model.kind == "tiny":
         m = spec.model
         system, coe = build_real_system(
             n_components=m.tiny_components, n_detection=m.tiny_detection,
             pool_experts=m.tiny_pool_experts, n_executors=m.tiny_executors,
-            d_hidden=m.tiny_d_hidden, policy=policy)
+            d_hidden=m.tiny_d_hidden, policy=policy, tracer=tracer)
         tenants = make_tenants(spec) if mode == "online" else []
         return BuildContext(spec=spec, system=system, coe=coe, tier=None,
                             requests=None, search_report=None,
-                            tenants=tenants)
+                            tenants=tenants, tracer=tracer)
 
     tier = resolve_tier(spec)
     coe = build_catalog(spec)
@@ -358,11 +364,12 @@ def build_context(spec: DeploymentSpec,
     system = CoServeSystem(coe, specs, pools, policy=policy, tier=tier,
                            links=spec.fleet.links,
                            replication=spec.fleet.replication,
-                           placement=placement)
+                           placement=placement, tracer=tracer)
     tenants = make_tenants(spec) if spec.workload.tenants else []
     return BuildContext(spec=spec, system=system, coe=coe, tier=tier,
                         requests=requests, search_report=search_report,
-                        tenants=tenants, executor_specs=specs)
+                        tenants=tenants, executor_specs=specs,
+                        tracer=tracer)
 
 
 def build_system(spec: DeploymentSpec,

@@ -89,6 +89,18 @@ class Session:
         loaded, or the greedy sweep) for ``fleet.placement="plan"`` reuse."""
         artifacts.save_plan(self.system.placement, path)
 
+    def save_events(self, path: str) -> dict:
+        """Export the flight recorder's ring buffer as Chrome trace JSON
+        (Perfetto-loadable; see docs/observability.md). Needs
+        ``observability.trace`` set to "summary" or "full"."""
+        tracer = self.system.tracer
+        if not tracer.enabled:
+            raise RuntimeError(
+                'no events recorded — set observability.trace to "summary" '
+                'or "full" (or pass --trace-events on the CLI)')
+        from repro.obs.export import save_events
+        return save_events(tracer, path, metrics=self._metrics)
+
     # ------------------------------------------------------------------ #
     # running
     # ------------------------------------------------------------------ #
@@ -102,11 +114,15 @@ class Session:
         self._ran = True
         mode, engine = self.spec.serving.mode, self.spec.serving.engine
         if mode == "sim":
-            return self._run_sim()
-        if mode == "real":
-            return self._run_real()
-        return self._run_online_real() if engine == "real" \
-            else self._run_online()
+            out = self._run_sim()
+        elif mode == "real":
+            out = self._run_real()
+        else:
+            out = self._run_online_real() if engine == "real" \
+                else self._run_online()
+        if self.spec.observability.trace_path:
+            self.save_events(self.spec.observability.trace_path)
+        return out
 
     # ------------------------------------------------------------------ #
     def _effective_devices(self) -> int:

@@ -28,6 +28,7 @@ from typing import Dict, Mapping, Optional, Tuple
 
 from repro.memory.policies import POLICY_NAMES
 from repro.memory.tiers import LINK_MODES
+from repro.obs.tracer import DEFAULT_CAPACITY, TRACE_LEVELS
 from repro.serve.arrivals import PROCESSES, REQUEST_CLASSES
 
 MODES = ("sim", "real", "online")
@@ -428,6 +429,29 @@ class WorkloadSection(_Section):
                "telemetry are keyed by name")
 
 
+@dataclasses.dataclass(frozen=True)
+class ObservabilitySection(_Section):
+    """Flight-recorder settings (``repro.obs``). ``trace="summary"`` records
+    memory-system events (loads/evictions/transfers/sheds/scales);
+    ``"full"`` adds per-request events (assign/sched/exec/admit), enough to
+    reconstruct per-request timelines. ``trace_path`` auto-exports the ring
+    buffer as Chrome trace JSON after ``Session.run``."""
+    trace: str = "off"               # off | summary | full
+    buffer_events: int = DEFAULT_CAPACITY   # ring-buffer capacity
+    trace_path: str = ""             # export target ("" = no auto-export)
+
+    _FIELD_TYPES = {"trace": str, "buffer_events": int, "trace_path": str}
+
+    def __post_init__(self):
+        _choice(self.trace, "observability.trace", TRACE_LEVELS)
+        _check(self.buffer_events >= 1, "observability.buffer_events",
+               "must be >= 1")
+        _check(not (self.trace_path and self.trace == "off"),
+               "observability.trace_path",
+               'set trace="summary" or "full" to record events '
+               "(trace_path has nothing to export at trace=\"off\")")
+
+
 # --------------------------------------------------------------------------- #
 # the spec
 # --------------------------------------------------------------------------- #
@@ -444,12 +468,15 @@ class DeploymentSpec(_Section):
         default_factory=ServingSection)
     workload: WorkloadSection = dataclasses.field(
         default_factory=WorkloadSection)
+    observability: ObservabilitySection = dataclasses.field(
+        default_factory=ObservabilitySection)
     seed: int = 0
     version: int = SCHEMA_VERSION
 
     _FIELD_TYPES = {"model": ModelSpec, "fleet": FleetSection,
                     "memory": MemorySection, "policy": PolicySection,
                     "serving": ServingSection, "workload": WorkloadSection,
+                    "observability": ObservabilitySection,
                     "seed": int, "version": int}
 
     # ------------------------------------------------------------------ #

@@ -24,6 +24,7 @@ from repro.core.expert_manager import ExpertManager
 from repro.core.profiler import ArchProfile, DeviceProfile
 from repro.core.scheduler import Group, max_executable_batch, split_batch
 from repro.memory import DevicePool, MemoryHierarchy
+from repro.obs import NULL_TRACER, Tracer
 
 
 @dataclasses.dataclass
@@ -42,7 +43,8 @@ class Executor:
                  device_profile: DeviceProfile, pool: DevicePool,
                  batch_bytes: int, manager: ExpertManager, engine,
                  prefetch: bool = True, protect_queued: bool = True,
-                 hierarchy: Optional[MemoryHierarchy] = None):
+                 hierarchy: Optional[MemoryHierarchy] = None,
+                 tracer: Optional[Tracer] = None):
         self.id = ex_id
         self.device = device                      # "tpu"/"gpu" | "host"/"cpu"
         self.coe = coe
@@ -54,6 +56,7 @@ class Executor:
         self.prefetch = prefetch
         self.protect_queued = protect_queued
         self.hierarchy = hierarchy                # cross-tier prefetch hook
+        self.tracer = tracer or NULL_TRACER       # flight recorder (obs)
 
         pool.users = getattr(pool, "users", [])
         pool.users.append(self)
@@ -146,9 +149,16 @@ class Executor:
                 raise MemoryError(
                     f"expert {expert_id} larger than pool {self.pool.group}")
             return None  # everything evictable is pinned/loading; retry later
+        tracer = self.tracer
         for v in victims:
             self.engine.unload(self, v)
             self.stats.evictions += 1
+            if tracer.enabled:
+                tracer.emit(now, "evict", self.id, v, pool=self.pool.group)
+        if tracer.enabled:
+            # resolved BEFORE the transfer mutates host/pool state, with the
+            # same precedence begin_device_load re-resolves: peer > host > disk
+            via = self._load_source(expert_id)
         self.pool.add(expert_id)
         # sim: contended channel latency; real: queued on the transfer thread
         lat = self.engine.load(self, expert_id, now)
@@ -158,7 +168,21 @@ class Executor:
         self.stats.load_time += lat
         if demand:
             self.stats.stall_time += lat
+        if tracer.enabled:
+            tracer.emit(now, "load", self.id, expert_id, dur=lat,
+                        demand=demand, via=via, pool=self.pool.group,
+                        bytes=self.coe.spec(expert_id).mem_bytes)
         return now + lat
+
+    def _load_source(self, expert_id: str) -> str:
+        """Which tier this load will be served from ("peer"|"host"|"disk"),
+        mirroring ``MemoryHierarchy.begin_device_load``'s resolution order."""
+        h = self.hierarchy
+        if h is None or self.device in ("host", "cpu"):
+            return "disk"
+        if h.peer_source(expert_id, self.pool.group) is not None:
+            return "peer"
+        return "host" if h.in_host(expert_id) else "disk"
 
     def finish_load(self, expert_id: str):
         assert self.load_in_flight and self.load_in_flight[0] == expert_id
@@ -190,6 +214,9 @@ class Executor:
         self.current = (eid, batch, outputs)
         self.busy_until = now + lat
         self.stats.busy_time += lat
+        if self.tracer.full:
+            self.tracer.emit(now, "exec", self.id, eid, dur=lat,
+                             requests=[r.id for r in batch], n=len(batch))
         if self.hierarchy is not None:
             # dependency-aware cross-tier prefetch: while this expert runs,
             # promote its likely downstream experts disk -> host

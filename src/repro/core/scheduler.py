@@ -23,6 +23,7 @@ import dataclasses
 from typing import Callable, List, Optional, Sequence, TYPE_CHECKING
 
 from repro.core.coe import Request
+from repro.obs import NULL_TRACER
 
 if TYPE_CHECKING:  # pragma: no cover
     from repro.core.executor import Executor
@@ -54,6 +55,7 @@ class RequestScheduler:
         self.executors = list(executors)
         self.policy = policy
         self._rr = 0
+        self.tracer = NULL_TRACER    # set by CoServeSystem when tracing
         # optional SLO hook (repro.serve): maps a request to its absolute
         # deadline. When set, new groups are placed earliest-deadline-first
         # within the queue instead of appended; None preserves paper order.
@@ -116,6 +118,10 @@ class RequestScheduler:
         else:
             ex = self._assign_makespan(req, now)
         self._arrange(ex, req)
+        if self.tracer.full:
+            self.tracer.emit(now, "sched", "scheduler", req.expert_id,
+                             request=req.id, executor=ex.id,
+                             mode=self.policy.assign)
         return ex
 
     def _assign_makespan(self, req: Request, now: float) -> "Executor":

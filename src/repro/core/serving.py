@@ -25,6 +25,7 @@ from repro.core.profiler import DeviceProfile
 from repro.core.scheduler import RequestScheduler, SchedulerPolicy
 from repro.fleet import PlacementPlan, validate_pool_groups
 from repro.memory import MemoryHierarchy, PrefetchConfig, TierSpec
+from repro.obs import NULL_TRACER, Tracer
 
 
 @dataclasses.dataclass(frozen=True)
@@ -95,6 +96,8 @@ class Metrics:
     stall_time: float = 0.0           # demand-load time executors idled on
     sched_time: float = 0.0           # wall time in scheduling (overhead, Fig.19)
     mgmt_time: float = 0.0            # wall time in expert management
+    events_processed: int = 0         # simulator heap events popped
+    wall_s: float = 0.0               # wall-clock time of the run loop
     per_executor: Dict[str, Any] = dataclasses.field(default_factory=dict)
     per_tenant: Dict[str, Any] = dataclasses.field(default_factory=dict)
     memory: Dict[str, Any] = dataclasses.field(default_factory=dict)
@@ -115,7 +118,7 @@ class CoServeSystem:
                  policy: SystemPolicy = COSERVE, tier: Optional[TierSpec] = None,
                  engine=None, links: str = "shared",
                  placement: Optional[PlacementPlan] = None,
-                 replication: int = 0):
+                 replication: int = 0, tracer: Optional[Tracer] = None):
         """``pools`` maps memory-domain name -> expert-pool bytes. Executors
         with the same ``pool_group`` share one ModelPool (one physical
         device's memory), as in the paper's multi-executor single-GPU setup.
@@ -127,6 +130,7 @@ class CoServeSystem:
         self.coe = coe
         self.policy = policy
         self.tier = tier
+        self.tracer = tracer or NULL_TRACER   # flight recorder (repro.obs)
         # spec-level guard: one pool group is one physical device's memory —
         # conflicting device kinds must not share a residency set
         self.pool_devices = validate_pool_groups(executor_specs)
@@ -141,6 +145,8 @@ class CoServeSystem:
                          if self.pool_devices.get(g) not in ("host", "cpu")])
         self.host_cache = self.hierarchy.host          # seed-compat alias
         self.pools = self.hierarchy.pools
+        # channel-leg events (xfer) are emitted where the legs are issued
+        self.hierarchy.transfer.tracer = self.tracer
         self.engine = engine or SimEngine(coe, tier, hierarchy=self.hierarchy)
         bind = getattr(self.engine, "bind_topology", None)
         if bind is not None:     # real backend: one transfer thread per link
@@ -156,11 +162,12 @@ class CoServeSystem:
                 batch_bytes=spec.batch_bytes, manager=self.manager,
                 engine=self.engine, prefetch=policy.prefetch,
                 protect_queued=policy.protect_queued,
-                hierarchy=self.hierarchy))
+                hierarchy=self.hierarchy, tracer=self.tracer))
         self.scheduler = RequestScheduler(
             self.executors,
             SchedulerPolicy(assign=policy.assign, arrange=policy.arrange,
                             lookahead=policy.lookahead))
+        self.scheduler.tracer = self.tracer
         self.sched_time = 0.0
         # observed per-expert load (assignment counts): the online signal
         # placement rebalancing and the "observed" eviction policy use
@@ -207,6 +214,12 @@ class CoServeSystem:
         self.sched_time += time.perf_counter() - t0
         self.expert_load[req.expert_id] = \
             self.expert_load.get(req.expert_id, 0) + 1
+        if self.tracer.full:
+            # queue-arrival record: timeline reconstruction joins this with
+            # exec batch membership to recover per-stage queue waits
+            self.tracer.emit(now, "assign", "scheduler", req.expert_id,
+                             request=req.id, executor=ex.id,
+                             tenant=req.tenant, parent=req.parent_id)
         # queue-arrival prefetch trigger: the request's expert just joined a
         # queue, so its likely downstream experts can start promoting now
         # (inert unless policy.prefetch_trigger == "queue")
@@ -275,7 +288,7 @@ class CoServeSystem:
             manager=self.manager, engine=self.engine,
             prefetch=self.policy.prefetch,
             protect_queued=self.policy.protect_queued,
-            hierarchy=self.hierarchy)
+            hierarchy=self.hierarchy, tracer=self.tracer)
         self.executors.append(ex)
         self.scheduler.executors = self.live_executors()
         return ex

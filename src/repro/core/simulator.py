@@ -20,6 +20,7 @@ from __future__ import annotations
 
 import heapq
 import itertools
+import time
 from typing import Any, Callable, Dict, Iterable, Iterator, List, Optional, \
     Sequence, Tuple
 
@@ -97,9 +98,12 @@ class Simulation:
     # ------------------------------------------------------------------ #
     def run(self) -> Metrics:
         sys = self.system
+        t0 = time.perf_counter()
+        n_events = 0
         while self.heap:
             t, _, kind, payload = heapq.heappop(self.heap)
             self.now = t
+            n_events += 1
             if kind != TICK:
                 self._work_events -= 1
             if kind == ARRIVAL:
@@ -159,7 +163,10 @@ class Simulation:
                 payload(self)
         makespan = max((r.done_time or 0.0) for r in self.completed) \
             if self.completed else 0.0
-        return sys.collect_metrics(self.completed, makespan)
+        m = sys.collect_metrics(self.completed, makespan)
+        m.events_processed = n_events
+        m.wall_s = time.perf_counter() - t0
+        return m
 
     # ------------------------------------------------------------------ #
     def kick(self, ex: Executor, now: float):

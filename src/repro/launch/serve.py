@@ -34,6 +34,7 @@ Config artifacts (docs/configuration.md has the full workflow):
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import warnings
 
@@ -45,6 +46,9 @@ from repro.api.spec import (FleetSection, MemorySection, ModelSpec,
                             PolicySection, ServingSection, TenantSection,
                             WorkloadSection)
 from repro.memory import POLICY_NAMES
+from repro.obs import log as obslog
+
+log = obslog.get_logger("serve")
 
 
 # --------------------------------------------------------------------------- #
@@ -252,6 +256,16 @@ def build_parser() -> argparse.ArgumentParser:
                          "traffic as a WorkloadTrace artifact")
     ap.add_argument("--save-plan", default=None, metavar="PATH",
                     help="save the placement plan this run served")
+    ap.add_argument("--trace-events", default=None, metavar="PATH",
+                    help="record a full flight-recorder trace and save it "
+                         "as Chrome trace JSON (Perfetto-loadable; analyze "
+                         "with tools/trace_report.py) — shorthand for "
+                         "observability.trace='full' + trace_path")
+    ap.add_argument("--quiet", action="store_true",
+                    help="suppress informational output (warnings/errors "
+                         "and --dump-config '-' data still print)")
+    ap.add_argument("--verbose", action="store_true",
+                    help="debug-level progress output")
     ap.add_argument("--out", default=None)
     # --- online-mode flags (repro.serve) ------------------------------- #
     ap.add_argument("--engine", default="sim", choices=["sim", "real"],
@@ -303,18 +317,33 @@ def main(argv=None):
     ap = build_parser()
     args = ap.parse_args(argv)
     try:
+        obslog.set_level(obslog.level_from_flags(args.quiet, args.verbose))
+    except ValueError as e:
+        raise SystemExit(str(e))
+    try:
         spec = _resolve_spec(args, ap)
     except SpecError as e:
         raise SystemExit(str(e))
+    if args.trace_events:
+        # shorthand: record at "full" unless the spec already opted into a
+        # level, and auto-export to the given path after the run
+        obs = dataclasses.replace(
+            spec.observability,
+            trace=spec.observability.trace
+            if spec.observability.trace != "off" else "full",
+            trace_path=args.trace_events)
+        spec = dataclasses.replace(spec, observability=obs)
 
     if args.dump_config:
         if args.dump_config == "-":
             print(json.dumps(spec.to_dict(), indent=2, sort_keys=True))
         else:
             spec.save(args.dump_config)
-            print(f"wrote {args.dump_config}")
+            log.info(f"wrote {args.dump_config}")
         return spec.to_dict()
 
+    log.debug(f"mode={spec.serving.mode} engine={spec.serving.engine} "
+              f"policy={spec.policy.name} requests={spec.workload.requests}")
     try:
         sess = Session(spec)
     except (SpecError, ValueError) as e:
@@ -324,7 +353,9 @@ def main(argv=None):
         sess.save_trace(args.dump_trace)
     if args.save_plan:
         sess.save_plan(args.save_plan)
-    print(json.dumps(result, indent=2))
+    if args.trace_events:
+        log.debug(f"wrote flight-recorder trace {args.trace_events}")
+    log.info(json.dumps(result, indent=2))
     if args.out:
         with open(args.out, "w") as f:
             json.dump(result, f, indent=2)

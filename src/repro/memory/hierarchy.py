@@ -140,7 +140,8 @@ class MemoryHierarchy:
         materialization path ``PlacementPlan.rebalance`` counts on."""
         mem = self.coe.spec(expert_id).mem_bytes
         if self.peer_source(expert_id, group) is not None:
-            tr = self.transfer.begin_peer_copy(now, mem, group)
+            tr = self.transfer.begin_peer_copy(now, mem, group,
+                                               label=expert_id)
             # a promotion this copy strands in host DRAM was never consumed
             self.prefetcher.note_device_load(expert_id, served_from_host=False)
             return tr
@@ -148,7 +149,7 @@ class MemoryHierarchy:
         ready_at = self.host.ready_time(expert_id) if in_host else 0.0
         tr = self.transfer.begin_device_load(now, mem, in_host_cache=in_host,
                                              host_ready_at=ready_at,
-                                             group=group)
+                                             group=group, label=expert_id)
         self.prefetcher.note_device_load(expert_id, served_from_host=in_host)
         if self.host is not None:
             if in_host:
@@ -163,7 +164,7 @@ class MemoryHierarchy:
     def begin_host_load(self, expert_id: str, now: float) -> Transfer:
         """Disk -> host DRAM demand load (CPU executors run from DRAM)."""
         tr = self.transfer.begin_host_load(
-            now, self.coe.spec(expert_id).mem_bytes)
+            now, self.coe.spec(expert_id).mem_bytes, label=expert_id)
         if self.host is not None:
             self.prefetcher.note_host_evictions(
                 self.host.insert(expert_id, ready_at=tr.done))

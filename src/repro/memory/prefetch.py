@@ -114,7 +114,7 @@ class CrossTierPrefetcher:
             mem = self.coe.spec(eid).mem_bytes
             if mem > h.host.capacity:
                 continue
-            leg = h.transfer.begin_host_promotion(now, mem)
+            leg = h.transfer.begin_host_promotion(now, mem, label=eid)
             evicted = h.host.insert(eid, ready_at=leg.done)
             # evicting settled host residents for a speculation is fine: the
             # policy already ranked them colder than this promotion's weight

@@ -22,8 +22,9 @@ from __future__ import annotations
 
 import dataclasses
 
-from repro.memory.channels import Transfer
+from repro.memory.channels import Transfer, TransferChannel
 from repro.memory.tiers import TierSpec, TierTopology
+from repro.obs.tracer import NULL_TRACER
 
 
 def predicted_load_latency(spec: TierSpec, mem_bytes: int,
@@ -55,6 +56,15 @@ class TransferEngine:
     def __init__(self, topology: TierTopology):
         self.topology = topology
         self.spec = topology.spec
+        self.tracer = NULL_TRACER    # set by CoServeSystem when tracing
+
+    def _trace(self, ch: TransferChannel, leg: Transfer, mem_bytes: int,
+               op: str, leg_name: str, label: str):
+        """One ``xfer`` event per channel leg: the channel is the track,
+        ``wait`` is the leg's time queued behind in-flight traffic."""
+        self.tracer.emit(leg.start, "xfer", ch.name, label or op,
+                         dur=leg.done - leg.start, op=op, leg=leg_name,
+                         bytes=mem_bytes, wait=leg.wait)
 
     # --- predictions (uncontended, side-effect free) -------------------- #
     def predict(self, mem_bytes: int, in_host_cache: bool) -> float:
@@ -70,7 +80,7 @@ class TransferEngine:
     def begin_device_load(self, now: float, mem_bytes: int,
                           in_host_cache: bool,
                           host_ready_at: float = 0.0,
-                          group: str = "") -> Transfer:
+                          group: str = "", label: str = "") -> Transfer:
         """Start moving an expert into device ``group``'s memory at ``now``.
 
         ``host_ready_at`` > now means a disk->host promotion of this expert
@@ -80,42 +90,68 @@ class TransferEngine:
         always shared.
         """
         t = self.spec
+        traced = self.tracer.enabled
         if t.unified:
             # single unified-memory link: the whole load rides the SSD channel
-            return self.topology.disk_channel.begin(
+            ch = self.topology.disk_channel
+            leg = ch.begin(
                 now, mem_bytes, overhead=t.disk_overhead + t.host_overhead)
+            if traced:
+                self._trace(ch, leg, mem_bytes, "device_load", "unified",
+                            label)
+            return leg
         pcie = self.topology.pcie_for(group)
         if in_host_cache:
             leg = pcie.begin(
                 max(now, host_ready_at), mem_bytes, overhead=t.host_overhead)
+            if traced:
+                self._trace(pcie, leg, mem_bytes, "device_load", "pcie",
+                            label)
             return Transfer(issued=now, start=leg.start, done=leg.done)
         # disk -> host -> device: the SSD leg then the PCIe leg, each
         # queueing on its own shared link
-        disk_leg = self.topology.disk_channel.begin(
+        disk_ch = self.topology.disk_channel
+        disk_leg = disk_ch.begin(
             now, mem_bytes, overhead=t.disk_overhead)
         pcie_leg = pcie.begin(
             disk_leg.done, mem_bytes, overhead=t.host_overhead)
+        if traced:
+            self._trace(disk_ch, disk_leg, mem_bytes, "device_load", "disk",
+                        label)
+            self._trace(pcie, pcie_leg, mem_bytes, "device_load", "pcie",
+                        label)
         return Transfer(issued=now, start=disk_leg.start, done=pcie_leg.done,
                         host_landed=disk_leg.done)
 
-    def begin_host_load(self, now: float, mem_bytes: int) -> Transfer:
+    def begin_host_load(self, now: float, mem_bytes: int,
+                        label: str = "") -> Transfer:
         """Disk -> host DRAM on demand (CPU executors run from DRAM)."""
-        return self.topology.disk_channel.begin(
-            now, mem_bytes, overhead=self.spec.disk_overhead)
+        ch = self.topology.disk_channel
+        leg = ch.begin(now, mem_bytes, overhead=self.spec.disk_overhead)
+        if self.tracer.enabled:
+            self._trace(ch, leg, mem_bytes, "host_load", "disk", label)
+        return leg
 
-    def begin_host_promotion(self, now: float, mem_bytes: int) -> Transfer:
+    def begin_host_promotion(self, now: float, mem_bytes: int,
+                             label: str = "") -> Transfer:
         """Speculative disk -> host promotion (cross-tier prefetch)."""
-        return self.topology.disk_channel.begin(
-            now, mem_bytes, overhead=self.spec.disk_overhead)
+        ch = self.topology.disk_channel
+        leg = ch.begin(now, mem_bytes, overhead=self.spec.disk_overhead)
+        if self.tracer.enabled:
+            self._trace(ch, leg, mem_bytes, "promotion", "disk", label)
+        return leg
 
     def begin_peer_copy(self, now: float, mem_bytes: int,
-                        group: str) -> Transfer:
+                        group: str, label: str = "") -> Transfer:
         """Device -> device replica copy into ``group``'s pool over the peer
         fabric: rides (and queues on) the destination's peer ingress link
         only — neither the SSD fan-in nor any PCIe channel is touched, which
         is the whole point of materializing replicas pool -> pool."""
-        return self.topology.peer_for(group).begin(
-            now, mem_bytes, overhead=self.spec.peer_overhead)
+        ch = self.topology.peer_for(group)
+        leg = ch.begin(now, mem_bytes, overhead=self.spec.peer_overhead)
+        if self.tracer.enabled:
+            self._trace(ch, leg, mem_bytes, "peer_copy", "peer", label)
+        return leg
 
     # ------------------------------------------------------------------ #
     @staticmethod

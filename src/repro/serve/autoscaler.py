@@ -143,6 +143,14 @@ class Autoscaler:
             self.placement_loads += 1
             sim.push(done, LOAD_DONE, (ex, eid))
 
+    def _record(self, sim, ev: ScaleEvent):
+        self.events.append(ev)
+        tracer = sim.system.tracer
+        if tracer.enabled:
+            tracer.emit(ev.t, "scale", "autoscaler", ev.action,
+                        executor=ev.executor_id, reason=ev.reason,
+                        n_executors=ev.n_executors)
+
     # ------------------------------------------------------------------ #
     def _window_violation_rate(self) -> float:
         """Violation rate since the previous *actionable* control step (not
@@ -181,7 +189,7 @@ class Autoscaler:
             reason = (f"queue_pressure={pressure:.1f}"
                       if pressure > cfg.up_queue_per_executor
                       else f"violation_rate={vrate:.3f}")
-            self.events.append(ScaleEvent(now, "up", ex.id, reason, n + 1))
+            self._record(sim, ScaleEvent(now, "up", ex.id, reason, n + 1))
             self._rebalance_placement(sim, now)
             return
 
@@ -201,7 +209,7 @@ class Autoscaler:
             self._rebalance_batch(sim, victim_group)
             self._scaled_ids.remove(victim.id)
             self._last_action_t = now
-            self.events.append(ScaleEvent(
+            self._record(sim, ScaleEvent(
                 now, "down", victim.id,
                 f"queue_pressure={pressure:.1f}", n - 1))
             self._rebalance_placement(sim, now)

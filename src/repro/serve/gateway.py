@@ -113,12 +113,20 @@ class OnlineGateway:
         self._ran = True
         sim = self.sim
         hub = self.telemetry
+        tracer = self.system.tracer
 
         def on_admit(s: Simulation, req: Request) -> bool:
             hub.on_arrival(req, s.now)
             if self.admission is not None and not self.admission(s, req):
                 hub.on_shed(req, s.now)
+                if tracer.enabled:
+                    tracer.emit(s.now, "shed", "gateway", req.tenant,
+                                request=req.id,
+                                policy=self.admission.config.policy)
                 return False
+            if tracer.full:
+                tracer.emit(s.now, "admit", "gateway", req.tenant,
+                            request=req.id, expert=req.expert_id)
             return True
 
         def on_complete(s: Simulation, req: Request, now: float):

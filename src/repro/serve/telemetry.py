@@ -111,6 +111,10 @@ class LatencyTracker:
         for e in self._est:
             e.add(latency)
 
+    # a tail quantile estimated from fewer than this many tail samples
+    # (count * (1-q)) is marked low-confidence in snapshots
+    MIN_TAIL_SAMPLES = 10
+
     def snapshot(self) -> Dict[str, float]:
         # enforce quantile monotonicity (independent P2 estimators can cross
         # by estimation error on small samples): running max over p50<=p95<=p99
@@ -122,7 +126,10 @@ class LatencyTracker:
         return {"count": self.count,
                 "mean": self.total / self.count if self.count else 0.0,
                 "max": self.max,
-                "p50": vals[0], "p95": vals[1], "p99": vals[2]}
+                "p50": vals[0], "p95": vals[1], "p99": vals[2],
+                "low_confidence": [
+                    f"p{int(q * 100)}" for q in self.QS
+                    if self.count * (1.0 - q) < self.MIN_TAIL_SAMPLES]}
 
 
 class WindowRate:

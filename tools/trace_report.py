@@ -1,0 +1,164 @@
+#!/usr/bin/env python
+"""Stall-attribution report over a saved flight-recorder trace.
+
+Reads the Chrome trace JSON that ``Session.save_events`` / the serve CLI's
+``--trace-events`` wrote (docs/observability.md) and answers the operator
+questions the raw Perfetto view doesn't aggregate:
+
+  * which experts cost the most demand-stall time (and through which tier),
+  * which transfer links requests queued behind (per-channel wait),
+  * what the scheduler decided (assignment-mode counts),
+
+then reconciles the event-derived stall total against the run's embedded
+``Metrics.stall_time`` — the two are independent accountings of the same
+loads, so a mismatch beyond rounding means dropped events or a tracer bug.
+
+  PYTHONPATH=src python tools/trace_report.py trace.json
+  PYTHONPATH=src python tools/trace_report.py trace.json --strict --top 5
+
+``--strict`` exits non-zero when the stall reconciliation is off by more
+than 1% (skipped, with a warning, when the ring buffer dropped events —
+a truncated buffer cannot account for every load).
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent
+                       / "src"))
+
+from repro.obs.export import load_chrome_trace  # noqa: E402
+
+US = 1e6    # trace timestamps are microseconds
+
+
+def _rows(title: str, header: tuple, rows: list):
+    print(f"\n{title}")
+    if not rows:
+        print("  (no events)")
+        return
+    widths = [max(len(str(h)), max(len(str(r[i])) for r in rows))
+              for i, h in enumerate(header)]
+    fmt = "  " + "  ".join(f"{{:<{w}}}" for w in widths)
+    print(fmt.format(*header))
+    for r in rows:
+        print(fmt.format(*r))
+
+
+def stall_by_expert(events: list) -> dict:
+    """expert -> {stall_s, loads, via counts} from demand-load slices."""
+    out: dict = {}
+    for e in events:
+        if e.get("cat") != "load":
+            continue
+        args = e.get("args", {})
+        rec = out.setdefault(args.get("expert", e["name"]),
+                             {"stall_s": 0.0, "loads": 0, "via": {}})
+        rec["stall_s"] += e.get("dur", 0) / US
+        rec["loads"] += 1
+        via = args.get("via", "?")
+        rec["via"][via] = rec["via"].get(via, 0) + 1
+    return out
+
+
+def wait_by_link(events: list) -> dict:
+    """channel -> {wait_s, busy_s, transfers} from xfer slices."""
+    out: dict = {}
+    for e in events:
+        if e.get("cat") != "xfer":
+            continue
+        args = e.get("args", {})
+        rec = out.setdefault(args.get("channel", "?"),
+                             {"wait_s": 0.0, "busy_s": 0.0, "transfers": 0})
+        rec["wait_s"] += float(args.get("wait", 0.0))
+        rec["busy_s"] += e.get("dur", 0) / US
+        rec["transfers"] += 1
+    return out
+
+
+def sched_decisions(events: list) -> dict:
+    """(kind, mode/name) decision counts from the control track."""
+    out: dict = {}
+    for e in events:
+        cat = e.get("cat")
+        if cat == "sched":
+            key = f"sched[{e.get('args', {}).get('mode', '?')}]"
+        elif cat in ("shed", "scale", "admit"):
+            key = e["name"]      # e.g. "scale:up", "shed:<tenant>"
+        else:
+            continue
+        out[key] = out.get(key, 0) + 1
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("trace", help="Chrome trace JSON from --trace-events / "
+                                  "Session.save_events")
+    ap.add_argument("--top", type=int, default=10,
+                    help="rows per table (default 10)")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 when event-derived stall disagrees with "
+                         "the embedded Metrics.stall_time by > 1%%")
+    args = ap.parse_args(argv)
+
+    doc = load_chrome_trace(args.trace)
+    events = doc["traceEvents"]
+    other = doc.get("otherData", {})
+    metrics = other.get("metrics", {})
+    dropped = other.get("tracer", {}).get("dropped", 0)
+
+    print(f"{args.trace}: {len(events)} trace events "
+          f"(tracer level={other.get('tracer', {}).get('level', '?')}, "
+          f"dropped={dropped})")
+    if metrics:
+        print(f"run: completed={metrics.get('completed')} "
+              f"switches={metrics.get('switches')} "
+              f"makespan={metrics.get('makespan_s', 0):.3f}s "
+              f"avg_latency={metrics.get('avg_latency_s', 0):.4f}s")
+
+    experts = sorted(stall_by_expert(events).items(),
+                     key=lambda kv: -kv[1]["stall_s"])
+    _rows(f"top experts by demand-stall time (of {len(experts)})",
+          ("expert", "stall_s", "loads", "via"),
+          [(eid, f"{r['stall_s']:.4f}", r["loads"],
+            ",".join(f"{v}x{n}" for v, n in sorted(r["via"].items())))
+           for eid, r in experts[:args.top]])
+
+    links = sorted(wait_by_link(events).items(),
+                   key=lambda kv: -kv[1]["wait_s"])
+    _rows("links by queued-transfer wait",
+          ("channel", "wait_s", "busy_s", "transfers"),
+          [(name, f"{r['wait_s']:.4f}", f"{r['busy_s']:.4f}", r["transfers"])
+           for name, r in links[:args.top]])
+
+    decisions = sorted(sched_decisions(events).items(),
+                       key=lambda kv: -kv[1])
+    _rows("scheduler / control decisions", ("decision", "count"),
+          [(k, n) for k, n in decisions[:args.top]])
+
+    # --- reconciliation ------------------------------------------------- #
+    stall_events = sum(r["stall_s"] for _, r in experts)
+    stall_metrics = metrics.get("stall_time_s")
+    if stall_metrics is None:
+        print("\nno embedded metrics to reconcile against")
+        return 0
+    delta = abs(stall_events - stall_metrics)
+    rel = delta / stall_metrics if stall_metrics else (1.0 if delta else 0.0)
+    print(f"\nstall reconciliation: events={stall_events:.4f}s "
+          f"metrics={stall_metrics:.4f}s (delta {rel:.2%})")
+    if rel > 0.01:
+        if dropped:
+            print(f"warning: ring buffer dropped {dropped} events — "
+                  "stall accounting is incomplete; not failing --strict")
+            return 0
+        print("MISMATCH: event-derived stall differs from Metrics.stall_time"
+              " by more than 1%")
+        return 1 if args.strict else 0
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
