@@ -26,7 +26,7 @@ import time
 from benchmarks import (bench_ablation, bench_batch_latency, bench_executors,
                         bench_fleet, bench_memory, bench_memory_alloc,
                         bench_online, bench_overhead, bench_placement,
-                        bench_throughput, bench_kernels)
+                        bench_simperf, bench_throughput, bench_kernels)
 from repro.obs import log as obslog
 
 log = obslog.get_logger("bench")
@@ -68,6 +68,9 @@ SUITES_INFO = {
     "placement": (bench_placement.run,
                   "cost-model placement search vs greedy sweep + peer-link "
                   "replica materialization"),
+    "simperf": (bench_simperf.run,
+                "simulator wall-clock performance: fast path vs naive "
+                "reference at 4-128 devices + search-proposal rates"),
 }
 
 SUITES = {key: runner for key, (runner, _) in SUITES_INFO.items()}
@@ -101,6 +104,37 @@ def suite_help() -> str:
     return "comma-separated suite keys: " + ", ".join(SUITES)
 
 
+def _profiled(key: str, fn, kwargs: dict):
+    """Run one suite under cProfile: dump ``BENCH_<key>.prof`` (pstats
+    format — load with ``pstats.Stats`` or snakeviz) and log the top-10
+    cumulative-time functions so a hot-path regression is visible in the
+    CI log without downloading the artifact."""
+    import cProfile
+    import pstats
+
+    prof = cProfile.Profile()
+    prof.enable()
+    try:
+        res = fn(**kwargs)
+    finally:
+        prof.disable()
+    path = f"BENCH_{key}.prof"
+    prof.dump_stats(path)
+    stats = pstats.Stats(prof)
+    rows = sorted(stats.stats.items(),
+                  key=lambda kv: kv[1][3], reverse=True)  # ct = cumulative
+    top = []
+    for (fname, line, func), (cc, nc, tt, ct, _) in rows:
+        if func.startswith("<") and fname == "~":
+            continue                      # builtins: noise at the top level
+        short = f"{os.path.basename(fname)}:{line}({func})"
+        top.append(f"{short} {ct:.3f}s/{nc}x")
+        if len(top) == 10:
+            break
+    log.info(f"[{key}] profile -> {path}; top cumulative: " + "; ".join(top))
+    return res
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
@@ -109,6 +143,10 @@ def main(argv=None):
                          "has no dedicated smoke size) — the CI bench gate")
     ap.add_argument("--only", "--suite", dest="only", default=None,
                     help=suite_help())
+    ap.add_argument("--profile", action="store_true",
+                    help="run each suite under cProfile: dumps "
+                         "BENCH_<key>.prof and logs the top-10 "
+                         "cumulative-time functions")
     ap.add_argument("--out", default="bench_results.json")
     group = ap.add_mutually_exclusive_group()
     group.add_argument("--quiet", action="store_true",
@@ -135,7 +173,10 @@ def main(argv=None):
             kwargs = {"quick": args.quick or args.smoke}
             if args.smoke and "smoke" in inspect.signature(fn).parameters:
                 kwargs["smoke"] = True
-            res = fn(**kwargs)
+            if args.profile:
+                res = _profiled(key, fn, kwargs)
+            else:
+                res = fn(**kwargs)
             results[key] = res
             log.info(json.dumps(res, indent=1, default=str))
         except Exception as e:  # noqa: BLE001 — report and continue

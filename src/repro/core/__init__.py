@@ -18,6 +18,8 @@ from repro.core.serving import (COSERVE, COSERVE_EM, COSERVE_EM_RA,
                                 Metrics, SystemPolicy, latency_percentiles)
 from repro.core.simulator import Simulation, run_real
 from repro.core.engines import HostStore, RealEngine, SimEngine
+from repro.core.reference import (ReferenceScheduler, apply_reference,
+                                  reference_pending_time)
 from repro.memory import (MemoryHierarchy, PrefetchConfig, Residency,
                           TransferChannel, TransferEngine)
 
@@ -33,4 +35,5 @@ __all__ = [
     "SystemPolicy", "Simulation", "run_real", "HostStore", "RealEngine",
     "SimEngine", "latency_percentiles", "MemoryHierarchy", "PrefetchConfig",
     "Residency", "TransferChannel", "TransferEngine",
+    "ReferenceScheduler", "apply_reference", "reference_pending_time",
 ]

@@ -83,6 +83,11 @@ class CoEModel:
         if len(self.experts) != len(experts):
             raise ValueError("duplicate expert ids")
         self.routing = routing
+        # cached usage-descending catalog order (``by_usage`` is called per
+        # placement proposal and per replay warm-up — the sort dominated
+        # search profiles); None until first use, dropped on catalog mutation
+        self._by_usage_cache: Optional[List[ExpertSpec]] = None
+        self._by_usage_len = -1
         # downstream map: upstream expert -> experts that depend on it
         self.downstream: Dict[str, List[str]] = {e.id: [] for e in experts}
         for e in experts:
@@ -160,5 +165,20 @@ class CoEModel:
 
     # sorted by usage probability, descending (init placement, paper §4.1)
     def by_usage(self) -> List[ExpertSpec]:
-        return sorted(self.experts.values(),
-                      key=lambda e: (-e.usage_prob, e.id))
+        """Cached: specs are immutable dataclass copies and the catalog dict
+        is fixed at construction, so the sort is computed once. A changed
+        catalog *size* invalidates automatically; code that swaps specs
+        in-place at the same size must call ``invalidate_catalog_cache``.
+        Returns a fresh list so callers may mutate their copy."""
+        if self._by_usage_cache is None \
+                or self._by_usage_len != len(self.experts):
+            self._by_usage_cache = sorted(
+                self.experts.values(), key=lambda e: (-e.usage_prob, e.id))
+            self._by_usage_len = len(self.experts)
+        return list(self._by_usage_cache)
+
+    def invalidate_catalog_cache(self):
+        """Drop derived catalog order after an in-place ``experts`` mutation
+        that kept the size unchanged (tests / notebooks)."""
+        self._by_usage_cache = None
+        self._by_usage_len = -1

@@ -17,14 +17,69 @@ from __future__ import annotations
 
 import dataclasses
 import time as _time
-from typing import Any, List, Optional, Set, Tuple
+from typing import Any, Dict, List, Optional, Set, Tuple
 
 from repro.core.coe import CoEModel, Request
 from repro.core.expert_manager import ExpertManager
 from repro.core.profiler import ArchProfile, DeviceProfile
-from repro.core.scheduler import Group, max_executable_batch, split_batch
+from repro.core.scheduler import (Group, bump_queue, max_executable_batch,
+                                  split_batch)
 from repro.memory import DevicePool, MemoryHierarchy
 from repro.obs import NULL_TRACER, Tracer
+
+
+class TrackedQueue(list):
+    """Executor queue (list of Groups) with a version stamp: every
+    structural mutation bumps ``version`` so cached per-queue aggregates
+    (pending work, queued-expert counts) invalidate even when callers —
+    work stealing, fault injection, tests — mutate the list directly.
+    Group-size changes (requests joining an existing Group, batch splits)
+    don't go through list methods; those two call sites call ``bump()``."""
+
+    __slots__ = ("version",)
+
+    def __init__(self, iterable=()):
+        super().__init__(iterable)
+        self.version = 0
+
+    def bump(self):
+        self.version += 1
+
+    def append(self, x):
+        self.version += 1
+        super().append(x)
+
+    def insert(self, i, x):
+        self.version += 1
+        super().insert(i, x)
+
+    def pop(self, i=-1):
+        self.version += 1
+        return super().pop(i)
+
+    def remove(self, x):
+        self.version += 1
+        super().remove(x)
+
+    def clear(self):
+        self.version += 1
+        super().clear()
+
+    def extend(self, it):
+        self.version += 1
+        super().extend(it)
+
+    def __delitem__(self, i):
+        self.version += 1
+        super().__delitem__(i)
+
+    def __setitem__(self, i, v):
+        self.version += 1
+        super().__setitem__(i, v)
+
+    def __iadd__(self, other):
+        self.version += 1
+        return super().__iadd__(other)
 
 
 @dataclasses.dataclass
@@ -61,12 +116,19 @@ class Executor:
         pool.users = getattr(pool, "users", [])
         pool.users.append(self)
 
-        self.queue: List[Group] = []
+        self.queue: TrackedQueue = TrackedQueue()
         self.busy_until: float = 0.0
         self.current: Optional[Tuple[str, List[Request], Any]] = None
         self.load_in_flight: Optional[Tuple[str, float]] = None  # (expert, done)
         self.stats = ExecStats()
         self.alive = True
+        # fast-path caches (PR 7): queue-work seconds validated against
+        # (queue version, residency epoch); queued-group counts validated
+        # against queue version alone. ``use_pending_cache = False`` restores
+        # naive per-call recomputation (the retained reference path).
+        self.use_pending_cache = True
+        self._work_cache: Tuple[int, int, float] = (-1, -1, 0.0)
+        self._groups_cache: Tuple[int, Dict[str, int]] = (-1, {})
 
     # ------------------------------------------------------------------ #
     # profile / latency helpers
@@ -95,7 +157,34 @@ class Executor:
     # pending time (paper §4.2: queue total inference-time prediction)
     # ------------------------------------------------------------------ #
     def pending_time(self, now: float) -> float:
-        total = max(0.0, self.busy_until - now)
+        return max(0.0, self.busy_until - now) + self.queue_work()
+
+    def _residency_epoch(self):
+        """The shared residency epoch that covers everything ``queue_work``
+        reads beyond the queue itself (pool membership for the seen-set,
+        peer/host residency inside ``load_latency``) — or None when caching
+        would be unsound: no hierarchy, an engine priced off different state
+        (RealEngine reads its own host store), or caching disabled."""
+        h = self.hierarchy
+        if self.use_pending_cache and h is not None \
+                and getattr(self.engine, "hierarchy", None) is h:
+            return h.epoch
+        return None
+
+    def queue_work(self) -> float:
+        """Total inference-time prediction of the queue (paper §4.2): per
+        group the linear exec model, plus one load per distinct non-resident
+        expert. This is the ``now``-independent part of ``pending_time``,
+        cached against (queue version, residency epoch) so the scheduler's
+        per-arrival makespan argmin is O(executors), not O(executors x
+        queue). The recompute below IS the naive loop — summation order is
+        preserved, so cached and uncached values are bit-identical."""
+        epoch = self._residency_epoch()
+        if epoch is not None:
+            qv, en, work = self._work_cache
+            if qv == self.queue.version and en == epoch.n:
+                return work
+        total = 0.0
         seen: Set[str] = set(self.pool.resident)
         for g in self.queue:
             prof = self.profile(self.coe.spec(g.expert_id).arch)
@@ -103,7 +192,23 @@ class Executor:
                 total += self.load_latency(g.expert_id)
                 seen.add(g.expert_id)
             total += prof.exec_latency(len(g))
+        if epoch is not None:
+            self._work_cache = (self.queue.version, epoch.n, total)
         return total
+
+    def queued_groups(self) -> Dict[str, int]:
+        """Per-expert queued-group counts, rebuilt lazily on queue mutation —
+        the scheduler's O(1) ``queued_same`` probe and ``reorder_head``'s
+        queued-expert index."""
+        qv, counts = self._groups_cache
+        if qv == getattr(self.queue, "version", -2):
+            return counts
+        counts = {}
+        for g in self.queue:
+            counts[g.expert_id] = counts.get(g.expert_id, 0) + 1
+        if isinstance(self.queue, TrackedQueue):
+            self._groups_cache = (self.queue.version, counts)
+        return counts
 
     def queued_requests(self) -> int:
         return sum(len(g) for g in self.queue)
@@ -208,6 +313,8 @@ class Executor:
         batch = split_batch(head, self.max_batch_for(eid))
         if not head.requests:
             self.queue.pop(0)
+        else:
+            bump_queue(self.queue)   # head group shrank in place
         outputs, lat = self.engine.execute(self, eid, batch)
         self.pool.pin(eid)
         self.pool.touch(eid)

@@ -40,6 +40,17 @@ class Group:
         return len(self.requests)
 
 
+def bump_queue(queue) -> None:
+    """Record an in-place Group mutation (requests joined or split) on an
+    executor queue. ``TrackedQueue`` versions every *list* mutation itself,
+    but a Group growing or shrinking in place changes the queue's predicted
+    work without touching the list — the two sites that do that call this.
+    No-op for plain lists (tests sometimes swap one in)."""
+    bump = getattr(queue, "bump", None)
+    if bump is not None:
+        bump()
+
+
 @dataclasses.dataclass(frozen=True)
 class SchedulerPolicy:
     assign: str = "makespan"     # makespan | round_robin | single
@@ -68,7 +79,9 @@ class RequestScheduler:
                            now: float = 0.0) -> float:
         spec = ex.coe.spec(req.expert_id)
         prof = ex.profile(spec.arch)
-        queued_same = any(g.expert_id == req.expert_id for g in ex.queue)
+        # O(1) queued-same probe against the executor's lazily-rebuilt
+        # queued-group index (the naive reference rescans the whole queue)
+        queued_same = req.expert_id in ex.queued_groups()
         if queued_same and self.policy.arrange:
             exec_lat = prof.k                      # joins an existing batch
         else:
@@ -125,14 +138,52 @@ class RequestScheduler:
         return ex
 
     def _assign_makespan(self, req: Request, now: float) -> "Executor":
+        """Argmin over executors of (makespan if assigned here, added
+        latency, index). The naive reference recomputes the max over all
+        *other* queues per candidate — O(n^2) per arrival; here the top-2
+        pending times give that exclusion max in O(1): the largest pending
+        time unless the candidate IS the argmax, else the second largest.
+        Identical keys, identical argmin (pinned against the reference)."""
         pending = [ex.pending_time(now) for ex in self.executors]
-        adds = [self.additional_latency(ex, req, now) for ex in self.executors]
+        hi1 = hi2 = float("-inf")
+        hi1_i = -1
+        for i, p in enumerate(pending):
+            if p > hi1:
+                hi2 = hi1
+                hi1, hi1_i = p, i
+            elif p > hi2:
+                hi2 = p
+        # ``additional_latency``/``switch_cost`` inlined: the methods stay
+        # (reference tests, steal heuristics, the manager) but paying two
+        # dispatches plus a catalog lookup per executor per arrival is the
+        # residual hot spot at 128 devices — same branches, same values
+        eid = req.expert_id
+        arch = self.executors[0].coe.spec(eid).arch
+        arrange = self.policy.arrange
         best, best_key = None, None
         for i, ex in enumerate(self.executors):
-            new_total = pending[i] + adds[i]
-            makespan = max([new_total] + [pending[j] for j in range(len(pending))
-                                          if j != i])
-            key = (makespan, adds[i], i)
+            prof = ex.device_profile.arch_profiles[arch]
+            queued_same = eid in ex.queued_groups()
+            exec_lat = prof.k if (queued_same and arrange) \
+                else prof.k + prof.b
+            if queued_same:
+                sc = 0.0
+            else:
+                pool = ex.pool
+                if eid in pool:
+                    done = pool.loading.get(eid)
+                    sc = 0.0 if done is None or eid in pool.ready \
+                        else max(0.0, done - now)
+                elif ex.hierarchy is not None:
+                    sc = ex.hierarchy.assignment_cost(
+                        eid, now, group=pool.group, device=ex.device)
+                else:
+                    sc = ex.load_latency(eid)
+            add = exec_lat + sc
+            new_total = pending[i] + add
+            others = hi2 if i == hi1_i else hi1
+            makespan = new_total if new_total >= others else others
+            key = (makespan, add, i)
             if best_key is None or key < best_key:
                 best, best_key = ex, key
         return best
@@ -146,6 +197,7 @@ class RequestScheduler:
             for g in reversed(ex.queue):
                 if g.expert_id == req.expert_id:
                     g.requests.append(req)
+                    bump_queue(ex.queue)   # group grew in place
                     if deadline is not None:
                         g.deadline = deadline if g.deadline is None \
                             else min(g.deadline, deadline)
@@ -153,6 +205,7 @@ class RequestScheduler:
         elif ex.queue and ex.queue[-1].expert_id == req.expert_id:
             # FCFS baselines still batch *consecutive* same-expert arrivals
             ex.queue[-1].requests.append(req)
+            bump_queue(ex.queue)           # group grew in place
             if deadline is not None:
                 g = ex.queue[-1]
                 g.deadline = deadline if g.deadline is None \
@@ -175,16 +228,27 @@ class RequestScheduler:
     # same-expert group from within the window to the head when the head
     # expert is not resident but a later one is (saves a switch).
     # ------------------------------------------------------------------ #
-    def reorder_head(self, ex: "Executor"):
+    def reorder_head(self, ex: "Executor", now: float = 0.0):
         w = self.policy.lookahead
         if not w or len(ex.queue) < 2:
             return
         head = ex.queue[0]
         if head.expert_id in ex.pool:
             return
+        # queued-expert index: intersect the queue's expert set with the
+        # pool's residents once, instead of probing pool membership per
+        # window slot — the common all-cold window exits here
+        hits = ex.queued_groups().keys() & ex.pool.resident.keys()
+        if not hits:
+            return
         for i in range(1, min(w + 1, len(ex.queue))):
-            if ex.queue[i].expert_id in ex.pool:
+            if ex.queue[i].expert_id in hits:
                 ex.queue.insert(0, ex.queue.pop(i))
+                if self.tracer.full:
+                    # reorders were invisible to the flight recorder before
+                    self.tracer.emit(now, "sched", "scheduler",
+                                     ex.queue[0].expert_id, executor=ex.id,
+                                     mode="reorder", slot=i)
                 return
 
 

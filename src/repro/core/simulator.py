@@ -128,9 +128,10 @@ class Simulation:
                     continue
                 ex.finish_load(eid)
                 # the pool is shared: peers waiting on this expert wake too
-                for peer in sys.live_executors():
-                    if peer.pool is ex.pool:
-                        self.kick(peer, t)
+                # (pool.users is exactly the executors sharing the pool, in
+                # construction order — no fleet-wide scan; kick() skips dead)
+                for peer in list(ex.pool.users):
+                    self.kick(peer, t)
             elif kind == EXEC_DONE:
                 ex = payload
                 if not ex.alive or ex.current is None:
@@ -151,14 +152,17 @@ class Simulation:
                 self.kick(ex, t)
                 # a finished batch unpins its expert: pool-sharing peers whose
                 # pending load was blocked on that pin can now proceed
-                for peer in sys.live_executors():
-                    if peer is not ex and peer.pool is ex.pool:
+                for peer in list(ex.pool.users):
+                    if peer is not ex:
                         self.kick(peer, t)
-                # idle peers may steal from the longest queue
-                for peer in sys.live_executors():
-                    if peer is not ex and not peer.queue and peer.current is None:
-                        if sys.try_steal(peer, t):
-                            self.kick(peer, t)
+                # idle peers may steal from the longest queue (try_steal is a
+                # guaranteed no-op with stealing off — skip the fleet scan)
+                if sys.policy.work_stealing:
+                    for peer in sys.live_executors():
+                        if peer is not ex and not peer.queue \
+                                and peer.current is None:
+                            if sys.try_steal(peer, t):
+                                self.kick(peer, t)
             else:  # INJECT
                 payload(self)
         makespan = max((r.done_time or 0.0) for r in self.completed) \
@@ -173,7 +177,7 @@ class Simulation:
         """Advance one executor: start loads and/or the next batch."""
         if not ex.alive:
             return
-        self.system.scheduler.reorder_head(ex)
+        self.system.scheduler.reorder_head(ex, now)
         # start executing if the head group's expert is ready
         if ex.current is None:
             if not ex.queue and self.system.try_steal(ex, now):

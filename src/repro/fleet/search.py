@@ -42,8 +42,9 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import TYPE_CHECKING, Dict, List, Mapping, Optional, Sequence, \
-    Tuple
+import time as _time
+from typing import TYPE_CHECKING, Dict, FrozenSet, List, Mapping, Optional, \
+    Sequence, Tuple
 
 import numpy as np
 
@@ -163,26 +164,48 @@ def _device_groups(capacities: Mapping[str, int],
                   if devices.get(g, "gpu") not in ("host", "cpu"))
 
 
-def replay_cost(coe: "CoEModel", capacities: Mapping[str, int],
-                plan: PlacementPlan, trace: WorkloadTrace,
-                tier: TierSpec, links: str = "shared",
-                pool_devices: Optional[Mapping[str, str]] = None) -> float:
-    """Mean per-event queueing + switch seconds of serving ``trace`` under
-    ``plan``'s (static) layout.
+@dataclasses.dataclass
+class _ReplayDetail:
+    """Per-event decomposition of one full replay — the anchor the delta
+    scorer perturbs. For every counted event i and group index gi it keeps
+    the pool backlog (``wait_at``), the would-be host/disk miss price
+    (``hostmiss``), the peer-ingress backlog (``peer_wait``; empty rows when
+    the tier has no fabric) and the cost actually charged (``paid``), all
+    recorded during the anchor replay with the pool busy clocks and channel
+    state it really saw. A single-expert move re-prices only that expert's
+    events against these frozen backgrounds."""
+    groups: List[str]
+    has_peer: bool = False
+    total: float = 0.0
+    n: int = 0
+    paid: List[float] = dataclasses.field(default_factory=list)
+    wait_at: List[List[float]] = dataclasses.field(default_factory=list)
+    hostmiss: List[List[float]] = dataclasses.field(default_factory=list)
+    peer_wait: List[List[float]] = dataclasses.field(default_factory=list)
+    peer_pred: Dict[str, float] = dataclasses.field(default_factory=dict)
+    events_of: Dict[str, List[int]] = dataclasses.field(default_factory=dict)
 
-    A fresh ``MemoryHierarchy`` is warmed to the plan (device pools hold the
-    planned copies, host DRAM fills hottest-first with the rest), then each
-    event is assigned to the device pool minimizing
-    ``pool busy backlog + assignment_cost`` — the same two terms the online
-    scheduler's makespan argmin weighs. Misses start real transfers on the
-    contended channels (SSD / per-group PCIe / peer ingress), so hot experts
-    crowded behind one link keep getting more expensive within the replay,
-    exactly as they would in the simulator."""
+    @property
+    def mean(self) -> float:
+        return self.total / self.n if self.n else 0.0
+
+
+def _replay(coe: "CoEModel", capacities: Mapping[str, int],
+            plan: PlacementPlan, trace: WorkloadTrace,
+            tier: TierSpec, links: str = "shared",
+            pool_devices: Optional[Mapping[str, str]] = None,
+            record: bool = False) -> _ReplayDetail:
+    """The replay loop behind ``replay_cost``; with ``record`` it also
+    captures the per-event backgrounds the delta scorer needs. Recording
+    adds only *pure* probes (``host_disk_cost``, channel backlog reads), so
+    the accumulated cost is bit-identical with and without it."""
     groups = _device_groups(capacities, pool_devices)
+    detail = _ReplayDetail(groups=groups)
     if not groups or not trace.events:
-        return 0.0
+        return detail
     h = MemoryHierarchy(coe, tier, pools=dict(capacities), links=links,
                         link_groups=groups)
+    detail.has_peer = h.topology.has_peer
     for eid, g in plan.layout():
         pool = h.pools.get(g)
         if pool is not None and eid not in pool \
@@ -200,19 +223,112 @@ def replay_cost(coe: "CoEModel", capacities: Mapping[str, int],
         if eid not in coe.experts:
             continue
         best_g, best_wait, best_switch = None, 0.0, 0.0
+        waits: List[float] = []
         for g in groups:
             switch = 0.0 if eid in h.pools[g] \
                 else h.assignment_cost(eid, now, group=g)
             wait = max(0.0, busy[g] - now)
+            if record:
+                waits.append(wait)
             if best_g is None or wait + switch < best_wait + best_switch:
                 best_g, best_wait, best_switch = g, wait, switch
         cost += best_wait + best_switch
         n += 1
+        if record:
+            detail.paid.append(best_wait + best_switch)
+            detail.wait_at.append(waits)
+            detail.hostmiss.append(
+                [h.host_disk_cost(eid, now, group=g) for g in groups])
+            if detail.has_peer:
+                detail.peer_wait.append(
+                    [max(0.0, h.topology.peer_for(g).busy_until - now)
+                     for g in groups])
+                if eid not in detail.peer_pred:
+                    detail.peer_pred[eid] = h.transfer.predict_peer(
+                        coe.spec(eid).mem_bytes)
+            detail.events_of.setdefault(eid, []).append(n - 1)
         if eid not in h.pools[best_g]:
             h.begin_device_load(eid, now, group=best_g)
         busy[best_g] = max(now, busy[best_g]) + best_switch + trace.exec_s
         now += trace.gap_s
-    return cost / n if n else 0.0
+    detail.total, detail.n = cost, n
+    return detail
+
+
+def replay_cost(coe: "CoEModel", capacities: Mapping[str, int],
+                plan: PlacementPlan, trace: WorkloadTrace,
+                tier: TierSpec, links: str = "shared",
+                pool_devices: Optional[Mapping[str, str]] = None) -> float:
+    """Mean per-event queueing + switch seconds of serving ``trace`` under
+    ``plan``'s (static) layout.
+
+    A fresh ``MemoryHierarchy`` is warmed to the plan (device pools hold the
+    planned copies, host DRAM fills hottest-first with the rest), then each
+    event is assigned to the device pool minimizing
+    ``pool busy backlog + assignment_cost`` — the same two terms the online
+    scheduler's makespan argmin weighs. Misses start real transfers on the
+    contended channels (SSD / per-group PCIe / peer ingress), so hot experts
+    crowded behind one link keep getting more expensive within the replay,
+    exactly as they would in the simulator."""
+    return _replay(coe, capacities, plan, trace, tier, links=links,
+                   pool_devices=pool_devices).mean
+
+
+class _DeltaScorer:
+    """Scores assignment perturbations against a full-replay anchor.
+
+    For each expert whose pool set differs from the anchor's, every one of
+    its trace events is re-priced as ``min over groups`` of the recorded
+    pool backlog plus: zero (resident under the candidate), the peer-copy
+    price (fabric present and a sibling copy exists), or the recorded
+    host/disk miss price. Events of unchanged experts keep their anchor
+    cost, and cross-event busy-clock drift is ignored — the approximation
+    periodic full-replay revalidation (and the final full replay) corrects,
+    so accepted estimates never leak into the returned cost."""
+
+    def __init__(self, detail: _ReplayDetail,
+                 anchor_assign: Mapping[str, Sequence[str]]):
+        self.d = detail
+        self.anchor: Dict[str, FrozenSet[str]] = {
+            e: frozenset(p) for e, p in anchor_assign.items() if p}
+
+    def changed(self, assign: Mapping[str, Sequence[str]]) -> List[str]:
+        """Experts whose pool set differs from the anchor's."""
+        out = []
+        for e in assign.keys() | self.anchor.keys():
+            if frozenset(assign.get(e) or ()) != \
+                    self.anchor.get(e, frozenset()):
+                out.append(e)
+        return out
+
+    def estimate(self, assign: Mapping[str, Sequence[str]]) -> float:
+        """Estimated mean replay cost of ``assign`` (anchor scale)."""
+        d = self.d
+        delta = 0.0
+        for eid in self.changed(assign):
+            pools = frozenset(assign.get(eid) or ())
+            for i in d.events_of.get(eid, ()):
+                delta += self._event_best(i, eid, pools) - d.paid[i]
+        return (d.total + delta) / d.n if d.n else 0.0
+
+    def _event_best(self, i: int, eid: str,
+                    pools: FrozenSet[str]) -> float:
+        d = self.d
+        waits = d.wait_at[i]
+        miss_host = d.hostmiss[i]
+        peer_ok = d.has_peer and bool(pools)
+        peer_base = d.peer_pred.get(eid, 0.0) if peer_ok else 0.0
+        best = None
+        for gi, g in enumerate(d.groups):
+            if g in pools:
+                c = waits[gi]
+            elif peer_ok:   # any planned copy is a sibling of g here
+                c = waits[gi] + peer_base + d.peer_wait[i][gi]
+            else:
+                c = waits[gi] + miss_host[gi]
+            if best is None or c < best:
+                best = c
+        return best if best is not None else 0.0
 
 
 # --------------------------------------------------------------------------- #
@@ -221,15 +337,25 @@ def replay_cost(coe: "CoEModel", capacities: Mapping[str, int],
 
 @dataclasses.dataclass(frozen=True)
 class SearchConfig:
-    iterations: int = 400        # move proposals (each scored by one replay)
+    iterations: int = 400        # move proposals (delta: scored by the
+    #                              anchor decomposition; full: one replay each)
     patience: int = 120          # stop after this many consecutive rejects
-    seed: int = 0                # RNG seed (the search is deterministic)
+    seed: int = 0                # RNG seed (the search is deterministic
+    #                              unless time_budget_s is set)
     replication: int = 2         # max planned copies beyond the primary
     replica_fraction: float = 0.35   # per-pool replica byte budget the
     #                                  search may spend (the greedy sweep's
     #                                  0.10 stays its own default)
     hot_pool: int = 32           # replicate/drop candidates come from the
     #                              hottest / coldest end of the trace weights
+    scoring: str = "delta"       # delta (anchor + per-expert re-pricing,
+    #                              periodic full-replay revalidation) | full
+    #                              (every proposal replays the whole trace)
+    revalidate_every: int = 8    # delta mode: full replay after this many
+    #                              estimate-accepted moves (drift bound)
+    time_budget_s: Optional[float] = None   # wall-clock cap on the proposal
+    #                              loop (None: iterations/patience only) —
+    #                              the benchmark's same-budget comparison
 
     def __post_init__(self):
         if self.iterations < 0 or self.patience <= 0:
@@ -240,6 +366,15 @@ class SearchConfig:
         if not 0.0 <= self.replica_fraction <= 1.0:
             raise ValueError(f"replica_fraction must be in [0, 1], "
                              f"got {self.replica_fraction}")
+        if self.scoring not in ("delta", "full"):
+            raise ValueError(f"scoring must be 'delta' or 'full', "
+                             f"got {self.scoring!r}")
+        if self.revalidate_every <= 0:
+            raise ValueError(f"revalidate_every must be > 0, "
+                             f"got {self.revalidate_every}")
+        if self.time_budget_s is not None and self.time_budget_s <= 0:
+            raise ValueError(f"time_budget_s must be positive, "
+                             f"got {self.time_budget_s}")
 
 
 @dataclasses.dataclass
@@ -251,6 +386,10 @@ class SearchResult:
     accepted: int
     fell_back: bool              # no move improved: the seed plan itself is
     #                              returned (pinned-equivalence fallback)
+    scoring: str = "full"        # how proposals were scored
+    full_replays: int = 0        # trace replays actually performed (delta
+    #                              mode: anchor + revalidations; full mode:
+    #                              seed + one per scored proposal)
 
     def snapshot(self) -> dict:
         return {"seed_cost_s": round(self.seed_cost, 6),
@@ -260,6 +399,8 @@ class SearchResult:
                 "proposed": self.proposed,
                 "accepted": self.accepted,
                 "fell_back": self.fell_back,
+                "scoring": self.scoring,
+                "full_replays": self.full_replays,
                 "plan": self.plan.snapshot()}
 
 
@@ -443,10 +584,19 @@ def search_placement(coe: "CoEModel", capacities: Mapping[str, int],
 
     Starting from ``seed_plan`` (default: ``PlacementPlan.build`` with no
     replication — the paper's sweep), propose replicate / drop / migrate /
-    swap / place moves and accept only strict replay-cost improvements;
-    stop after ``config.patience`` consecutive rejects. When nothing
-    improves, the *original seed plan object* is returned (``fell_back``),
-    so greedy-equivalence is exact, not approximate."""
+    swap / place moves; stop after ``config.patience`` consecutive rejects,
+    ``config.iterations`` proposals, or ``config.time_budget_s`` wall
+    seconds. With ``scoring='full'`` every proposal replays the whole trace
+    and only strict improvements are kept. With ``scoring='delta'`` (the
+    default) proposals are scored against a full-replay *anchor* by
+    re-pricing only the moved experts' trace events; every
+    ``revalidate_every`` estimate-accepts (and once at the end) a real
+    replay re-anchors the search, and only plans a *full* replay verified
+    as strictly better than the incumbent ever become the result — so the
+    returned cost is always a true replay cost and never worse than the
+    greedy seed. When nothing improves, the *original seed plan object* is
+    returned (``fell_back``), so greedy-equivalence is exact, not
+    approximate."""
     cfg = config or SearchConfig()
     if seed_plan is None:
         seed_plan = PlacementPlan.build(coe, capacities)
@@ -465,39 +615,108 @@ def search_placement(coe: "CoEModel", capacities: Mapping[str, int],
         if cap > 0 and rb > 0:
             frac_limit = max(frac_limit, min(1.0, (rb + 1) / cap))
 
-    def score(assign) -> Tuple[float, PlacementPlan]:
-        plan = PlacementPlan.from_assignments(
+    def materialize(assign) -> PlacementPlan:
+        return PlacementPlan.from_assignments(
             coe, capacities, assign, replication=repl_limit,
             replica_fraction=frac_limit)
-        return replay_cost(coe, capacities, plan, trace, tier, links=links,
-                           pool_devices=pool_devices), plan
 
-    seed_cost = replay_cost(coe, capacities, seed_plan, trace, tier,
-                            links=links, pool_devices=pool_devices)
+    def full_detail(plan) -> _ReplayDetail:
+        return _replay(coe, capacities, plan, trace, tier, links=links,
+                       pool_devices=pool_devices,
+                       record=cfg.scoring == "delta")
+
+    state = {"full_replays": 1}
+    seed_detail = full_detail(seed_plan)
+    seed_cost = seed_detail.mean
     best_assign, best_cost, best_plan = seed_assign, seed_cost, seed_plan
+    best_detail = seed_detail
     proposed = accepted = stale = 0
+    deadline = None if cfg.time_budget_s is None \
+        else _time.monotonic() + cfg.time_budget_s
+
+    def out_of_budget(it: int) -> bool:
+        if it >= cfg.iterations or stale >= cfg.patience:
+            return True
+        return deadline is not None and _time.monotonic() >= deadline
+
     if groups and trace.events:
         mover = _Mover(coe, capacities, groups, trace.weights(),
                        np.random.RandomState(cfg.seed), cfg)
-        for _ in range(cfg.iterations):
-            if stale >= cfg.patience:
-                break
-            cand = mover.propose(best_assign)
-            proposed += 1
-            if cand is None:
-                stale += 1
-                continue
-            try:
-                cost, plan = score(cand)
-            except ValueError:       # replica budget / capacity infeasible
-                stale += 1
-                continue
-            if cost < best_cost - 1e-12:
-                best_assign, best_cost, best_plan = cand, cost, plan
-                accepted += 1
-                stale = 0
-            else:
-                stale += 1
+        if cfg.scoring == "full":
+            it = 0
+            while not out_of_budget(it):
+                it += 1
+                cand = mover.propose(best_assign)
+                proposed += 1
+                if cand is None:
+                    stale += 1
+                    continue
+                try:
+                    plan = materialize(cand)
+                except ValueError:   # replica budget / capacity infeasible
+                    stale += 1
+                    continue
+                cost = replay_cost(coe, capacities, plan, trace, tier,
+                                   links=links, pool_devices=pool_devices)
+                state["full_replays"] += 1
+                if cost < best_cost - 1e-12:
+                    best_assign, best_cost, best_plan = cand, cost, plan
+                    accepted += 1
+                    stale = 0
+                else:
+                    stale += 1
+        else:
+            scorer = _DeltaScorer(seed_detail, seed_assign)
+            cur_assign, cur_est = seed_assign, seed_cost
+            pending = 0     # estimate-accepts since the last revalidation
+
+            def revalidate():
+                """Full replay of the current assignment: adopt it as the
+                incumbent iff strictly better, else rewind to the verified
+                best; re-anchor the scorer either way."""
+                nonlocal best_assign, best_cost, best_plan, best_detail
+                nonlocal cur_assign, cur_est, scorer, pending
+                plan = materialize(cur_assign)
+                detail = full_detail(plan)
+                state["full_replays"] += 1
+                if detail.mean < best_cost - 1e-12:
+                    best_assign, best_cost, best_plan = \
+                        cur_assign, detail.mean, plan
+                    best_detail = detail
+                else:
+                    cur_assign = best_assign
+                    detail = best_detail
+                scorer = _DeltaScorer(detail, cur_assign)
+                cur_est = detail.mean
+                pending = 0
+
+            it = 0
+            while not out_of_budget(it):
+                it += 1
+                cand = mover.propose(cur_assign)
+                proposed += 1
+                if cand is None:
+                    stale += 1
+                    continue
+                try:
+                    materialize(cand)    # feasibility gate only
+                except ValueError:
+                    stale += 1
+                    continue
+                est = scorer.estimate(cand)
+                if est < cur_est - 1e-12:
+                    cur_assign, cur_est = cand, est
+                    accepted += 1
+                    pending += 1
+                    stale = 0
+                    if pending >= cfg.revalidate_every:
+                        revalidate()
+                else:
+                    stale += 1
+            if pending:
+                revalidate()
     return SearchResult(plan=best_plan, seed_cost=seed_cost, cost=best_cost,
                         proposed=proposed, accepted=accepted,
-                        fell_back=best_plan is seed_plan)
+                        fell_back=best_plan is seed_plan,
+                        scoring=cfg.scoring,
+                        full_replays=state["full_replays"])

@@ -16,7 +16,7 @@ from repro.memory.hierarchy import MemoryHierarchy
 from repro.memory.policies import (POLICY_NAMES, EvictionPolicy, EvictionView,
                                    make_policy)
 from repro.memory.prefetch import CrossTierPrefetcher, PrefetchConfig
-from repro.memory.residency import DevicePool, HostTier
+from repro.memory.residency import DevicePool, HostTier, ReadySet, StateEpoch
 from repro.memory.tiers import (LINK_MODES, NUMA, TPU_V5E, UMA, Residency,
                                 TierSpec, TierTopology)
 from repro.memory.transfer import (TransferEngine, predicted_host_load_latency,
@@ -26,7 +26,8 @@ __all__ = [
     "LINK_MODES", "Transfer", "TransferChannel", "MemoryHierarchy",
     "POLICY_NAMES",
     "EvictionPolicy", "EvictionView", "make_policy", "CrossTierPrefetcher",
-    "PrefetchConfig", "DevicePool", "HostTier", "NUMA", "TPU_V5E", "UMA",
+    "PrefetchConfig", "DevicePool", "HostTier", "ReadySet", "StateEpoch",
+    "NUMA", "TPU_V5E", "UMA",
     "Residency", "TierSpec", "TierTopology", "TransferEngine",
     "predicted_host_load_latency", "predicted_load_latency",
 ]

@@ -18,11 +18,11 @@ its device-budget accounting.
 """
 from __future__ import annotations
 
-from typing import TYPE_CHECKING, Dict, Mapping, Optional, Sequence
+from typing import TYPE_CHECKING, Dict, Mapping, Optional, Sequence, Tuple
 
 from repro.memory.channels import Transfer
 from repro.memory.prefetch import CrossTierPrefetcher, PrefetchConfig
-from repro.memory.residency import DevicePool, HostTier
+from repro.memory.residency import DevicePool, HostTier, StateEpoch
 from repro.memory.tiers import Residency, TierSpec, TierTopology
 from repro.memory.transfer import TransferEngine
 
@@ -51,15 +51,26 @@ class MemoryHierarchy:
         self.topology = TierTopology.from_spec(self.spec, groups=groups,
                                                links=links)
         self.transfer = TransferEngine(self.topology)
+        # one residency-transition epoch shared by every tier: pool and host
+        # membership changes bump it, so per-expert derived state (settled
+        # peer holders here, queue pending-time in the executors) validates
+        # with a single integer compare instead of rescanning pools
+        self.epoch = StateEpoch()
+        # epoch-validated expert -> settled holder pools (in _peer_order);
+        # ``cost_cache_enabled`` = False restores the naive O(pools) scans
+        # (the retained reference path benchmarks and tests pin against)
+        self.cost_cache_enabled = True
+        self._holders_cache: Dict[str, Tuple[int, Tuple[str, ...]]] = {}
         # UMA collapses the middle tier; tier=None (engine-supplied latency
         # models) keeps the seed's no-host-cache behaviour
         self.host: Optional[HostTier] = None
         if tier is not None and not self.spec.unified \
                 and self.spec.host_cache_bytes > 0:
             self.host = HostTier(self.spec.host_cache_bytes, coe,
-                                 policy=host_policy)
+                                 policy=host_policy, epoch=self.epoch)
         self.pools: Dict[str, DevicePool] = {
-            g: DevicePool(b, coe, group=g) for g, b in pools.items()}
+            g: DevicePool(b, coe, group=g, epoch=self.epoch)
+            for g, b in pools.items()}
         self.prefetcher = CrossTierPrefetcher(
             coe, self, prefetch or PrefetchConfig(enabled=False))
         # construction-time activation budget per pool group — the fixed
@@ -96,9 +107,27 @@ class MemoryHierarchy:
         (DEVICE or PINNED — an in-flight LOADING copy cannot be forwarded).
         None when the tier has no peer fabric, the destination is not a
         device pool, or no sibling holds the expert — in which case the
-        load falls back to the host-DRAM / disk path."""
+        load falls back to the host-DRAM / disk path.
+
+        The settled-holder list per expert is cached and validated against
+        the shared residency epoch, so a scheduler probing 128 executors
+        pays the O(pools) scan once per residency transition, not per probe.
+        The cached answer is the *first* settled holder that is not the
+        destination — exactly what the naive scan returns."""
         if not self.topology.has_peer or dst_group not in self.link_groups:
             return None
+        if not self.cost_cache_enabled:
+            return self._peer_source_scan(expert_id, dst_group)
+        for g in self._settled_holders(expert_id):
+            if g != dst_group:
+                return g
+        return None
+
+    def _peer_source_scan(self, expert_id: str,
+                          dst_group: str) -> Optional[str]:
+        """The naive per-probe pool scan ``peer_source`` replaced (retained
+        as the pinned reference; ``cost_cache_enabled = False`` routes every
+        probe through here)."""
         for g in self._peer_order:
             if g == dst_group:
                 continue
@@ -109,6 +138,24 @@ class MemoryHierarchy:
             if st in (Residency.DEVICE, Residency.PINNED):
                 return g
         return None
+
+    def _settled_holders(self, expert_id: str) -> Tuple[str, ...]:
+        """Epoch-validated tuple of pools holding a settled (DEVICE/PINNED)
+        copy, in deterministic ``_peer_order``."""
+        hit = self._holders_cache.get(expert_id)
+        if hit is not None and hit[0] == self.epoch.n:
+            return hit[1]
+        holders = []
+        for g in self._peer_order:
+            pool = self.pools.get(g)
+            if pool is None:
+                continue
+            st = pool.residency(expert_id)
+            if st in (Residency.DEVICE, Residency.PINNED):
+                holders.append(g)
+        out = tuple(holders)
+        self._holders_cache[expert_id] = (self.epoch.n, out)
+        return out
 
     # ------------------------------------------------------------------ #
     # latency prediction (uncontended — scheduling decisions)
@@ -229,10 +276,37 @@ class MemoryHierarchy:
         if device in ("host", "cpu"):
             return self.predict_host_load(expert_id) + self._backlog(
                 self.topology.disk_channel, now)
+        # peer arm, inlined: this runs once per executor per makespan probe,
+        # so the ``peer_source`` indirection (re-checking the fabric and the
+        # cache switch per call) is paid 128x per arrival at fleet scale
+        topo = self.topology
+        if topo.has_peer and group in self.link_groups:
+            src = None
+            if self.cost_cache_enabled:
+                hit = self._holders_cache.get(expert_id)
+                holders = hit[1] if hit is not None \
+                    and hit[0] == self.epoch.n \
+                    else self._settled_holders(expert_id)
+                for g in holders:
+                    if g != group:
+                        src = g
+                        break
+            else:
+                src = self._peer_source_scan(expert_id, group)
+            if src is not None:
+                mem = self.coe.spec(expert_id).mem_bytes
+                ch = topo.peer_for(group)
+                return self.transfer.predict_peer(mem) \
+                    + max(0.0, ch.busy_until - now)
+        return self.host_disk_cost(expert_id, now, group)
+
+    def host_disk_cost(self, expert_id: str, now: float,
+                       group: str = "") -> float:
+        """``assignment_cost``'s host/disk arm alone — what the load would
+        cost with no settled sibling copy to peer from. Exposed so the
+        placement search's delta scorer can price drop-replica moves
+        without re-resolving the (plan-dependent) peer source."""
         mem = self.coe.spec(expert_id).mem_bytes
-        if self.peer_source(expert_id, group) is not None:   # resolved once
-            return self.transfer.predict_peer(mem) \
-                + self._backlog(self.topology.peer_for(group), now)
         wait = self._host_disk_backlog(expert_id, now, group)
         if self.host is not None and self.in_host(expert_id) \
                 and not self.spec.unified:
@@ -240,6 +314,21 @@ class MemoryHierarchy:
             wait = max(wait, self.host.ready_time(expert_id) - now)
         return self.transfer.predict(
             mem, in_host_cache=self.in_host(expert_id)) + wait
+
+    def assignment_cost_ref(self, expert_id: str, now: float, group: str = "",
+                            device: str = "") -> float:
+        """``assignment_cost`` with the naive per-probe pool scan — the
+        pinned pre-cache reference. Must return bit-identical values to the
+        cached path under any residency churn (tested)."""
+        if device in ("host", "cpu"):
+            return self.predict_host_load(expert_id) + self._backlog(
+                self.topology.disk_channel, now)
+        mem = self.coe.spec(expert_id).mem_bytes
+        if self.topology.has_peer and group in self.link_groups \
+                and self._peer_source_scan(expert_id, group) is not None:
+            return self.transfer.predict_peer(mem) \
+                + self._backlog(self.topology.peer_for(group), now)
+        return self.host_disk_cost(expert_id, now, group)
 
     def speculation_ok(self, expert_id: str, now: float,
                        group: str = "", device: str = "") -> bool:

@@ -13,13 +13,75 @@ into LRU under load in the seed.
 """
 from __future__ import annotations
 
-from typing import TYPE_CHECKING, Dict, List, Optional, Set
+from typing import TYPE_CHECKING, Dict, List, Optional
 
 from repro.memory.policies import EvictionView, make_policy
 from repro.memory.tiers import Residency
 
 if TYPE_CHECKING:  # pragma: no cover — repro.core imports this package
     from repro.core.coe import CoEModel
+
+
+class StateEpoch:
+    """Monotone residency-transition counter shared across a hierarchy's
+    tiers. Every membership change (pool add/remove, host insert/evict) and
+    every ready-set transition bumps it, so consumers can validate cached
+    derived state (settled peer holders, queue pending-time predictions)
+    with one integer compare instead of rescanning tiers. Pin/unpin and
+    LRU touches do NOT bump: they never change what a load would cost."""
+
+    __slots__ = ("n",)
+
+    def __init__(self):
+        self.n = 0
+
+    def bump(self):
+        self.n += 1
+
+
+class ReadySet(set):
+    """``DevicePool.ready`` with transition tracking: tests and the warm
+    placement path mutate the set directly (``pool.ready.add(eid)``), so the
+    set itself bumps the shared epoch on any membership change — a settled
+    copy appearing or vanishing invalidates peer-source and pending caches
+    without those call sites knowing caches exist."""
+
+    __slots__ = ("epoch",)
+
+    def __init__(self, epoch: StateEpoch, iterable=()):
+        super().__init__(iterable)
+        self.epoch = epoch
+
+    def add(self, eid):
+        if eid not in self:
+            self.epoch.bump()
+        super().add(eid)
+
+    def discard(self, eid):
+        if eid in self:
+            self.epoch.bump()
+        super().discard(eid)
+
+    def remove(self, eid):
+        self.epoch.bump()
+        super().remove(eid)
+
+    def pop(self):
+        self.epoch.bump()
+        return super().pop()
+
+    def clear(self):
+        if self:
+            self.epoch.bump()
+        super().clear()
+
+    def update(self, *others):
+        self.epoch.bump()
+        super().update(*others)
+
+    def difference_update(self, *others):
+        self.epoch.bump()
+        super().difference_update(*others)
 
 
 class DevicePool:
@@ -31,14 +93,16 @@ class DevicePool:
     therefore counted (several executors may execute the same expert).
     """
 
-    def __init__(self, capacity_bytes: int, coe: CoEModel, group: str = ""):
+    def __init__(self, capacity_bytes: int, coe: CoEModel, group: str = "",
+                 epoch: Optional[StateEpoch] = None):
         self.capacity = capacity_bytes
         self.coe = coe
         self.group = group
+        self.epoch = epoch if epoch is not None else StateEpoch()
         self.resident: Dict[str, int] = {}    # expert -> last-use counter
         self.insert_seq: Dict[str, int] = {}  # expert -> insertion counter
         self.pinned: Dict[str, int] = {}      # expert -> pin count
-        self.ready: Set[str] = set()          # transfer complete
+        self.ready: ReadySet = ReadySet(self.epoch)   # transfer complete
         self.loading: Dict[str, float] = {}   # expert -> expected done time
         self.used_bytes = 0
         self.users: List = []                 # executors sharing this pool
@@ -80,6 +144,7 @@ class DevicePool:
         self.resident[expert_id] = self._clock
         self.insert_seq[expert_id] = self._clock
         self.used_bytes += size
+        self.epoch.bump()
 
     def remove(self, expert_id: str):
         if expert_id in self.pinned:
@@ -88,6 +153,7 @@ class DevicePool:
         self.ready.discard(expert_id)
         self.insert_seq.pop(expert_id, None)
         del self.resident[expert_id]
+        self.epoch.bump()
 
     def evictable(self) -> List[str]:
         return [e for e in self.resident
@@ -133,10 +199,12 @@ class HostTier:
     (probability-ordered for CoServe, LRU for the Samba-CoE baselines).
     """
 
-    def __init__(self, capacity_bytes: int, coe: CoEModel, policy: str = "prob"):
+    def __init__(self, capacity_bytes: int, coe: CoEModel, policy: str = "prob",
+                 epoch: Optional[StateEpoch] = None):
         self.capacity = capacity_bytes
         self.coe = coe
         self.policy = policy
+        self.epoch = epoch if epoch is not None else StateEpoch()
         self._strategy = make_policy(policy)
         self.resident: Dict[str, int] = {}   # expert -> last-use counter
         self.insert_seq: Dict[str, int] = {}
@@ -200,6 +268,7 @@ class HostTier:
             self.used_bytes += size
             if ready_at > 0.0:
                 self.ready_at[expert_id] = ready_at
+            self.epoch.bump()
         return evicted
 
     def _remove(self, expert_id: str):
@@ -207,6 +276,7 @@ class HostTier:
         self.insert_seq.pop(expert_id, None)
         self.ready_at.pop(expert_id, None)
         del self.resident[expert_id]
+        self.epoch.bump()
 
     def _pick_victim(self) -> Optional[str]:
         if not self.resident:

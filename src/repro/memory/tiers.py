@@ -103,8 +103,15 @@ class TierTopology:
     links: str = "shared"
     peer_channels: Dict[str, TransferChannel] = dataclasses.field(
         default_factory=dict)
+    # plain attribute, not a property: ``TierSpec`` is frozen, so whether a
+    # peer fabric exists is fixed at construction — and the scheduler's
+    # assignment-cost path reads it per executor probe
+    has_peer: bool = dataclasses.field(init=False)
 
     SHARED_KEY = ""   # pcie_channels key of the fleet-wide link (shared mode)
+
+    def __post_init__(self):
+        self.has_peer = self.spec.peer_bw > 0 and not self.spec.unified
 
     @classmethod
     def from_spec(cls, spec: TierSpec, groups: Sequence[str] = (),
@@ -138,11 +145,6 @@ class TierTopology:
                                  self.spec.host_to_device_bw)
             self.pcie_channels[group] = ch
         return ch
-
-    @property
-    def has_peer(self) -> bool:
-        """Whether the tier declares a device<->device fabric at all."""
-        return self.spec.peer_bw > 0 and not self.spec.unified
 
     def peer_for(self, group: str) -> TransferChannel:
         """The peer ingress link a pool->pool copy into ``group`` rides

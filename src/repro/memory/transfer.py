@@ -21,6 +21,7 @@ predicted latency stays the service time alone.
 from __future__ import annotations
 
 import dataclasses
+from typing import Dict, Tuple
 
 from repro.memory.channels import Transfer, TransferChannel
 from repro.memory.tiers import TierSpec, TierTopology
@@ -57,6 +58,11 @@ class TransferEngine:
         self.topology = topology
         self.spec = topology.spec
         self.tracer = NULL_TRACER    # set by CoServeSystem when tracing
+        # ``TierSpec`` is frozen, so every prediction is a pure function of
+        # the byte count — memoized because the scheduler prices a load per
+        # executor probe (128 probes per arrival at fleet scale)
+        self._pred_memo: Dict[Tuple[int, bool], float] = {}
+        self._peer_memo: Dict[int, float] = {}
 
     def _trace(self, ch: TransferChannel, leg: Transfer, mem_bytes: int,
                op: str, leg_name: str, label: str):
@@ -68,13 +74,22 @@ class TransferEngine:
 
     # --- predictions (uncontended, side-effect free) -------------------- #
     def predict(self, mem_bytes: int, in_host_cache: bool) -> float:
-        return predicted_load_latency(self.spec, mem_bytes, in_host_cache)
+        key = (mem_bytes, in_host_cache)
+        hit = self._pred_memo.get(key)
+        if hit is None:
+            hit = self._pred_memo[key] = predicted_load_latency(
+                self.spec, mem_bytes, in_host_cache)
+        return hit
 
     def predict_host(self, mem_bytes: int) -> float:
         return predicted_host_load_latency(self.spec, mem_bytes)
 
     def predict_peer(self, mem_bytes: int) -> float:
-        return predicted_peer_copy_latency(self.spec, mem_bytes)
+        hit = self._peer_memo.get(mem_bytes)
+        if hit is None:
+            hit = self._peer_memo[mem_bytes] = predicted_peer_copy_latency(
+                self.spec, mem_bytes)
+        return hit
 
     # --- contended transfers (occupy the shared links) ------------------ #
     def begin_device_load(self, now: float, mem_bytes: int,

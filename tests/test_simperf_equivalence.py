@@ -1,0 +1,298 @@
+"""PR-7 fast-path equivalence: the optimized hot paths must be
+decision-for-decision identical to the retained naive reference.
+
+Covers the three tentpole fast paths plus the reorder-head satellite:
+
+  * end-to-end: seeded-random runs (10 seeds x shared/per-device links x
+    replication on/off) produce bit-identical final ``Metrics`` and
+    bit-identical assign/arrange decision streams under ``apply_reference``;
+  * mid-run probes: the epoch-validated pending-time cache equals
+    ``reference_pending_time`` and the cached ``assignment_cost`` equals
+    ``assignment_cost_ref`` at every ticker while residency churns;
+  * ``reorder_head``: the queued-expert-index version picks the same slot as
+    the per-slot pool rescan and emits a ``sched`` trace event on reorder;
+  * delta-scored placement search: never worse than the greedy seed, and the
+    reported cost is an *exact* full-replay cost, not an estimate.
+"""
+import dataclasses
+
+import pytest
+
+from repro.core import (COSERVE, CoServeSystem, Group, Simulation,
+                        SystemPolicy, TierSpec)
+from repro.core.coe import Request
+from repro.core.reference import (ReferenceScheduler, apply_reference,
+                                  reference_pending_time)
+from repro.core.workload import (BoardSpec, build_board_coe,
+                                 make_executor_specs, make_task_requests)
+from repro.core.serving import ExecutorSpec
+from repro.core.workload import device_profile
+from repro.fleet import PlacementPlan, SearchConfig, replay_cost, \
+    search_placement, trace_from_counts
+from repro.obs import Tracer
+
+MB = 1 << 20
+
+# small enough that one paired run costs ~50 ms, thrashy enough that every
+# fast path (loads, evictions, peer copies, arranging) is actually exercised
+EQ_BOARD = BoardSpec(name="Q", n_components=60, n_active=36,
+                     avg_quantity=3.0, n_detection=8, zipf_s=1.6)
+EQ_TIER = TierSpec(name="eq_numa", disk_bw=530e6, host_to_device_bw=12e9,
+                   unified=False, host_cache_bytes=2 << 30,
+                   device_bytes=4 << 30)
+PEER_TIER = dataclasses.replace(EQ_TIER, name="eq_peer", peer_bw=50e9)
+
+
+def build_pair_inputs(seed):
+    coe = build_board_coe(EQ_BOARD, seed=seed)
+    reqs = make_task_requests(EQ_BOARD, 250, seed=seed)
+    return coe, reqs
+
+
+def run_system(seed, policy=COSERVE, links="shared", replication=0,
+               reference=False, decisions=None, sim_hook=None):
+    coe, reqs = build_pair_inputs(seed)
+    pools, specs = make_executor_specs(EQ_TIER, 3, 1)
+    system = CoServeSystem(coe, specs, pools, policy=policy, tier=EQ_TIER,
+                           links=links, replication=replication)
+    if reference:
+        apply_reference(system)
+    if decisions is not None:
+        orig_assign = system.assign
+
+        def recording_assign(req, now):
+            ex = orig_assign(req, now)
+            # executor choice pins assign; the target queue's (expert, size)
+            # profile after insertion pins the arrange (join/new-group) call
+            decisions.append((req.expert_id, ex.id,
+                              tuple((g.expert_id, len(g)) for g in ex.queue)))
+            return ex
+
+        system.assign = recording_assign
+    sim = Simulation(system)
+    if sim_hook is not None:
+        sim_hook(sim, system)
+    sim.submit(reqs)
+    return sim.run()
+
+
+def strip_wall_clock(m):
+    """Metrics minus the wall-clock fields that legitimately differ."""
+    d = dataclasses.asdict(m)
+    for k in ("wall_s", "sched_time", "mgmt_time"):
+        d.pop(k, None)
+    for ex in d.get("per_executor", {}).values():
+        if isinstance(ex, dict):
+            ex.pop("mgmt_time", None)
+    return d
+
+
+# --------------------------------------------------------------------------- #
+# end-to-end bit-identical metrics + decision streams
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("seed", range(10))
+@pytest.mark.parametrize("links", ["shared", "per-device"])
+@pytest.mark.parametrize("replication", [0, 2])
+def test_metrics_bit_identical_to_reference(seed, links, replication):
+    fast = run_system(seed, links=links, replication=replication)
+    ref = run_system(seed, links=links, replication=replication,
+                     reference=True)
+    assert strip_wall_clock(fast) == strip_wall_clock(ref)
+
+
+@pytest.mark.parametrize("policy", [
+    SystemPolicy(name="steal", work_stealing=True),
+    SystemPolicy(name="look", lookahead=3),
+    SystemPolicy(name="look_steal", lookahead=3, work_stealing=True),
+])
+def test_metrics_bit_identical_beyond_paper_policies(policy):
+    """Work stealing and dequeue-time lookahead ride the same fast paths
+    (queued-group index, reorder-head index) — equivalence must hold there
+    too, not just under the paper's default policy."""
+    for seed in (0, 1):
+        fast = run_system(seed, policy=policy)
+        ref = run_system(seed, policy=policy, reference=True)
+        assert strip_wall_clock(fast) == strip_wall_clock(ref)
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_assign_and_arrange_decisions_bit_identical(seed):
+    fast_log, ref_log = [], []
+    run_system(seed, links="per-device", replication=2, decisions=fast_log)
+    run_system(seed, links="per-device", replication=2, decisions=ref_log,
+               reference=True)
+    assert fast_log == ref_log
+    assert len(fast_log) >= 250          # every arrival was recorded
+
+
+# --------------------------------------------------------------------------- #
+# mid-run cache probes (exact equality, while state churns)
+# --------------------------------------------------------------------------- #
+
+def test_pending_time_cache_matches_reference_midrun():
+    probes = []
+
+    def hook(sim, system):
+        def probe(s, now):
+            for ex in system.live_executors():
+                probes.append((ex.pending_time(now),
+                               reference_pending_time(ex, now)))
+        sim.add_ticker(0.05, probe)
+
+    run_system(0, sim_hook=hook)
+    assert len(probes) > 50
+    for fast, ref in probes:
+        assert fast == ref               # bitwise: same summation order
+
+
+def test_assignment_cost_cache_matches_ref_under_churn():
+    """Cached peer-holder resolution vs the naive per-probe pool scan, on a
+    peer-capable two-GPU-pool system while loads/evictions churn residency."""
+    coe = build_board_coe(EQ_BOARD, seed=0)
+    prof = device_profile("gpu", EQ_TIER)
+    specs = [ExecutorSpec("gpu", prof, 512 * MB, "gpu0"),
+             ExecutorSpec("gpu", prof, 512 * MB, "gpu1")]
+    system = CoServeSystem(coe, specs, {"gpu0": 2 << 30, "gpu1": 2 << 30},
+                           policy=COSERVE, tier=PEER_TIER,
+                           links="per-device", replication=2)
+    h = system.hierarchy
+    probes = []
+
+    def probe(sim, now):
+        for eid in list(coe.experts)[::5]:
+            for g in ("gpu0", "gpu1"):
+                probes.append((h.assignment_cost(eid, now, group=g,
+                                                 device="gpu"),
+                               h.assignment_cost_ref(eid, now, group=g,
+                                                     device="gpu")))
+            probes.append((h.assignment_cost(eid, now, device="cpu"),
+                           h.assignment_cost_ref(eid, now, device="cpu")))
+
+    sim = Simulation(system)
+    sim.add_ticker(0.05, probe)
+    sim.submit(make_task_requests(EQ_BOARD, 250, seed=0))
+    sim.run()
+    assert len(probes) > 200
+    for fast, ref in probes:
+        assert fast == ref
+
+
+# --------------------------------------------------------------------------- #
+# reorder_head: index vs per-slot rescan, plus the trace event
+# --------------------------------------------------------------------------- #
+
+def _reorder_fixture(tracer=None):
+    coe = build_board_coe(EQ_BOARD, seed=0)
+    pools, specs = make_executor_specs(EQ_TIER, 1, 0)
+    system = CoServeSystem(coe, specs, pools,
+                           policy=SystemPolicy(name="look", lookahead=3),
+                           tier=EQ_TIER, tracer=tracer)
+    ex = system.executors[0]
+    resident = [eid for eid in coe.experts if eid in ex.pool]
+    cold = [eid for eid in coe.experts if eid not in ex.pool]
+    assert resident and len(cold) >= 2
+    # head cold, slot 1 cold, slot 2 resident -> reorder must lift slot 2
+    for eid in (cold[0], cold[1], resident[0]):
+        ex.queue.append(Group(eid, [Request(id=len(ex.queue),
+                                            expert_id=eid)]))
+    return system, ex
+
+
+def test_reorder_head_matches_reference_decision():
+    fast_sys, fast_ex = _reorder_fixture()
+    ref_sys, ref_ex = _reorder_fixture()
+    ref_sched = ReferenceScheduler(list(ref_sys.scheduler.executors),
+                                   ref_sys.scheduler.policy)
+    before = [g.expert_id for g in fast_ex.queue]
+    fast_sys.scheduler.reorder_head(fast_ex, now=1.0)
+    ref_sched.reorder_head(ref_ex, now=1.0)
+    after_fast = [g.expert_id for g in fast_ex.queue]
+    after_ref = [g.expert_id for g in ref_ex.queue]
+    assert after_fast == after_ref
+    assert after_fast != before                 # the reorder actually fired
+    assert after_fast[0] == before[2]           # resident slot lifted to head
+
+
+def test_reorder_head_emits_sched_trace_event():
+    tracer = Tracer(level="full")
+    system, ex = _reorder_fixture(tracer=tracer)
+    system.scheduler.reorder_head(ex, now=1.0)
+    evs = [e for e in tracer.events
+           if e.kind == "sched" and e.attrs.get("mode") == "reorder"]
+    assert len(evs) == 1
+    assert evs[0].attrs["executor"] == ex.id
+    assert evs[0].attrs["slot"] == 2
+    assert evs[0].name == ex.queue[0].expert_id
+
+
+def test_reorder_head_no_event_when_nothing_to_reorder():
+    tracer = Tracer(level="full")
+    system, ex = _reorder_fixture(tracer=tracer)
+    ex.queue.pop()                              # only cold experts remain
+    system.scheduler.reorder_head(ex, now=1.0)
+    assert not [e for e in tracer.events if e.kind == "sched"
+                and e.attrs.get("mode") == "reorder"]
+
+
+# --------------------------------------------------------------------------- #
+# delta-scored placement search: exact, never worse
+# --------------------------------------------------------------------------- #
+
+def _search_fixture(seed=0):
+    import numpy as np
+    from repro.core import CoEModel, ExpertSpec, RoutingModule
+    rng = np.random.RandomState(seed)
+    coe = CoEModel([ExpertSpec(id=f"e{i:03d}", arch="resnet101",
+                               mem_bytes=100 * MB,
+                               usage_prob=float(rng.rand()))
+                    for i in range(14)],
+                   RoutingModule(lambda d: "e000"))
+    caps = {"g0": 500 * MB, "g1": 500 * MB}
+    counts = {e: float(rng.exponential(10.0)) for e in coe.experts}
+    trace = trace_from_counts(counts, length=150, exec_s=0.006)
+    return coe, caps, trace
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_delta_search_cost_is_exact_replay_not_estimate(seed):
+    coe, caps, trace = _search_fixture(seed)
+    cfg = SearchConfig(iterations=120, seed=seed, replication=1)
+    assert cfg.scoring == "delta"               # the new default
+    res = search_placement(coe, caps, trace, PEER_TIER, links="per-device",
+                           config=cfg)
+    assert res.scoring == "delta"
+    assert res.full_replays >= 1
+    # the reported cost must be a full-replay number for the returned plan —
+    # estimates may only steer proposals, never be reported as the result
+    assert res.cost == replay_cost(coe, caps, res.plan, trace, PEER_TIER,
+                                   links="per-device")
+    assert res.cost <= res.seed_cost + 1e-9
+
+
+def test_delta_and_full_scoring_both_beat_seed_on_divergence():
+    coe, caps, trace = _search_fixture(1)
+    results = {}
+    for scoring in ("delta", "full"):
+        cfg = SearchConfig(iterations=150, seed=1, replication=1,
+                           scoring=scoring)
+        results[scoring] = search_placement(coe, caps, trace, PEER_TIER,
+                                            links="per-device", config=cfg)
+    for scoring, res in results.items():
+        assert res.cost <= res.seed_cost + 1e-9, scoring
+        assert res.scoring == scoring
+        assert res.cost == replay_cost(coe, caps, res.plan, trace, PEER_TIER,
+                                       links="per-device")
+
+
+def test_delta_search_respects_time_budget():
+    coe, caps, trace = _search_fixture(2)
+    cfg = SearchConfig(iterations=100_000, seed=2, time_budget_s=0.25)
+    res = search_placement(coe, caps, trace, PEER_TIER, links="per-device",
+                           config=cfg)
+    # the budget stops the walk long before 100k proposals; the result is
+    # still exact and never worse than the seed
+    assert res.proposed < 100_000
+    assert res.cost <= res.seed_cost + 1e-9
+    assert res.cost == replay_cost(coe, caps, res.plan, trace, PEER_TIER,
+                                   links="per-device")

@@ -1,0 +1,74 @@
+"""Fail on simulator-performance regressions (the CI simperf gate).
+
+    python tools/check_simperf.py BASELINE.json CURRENT.json [--max-drop 0.30]
+
+Compares the always-present ``smoke`` row of two ``BENCH_simperf.json``
+artifacts — the committed baseline vs a fresh ``--suite simperf --smoke``
+run. The row is a *fixed* workload (same devices, same request count in
+every mode), so the comparison is like for like; the gate is relative with
+a generous tolerance because CI hosts are noisy:
+
+  * ``events_per_sec`` must not drop more than ``--max-drop`` (default 30%)
+  * the simulated results themselves (events processed, completions,
+    switches) must be *identical* — a drift there is a correctness bug in
+    the fast path, not noise, and fails regardless of tolerance
+
+Exit code 1 explains what regressed.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+EXACT_FIELDS = ("devices", "requests", "completed", "switches",
+                "events_processed")
+
+
+def load_smoke(path: str) -> dict:
+    with open(path, encoding="utf-8") as f:
+        data = json.load(f)
+    smoke = data.get("smoke")
+    if not isinstance(smoke, dict):
+        sys.exit(f"{path}: no 'smoke' section — not a BENCH_simperf.json?")
+    return smoke
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline", help="committed BENCH_simperf.json")
+    ap.add_argument("current", help="freshly generated BENCH_simperf.json")
+    ap.add_argument("--max-drop", type=float, default=0.30,
+                    help="max fractional events/sec drop vs baseline")
+    args = ap.parse_args(argv)
+
+    base, cur = load_smoke(args.baseline), load_smoke(args.current)
+    problems = []
+    for field in EXACT_FIELDS:
+        if base.get(field) != cur.get(field):
+            problems.append(
+                f"smoke.{field} drifted: baseline {base.get(field)!r} vs "
+                f"current {cur.get(field)!r} (simulated results must be "
+                "identical — fast-path correctness bug?)")
+    b_rate, c_rate = base.get("events_per_sec"), cur.get("events_per_sec")
+    if not b_rate or not c_rate:
+        problems.append(f"missing events_per_sec (baseline {b_rate!r}, "
+                        f"current {c_rate!r})")
+    else:
+        drop = 1.0 - c_rate / b_rate
+        msg = (f"smoke events/sec: baseline {b_rate}, current {c_rate} "
+               f"({'-' if drop >= 0 else '+'}{abs(drop):.1%})")
+        if drop > args.max_drop:
+            problems.append(msg + f" exceeds --max-drop {args.max_drop:.0%}")
+        else:
+            print("OK: " + msg)
+    if problems:
+        print("simperf regression gate FAILED:", file=sys.stderr)
+        for p in problems:
+            print(f"  - {p}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
