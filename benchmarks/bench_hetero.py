@@ -1,0 +1,135 @@
+"""Heterogeneous CPU co-execution suite: host-exec on/off under memory
+pressure.
+
+The paper serves CoE catalogs 4.5-12x larger than device memory by keeping
+cold experts in host DRAM and on disk. With ``SystemPolicy.host_exec`` the
+host tier stops being cache-only: a host-resident expert can execute in
+place on the CPU executors (slower service) instead of stalling the device
+on a PCIe/disk load, and the scheduler prices
+min(execute_on_host, load_then_execute_on_device) per arrival.
+
+This suite sweeps memory pressure (catalog bytes / device pool bytes) at
+the paper's 4.5x/8x/12x points and runs the *same* workload with host
+co-execution off and on:
+
+  * ``off`` — the cache-only host tier (bit-identical to the pre-hetero
+    scheduler; pinned by tests/test_hetero.py)
+  * ``on``  — host co-execution enabled, same placement, same arrivals
+
+Per point: stall time, switch count, throughput, completions that finished
+on the CPU executors, plus the standard simulator-cost fields. The
+acceptance bar (tools/check_hetero.py, run in CI) is that at least one
+sweep point shows BOTH lower stall time AND higher throughput with
+host-exec on, and that the fixed ``smoke`` rows — simulated results are
+deterministic and host-independent — stay identical to the committed
+artifact.
+
+Emits ``BENCH_hetero.json`` (suite key ``hetero`` in benchmarks.run).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+
+from repro.core import COSERVE, CoServeSystem, Simulation
+from repro.core.workload import (BoardSpec, build_board_coe,
+                                 make_executor_specs, make_task_requests)
+from repro.memory import NUMA
+
+from benchmarks.common import perf_fields, suite_perf
+
+OUT_PATH = "BENCH_hetero.json"
+
+# mid-sized Zipf-hot catalog: big enough that every pressure point keeps a
+# long cold tail resident in host DRAM, small enough for a CI smoke run
+BOARD = BoardSpec(name="HET", n_components=160, n_active=100,
+                  avg_quantity=2.5, n_detection=16, zipf_s=1.4)
+
+# NUMA-class host/device split with a modest SSD: demand misses that fall
+# through the host tier are expensive, which is exactly the regime where
+# executing in place on the CPU pays
+TIER = dataclasses.replace(NUMA, name="hetero_numa", disk_bw=1500e6)
+
+PRESSURES = (4.5, 8.0, 12.0)          # catalog bytes / device pool bytes
+SMOKE_PRESSURE = 8.0
+SMOKE_REQUESTS = 150                  # fixed CI-gate workload
+N_GPU, N_CPU = 3, 1                   # paper NUMA default
+INTERVAL = 0.004
+
+HOST_EXEC = dataclasses.replace(COSERVE, host_exec=True)
+
+
+def _catalog_bytes() -> int:
+    return sum(e.mem_bytes for e in build_board_coe(BOARD).experts.values())
+
+
+def _run(n_requests: int, gpu_pool_bytes: int, host_exec: bool) -> dict:
+    coe = build_board_coe(BOARD)
+    pools, specs = make_executor_specs(TIER, N_GPU, N_CPU,
+                                       gpu_pool_bytes=gpu_pool_bytes)
+    policy = HOST_EXEC if host_exec else COSERVE
+    system = CoServeSystem(coe, specs, pools, policy=policy, tier=TIER)
+    sim = Simulation(system)
+    sim.submit(make_task_requests(BOARD, n_requests, interval=INTERVAL))
+    m = sim.run()
+    host_completed = sum(s["completed"] for eid, s in m.per_executor.items()
+                         if eid.startswith("cpu"))
+    return {"completed": m.completed,
+            "switches": m.switches,
+            "throughput": round(m.throughput, 2),
+            "stall_s": round(m.stall_time, 3),
+            "makespan_s": round(m.makespan, 2),
+            "avg_latency_s": round(m.avg_latency, 4),
+            "host_completed": host_completed,
+            **perf_fields(m)}
+
+
+def _sweep(n_requests: int) -> dict:
+    catalog = _catalog_bytes()
+    out = {}
+    for pressure in PRESSURES:
+        pool = int(catalog / pressure)
+        off = _run(n_requests, pool, host_exec=False)
+        on = _run(n_requests, pool, host_exec=True)
+        row = {"gpu_pool_bytes": pool, "off": off, "on": on}
+        if off["stall_s"] > 0:
+            row["stall_reduction"] = round(
+                1.0 - on["stall_s"] / off["stall_s"], 3)
+        if off["throughput"] > 0:
+            row["throughput_gain"] = round(
+                on["throughput"] / off["throughput"], 3)
+        out[f"{pressure}x"] = row
+    return out
+
+
+def run(quick: bool = False, smoke: bool = False) -> dict:
+    n = SMOKE_REQUESTS if smoke else (400 if quick else 1000)
+    catalog = _catalog_bytes()
+    smoke_pool = int(catalog / SMOKE_PRESSURE)
+    out: dict = {"board": BOARD.name, "tier": TIER.name,
+                 "executors": f"{N_GPU}g+{N_CPU}c",
+                 "catalog_bytes": catalog,
+                 "requests": n,
+                 "sweep": _sweep(n),
+                 # the CI gate rows: a fixed workload in every mode, and
+                 # simulated results are deterministic — the committed
+                 # artifact and a smoke run must match exactly
+                 # (tools/check_hetero.py)
+                 "smoke": {"pressure": SMOKE_PRESSURE,
+                           "requests": SMOKE_REQUESTS,
+                           "off": _run(SMOKE_REQUESTS, smoke_pool,
+                                       host_exec=False),
+                           "on": _run(SMOKE_REQUESTS, smoke_pool,
+                                      host_exec=True)}}
+    wins = [k for k, row in out["sweep"].items()
+            if row["on"]["stall_s"] < row["off"]["stall_s"]
+            and row["on"]["throughput"] > row["off"]["throughput"]]
+    out["win_points"] = wins
+    out["perf"] = suite_perf(out)
+    with open(OUT_PATH, "w") as f:
+        json.dump(out, f, indent=1)
+    return out
+
+
+if __name__ == "__main__":
+    print(json.dumps(run(quick=True), indent=1))

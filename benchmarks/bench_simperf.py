@@ -15,7 +15,11 @@ as a mysteriously slow CI run:
 2. Search-proposal rates: ``search_placement`` under one fixed wall-clock
    budget with delta scoring vs full-replay scoring on a placement-suite
    style trace — the delta scorer must evaluate >= 10x more proposals.
-3. An always-present ``smoke`` row (fixed small workload, fast path only)
+3. Telemetry quantile rates: the lockstep ``P2QuantileBank`` behind
+   ``LatencyTracker`` vs one ``P2Quantile`` per q fed the same stream
+   (numerically identical — asserted here, pinned by tests), reported as
+   observations/sec and a speedup ratio.
+4. An always-present ``smoke`` row (fixed small workload, fast path only)
    that CI's regression gate (``tools/check_simperf.py``) compares against
    the committed artifact.
 
@@ -142,6 +146,46 @@ def _search_rates(time_budget_s: float) -> dict:
     return out
 
 
+def _telemetry_rates(n_obs: int) -> dict:
+    """Lockstep quantile bank vs per-q scalar estimators on one stream.
+
+    obs/sec only — deliberately no events_processed/wall_s keys, so
+    ``collect_perf_rows`` doesn't mistake these for simulator rows."""
+    import numpy as np
+
+    from repro.serve.telemetry import LatencyTracker, P2Quantile
+
+    xs = [float(v) for v in np.exp(np.random.RandomState(3).randn(n_obs)
+                                   * 0.4)]
+
+    tracker = LatencyTracker()
+    t0 = time.perf_counter()
+    for x in xs:
+        tracker.add(x)
+    bank_wall = time.perf_counter() - t0
+
+    refs = [P2Quantile(q) for q in LatencyTracker.QS]
+    t0 = time.perf_counter()
+    for x in xs:
+        for e in refs:
+            e.add(x)
+    ref_wall = time.perf_counter() - t0
+
+    # numerically identical is a *tested* invariant — assert the cheap
+    # proxy here so a drifted benchmark build fails loudly
+    assert tracker._est.values() == [e.value() for e in refs], \
+        "P2QuantileBank / P2Quantile divergence"
+    out = {"observations": n_obs,
+           "bank_obs_per_sec": round(n_obs / bank_wall)
+           if bank_wall > 0 else None,
+           "scalar_obs_per_sec": round(n_obs / ref_wall)
+           if ref_wall > 0 else None}
+    if out["bank_obs_per_sec"] and out["scalar_obs_per_sec"]:
+        out["speedup"] = round(
+            out["bank_obs_per_sec"] / out["scalar_obs_per_sec"], 2)
+    return out
+
+
 def run(quick: bool = False, smoke: bool = False) -> dict:
     devices = SMOKE_DEVICES if smoke else DEVICES
     n = 200 if smoke else (300 if quick else 600)
@@ -150,6 +194,7 @@ def run(quick: bool = False, smoke: bool = False) -> dict:
                  "requests": n,
                  "sweep": _sweep(devices, n, repeats=1 if smoke else 3),
                  "search": _search_rates(0.1 if smoke else 0.5),
+                 "telemetry": _telemetry_rates(50_000 if smoke else 200_000),
                  # the CI gate row: fixed workload in every mode, so the
                  # committed full-run artifact and the smoke run compare
                  # like for like (tools/check_simperf.py)

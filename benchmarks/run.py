@@ -24,9 +24,10 @@ import sys
 import time
 
 from benchmarks import (bench_ablation, bench_batch_latency, bench_executors,
-                        bench_fleet, bench_memory, bench_memory_alloc,
-                        bench_online, bench_overhead, bench_placement,
-                        bench_simperf, bench_throughput, bench_kernels)
+                        bench_fleet, bench_hetero, bench_memory,
+                        bench_memory_alloc, bench_online, bench_overhead,
+                        bench_placement, bench_simperf, bench_throughput,
+                        bench_kernels)
 from repro.obs import log as obslog
 
 log = obslog.get_logger("bench")
@@ -71,6 +72,9 @@ SUITES_INFO = {
     "simperf": (bench_simperf.run,
                 "simulator wall-clock performance: fast path vs naive "
                 "reference at 4-128 devices + search-proposal rates"),
+    "hetero": (bench_hetero.run,
+               "heterogeneous CPU co-execution on/off across memory-"
+               "pressure sweeps: stall time, switches, throughput"),
 }
 
 SUITES = {key: runner for key, (runner, _) in SUITES_INFO.items()}

@@ -86,6 +86,8 @@ def resolve_policy(spec: DeploymentSpec) -> SystemPolicy:
             policy, prefetch_trigger=spec.memory.prefetch_trigger)
     if spec.policy.evict is not None:
         policy = dataclasses.replace(policy, evict=spec.policy.evict)
+    if spec.hetero.host_exec:
+        policy = dataclasses.replace(policy, host_exec=True)
     return policy
 
 
@@ -137,11 +139,12 @@ def build_layout(spec: DeploymentSpec, tier: TierSpec
     devices = spec.fleet.devices
     if POLICIES[spec.policy.name].assign == "single":
         n_gpu, n_cpu, devices = 1, 0, 1
+    mult = spec.hetero.cpu_multiplier
     if devices > 1:
         fleet = FleetSpec(n_devices=devices, gpu_per_device=n_gpu,
                           n_cpu=n_cpu, links=spec.fleet.links)
-        return build_fleet(tier, fleet)
-    return make_executor_specs(tier, n_gpu, n_cpu)
+        return build_fleet(tier, fleet, cpu_multiplier=mult)
+    return make_executor_specs(tier, n_gpu, n_cpu, cpu_multiplier=mult)
 
 
 def make_requests(spec: DeploymentSpec) -> List[Request]:
@@ -184,11 +187,31 @@ def _resolve_placement(spec: DeploymentSpec, coe: CoEModel, pools, specs,
         # (pre-assessed P(use), already weighted by tenant rates)
         trace = trace_from_usage(coe, length=512)
     greedy = PlacementPlan.build(coe, pools, replication=fleet.replication)
+    config = SearchConfig(seed=spec.seed, replication=fleet.replication)
+    if spec.hetero.host_place:
+        # the CPU arm's service-time penalty comes from the profiled CPU
+        # service-time model, not a hand-picked constant
+        config = dataclasses.replace(
+            config, host_place=True, host_exec_factor=_host_exec_factor(specs))
     res = search_placement(
         coe, pools, trace, tier, links=fleet.links,
         pool_devices=validate_pool_groups(specs), seed_plan=greedy,
-        config=SearchConfig(seed=spec.seed, replication=fleet.replication))
+        config=config)
     return res.plan, res.snapshot()
+
+
+def _host_exec_factor(specs) -> float:
+    """CPU service time as a multiple of device time, read off the profiled
+    ``ArchProfile.cpu_k`` line of the first accelerator spec (falls back to
+    the SearchConfig default when no CPU profile was taken)."""
+    for s in specs:
+        if s.device in ("host", "cpu"):
+            continue
+        profs = s.profile.arch_profiles
+        prof = profs.get("resnet101") or next(iter(profs.values()), None)
+        if prof is not None and prof.k > 0 and prof.cpu_k > 0:
+            return prof.cpu_k / prof.k
+    return SearchConfig().host_exec_factor
 
 
 # --------------------------------------------------------------------------- #
@@ -297,9 +320,24 @@ def build_real_system(n_components: int = 24, n_detection: int = 4,
     tier = TierSpec(name="local", unified=True, host_cache_bytes=0,
                     device_bytes=pool_experts * mem + 4 * mem)
     sample = _tiny_params(jax.random.PRNGKey(9), 64, d_hidden, 2)
+
+    # CPU service-time line, measured with the same runner pinned to the
+    # host backend (paper §4.1's heterogeneous serving premise)
+    cpu_dev = jax.devices("cpu")[0]
+    cpu_sample = jax.device_put(sample, cpu_dev)
+
+    def run_batch_cpu(n: int) -> float:
+        x = jax.device_put(np.zeros((n, 64), np.float32), cpu_dev)
+        fn = apply_fns["tiny_cls"]
+        fn(cpu_sample, x)  # warm
+        t0 = _t.perf_counter()
+        jax.block_until_ready(fn(cpu_sample, x))
+        return _t.perf_counter() - t0
+
     prof = microbenchmark_arch("tiny_cls", run_batch_factory(sample), mem,
                                act_bytes_per_item=64 * 4, tier=tier,
-                               batch_sizes=(1, 2, 4, 8), repeats=2)
+                               batch_sizes=(1, 2, 4, 8), repeats=2,
+                               run_batch_cpu=run_batch_cpu)
     det_prof = dataclasses.replace(prof, arch="tiny_det")
     dev_prof = DeviceProfile(device="gpu", tier=tier,
                              arch_profiles={"tiny_cls": prof,

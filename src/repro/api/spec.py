@@ -331,6 +331,34 @@ class PolicySection(_Section):
 
 
 @dataclasses.dataclass(frozen=True)
+class HeteroSection(_Section):
+    """Heterogeneous CPU co-execution: host-DRAM-resident experts execute in
+    place on the CPU executors instead of stalling on a disk/PCIe load, and
+    the scheduler prices min(execute_on_host, load_then_execute_on_device)
+    per arrival. Off by default — every cost and decision stream is then
+    bit-identical to the cache-only host tier."""
+    host_exec: bool = False          # run host-resident experts on the CPU
+    cpu_multiplier: float = 0.0      # sim: derive the CPU service-time model
+    #                                  as device-time x this (0 = the static
+    #                                  measured CPU constants; real mode
+    #                                  measures via run_batch_cpu instead)
+    host_place: bool = False         # placement search may plan deliberate
+    #                                  CPU residents (the host_place move);
+    #                                  needs fleet.placement="search"
+
+    _FIELD_TYPES = {"host_exec": bool, "cpu_multiplier": float,
+                    "host_place": bool}
+
+    def __post_init__(self):
+        _check(self.cpu_multiplier >= 0, "hetero.cpu_multiplier",
+               "must be >= 0 (0 uses the static CPU constants)")
+        _check(not (self.host_place and not self.host_exec),
+               "hetero.host_place",
+               "planning deliberate CPU residents only pays off when they "
+               "can execute in place — set hetero.host_exec=true too")
+
+
+@dataclasses.dataclass(frozen=True)
 class ServingSection(_Section):
     """How requests reach the system: batch sim, real JAX execution, or the
     streaming online gateway with admission/SLO/autoscaling."""
@@ -470,6 +498,7 @@ class DeploymentSpec(_Section):
         default_factory=WorkloadSection)
     observability: ObservabilitySection = dataclasses.field(
         default_factory=ObservabilitySection)
+    hetero: HeteroSection = dataclasses.field(default_factory=HeteroSection)
     seed: int = 0
     version: int = SCHEMA_VERSION
 
@@ -477,6 +506,7 @@ class DeploymentSpec(_Section):
                     "memory": MemorySection, "policy": PolicySection,
                     "serving": ServingSection, "workload": WorkloadSection,
                     "observability": ObservabilitySection,
+                    "hetero": HeteroSection,
                     "seed": int, "version": int}
 
     # ------------------------------------------------------------------ #
@@ -518,6 +548,22 @@ class DeploymentSpec(_Section):
                "devices/links/replication/peer_bw_gbps/placement drive the "
                'simulated fleet; serving.mode="real" and engine="real" run '
                "the single-device shared-link topology")
+
+        if self.hetero.host_exec and kind != "tiny":
+            _check(self.fleet.cpu >= 1, "hetero.host_exec",
+                   "host co-execution needs at least one CPU executor — "
+                   f"set fleet.cpu >= 1 (got {self.fleet.cpu})")
+            _check(self.policy.name not in ("samba", "samba_fifo"),
+                   "hetero.host_exec",
+                   f"the single-executor baseline {self.policy.name!r} "
+                   "normalizes to one device executor and can never route "
+                   "to the CPU — use a multi-executor policy")
+        _check(not (self.hetero.host_place
+                    and self.fleet.placement != "search"),
+               "hetero.host_place",
+               "deliberate CPU residents are planned by the placement "
+               f'search — set fleet.placement="search" (got '
+               f"{self.fleet.placement!r})")
 
         known = self.model.board_names()
         if kind == "board":

@@ -45,7 +45,10 @@ class SimEngine:
     # --- latency model (uncontended predictions) ------------------------ #
     def load_latency(self, ex, expert_id: str) -> float:
         if ex is not None and ex.device in ("host", "cpu"):
-            return self.hierarchy.predict_host_load(expert_id)
+            h = self.hierarchy
+            if h.host_exec_enabled and h.in_host(expert_id):
+                return 0.0             # host co-execution: runs in place
+            return h.predict_host_load(expert_id)
         group = ex.link_group if ex is not None else ""
         return self.hierarchy.predict_device_load(expert_id, group)
 
@@ -186,6 +189,10 @@ class RealEngine:
         self._pending: Dict[str, dict] = {}
         self._lock = threading.Lock()
         self.measured_load_time = 0.0
+        # heterogeneous CPU co-execution (policy.host_exec): host/CPU
+        # executors run host-resident experts straight from the DRAM store —
+        # no transfer thread, no deserialization round-trip
+        self.host_exec_enabled = False
 
     # --- topology binding (one transfer thread per transfer channel) ---- #
     def bind_topology(self, topology, hierarchy=None) -> None:
@@ -219,9 +226,16 @@ class RealEngine:
                 worker = self._workers[name] = _TransferWorker()
             return worker
 
+    def _host_exec_hit(self, ex, expert_id: str) -> bool:
+        return (self.host_exec_enabled and ex is not None
+                and getattr(ex, "device", "") in ("host", "cpu")
+                and expert_id in self.store.host)
+
     def load_latency(self, ex, expert_id: str) -> float:
         # prediction for scheduling: profiled value (derived from the
         # TransferEngine formula at profiling time)
+        if self._host_exec_hit(ex, expert_id):
+            return 0.0                 # host co-execution: runs in place
         spec = self.coe.spec(expert_id)
         prof = ex.profile(spec.arch)
         return prof.load_latency_host if expert_id in self.store.host \
@@ -244,6 +258,12 @@ class RealEngine:
                 self.measured_load_time += time.perf_counter() - t0
 
     def load(self, ex, expert_id: str, now: float = 0.0) -> float:
+        if self._host_exec_hit(ex, expert_id):
+            # execute in place on the CPU: the host-store params ARE the
+            # executable params — no worker round-trip, nothing pending
+            with self._lock:
+                self.device_params[expert_id] = self.store.host[expert_id]
+            return 0.0
         worker = self._worker_for(self._channel_name(ex, expert_id))
         handle = worker.submit(lambda: self._transfer(expert_id))
         with self._lock:

@@ -281,9 +281,13 @@ class Executor:
 
     def _load_source(self, expert_id: str) -> str:
         """Which tier this load will be served from ("peer"|"host"|"disk"),
-        mirroring ``MemoryHierarchy.begin_device_load``'s resolution order."""
+        mirroring ``MemoryHierarchy.begin_device_load``'s resolution order
+        (and ``begin_host_load``'s host-exec short-circuit for CPU
+        executors)."""
         h = self.hierarchy
         if h is None or self.device in ("host", "cpu"):
+            if h is not None and h.host_exec_enabled and h.in_host(expert_id):
+                return "host"          # runs in place from DRAM, no disk leg
             return "disk"
         if h.peer_source(expert_id, self.pool.group) is not None:
             return "peer"
@@ -322,8 +326,10 @@ class Executor:
         self.busy_until = now + lat
         self.stats.busy_time += lat
         if self.tracer.full:
+            on = "host" if self.device in ("host", "cpu") else "device"
             self.tracer.emit(now, "exec", self.id, eid, dur=lat,
-                             requests=[r.id for r in batch], n=len(batch))
+                             requests=[r.id for r in batch], n=len(batch),
+                             on=on)
         if self.hierarchy is not None:
             # dependency-aware cross-tier prefetch: while this expert runs,
             # promote its likely downstream experts disk -> host

@@ -33,9 +33,21 @@ class ArchProfile:
     act_bytes_per_item: int   # intermediate-result bytes per batched item
     load_latency_host: float = 0.0   # host cache -> device
     load_latency_disk: float = 0.0   # disk -> device
+    # CPU service-time model (heterogeneous co-execution): what the SAME
+    # architecture costs on the host CPU pool — measured by
+    # ``microbenchmark_arch(run_batch_cpu=...)`` in real mode, derived from
+    # the device time via ``hetero.cpu_multiplier`` in sim. 0.0 = unprofiled
+    # (host co-execution then keeps the static CPU constants).
+    cpu_k: float = 0.0
+    cpu_b: float = 0.0
 
     def exec_latency(self, n: int) -> float:
         return self.k * n + self.b if n > 0 else 0.0
+
+    def cpu_exec_latency(self, n: int) -> float:
+        """Linear CPU service-time model K·n+B of this architecture on the
+        host pool (0.0 when no CPU profile was taken)."""
+        return self.cpu_k * n + self.cpu_b if n > 0 else 0.0
 
 
 @dataclasses.dataclass
@@ -86,18 +98,30 @@ def microbenchmark_arch(
         tier: TierSpec,
         batch_sizes: Sequence[int] = (1, 2, 3, 4, 6, 8, 12, 16),
         repeats: int = 3,
+        run_batch_cpu: Optional[Callable[[int], float]] = None,
 ) -> ArchProfile:
     """Profile one architecture with a real runner (``run_batch(n)`` executes
-    a batch of n and returns seconds; called on real samples)."""
+    a batch of n and returns seconds; called on real samples).
+    ``run_batch_cpu`` (heterogeneous co-execution) runs the same batch on the
+    host CPU pool; when given, the profile carries a measured CPU
+    service-time line (``cpu_k``/``cpu_b``) next to the device one."""
     lats = []
     for n in batch_sizes:
         samples = [run_batch(n) for _ in range(repeats)]
         lats.append(float(np.median(samples)))
     k, b = fit_latency_line(batch_sizes, lats)
     max_batch = find_max_batch(batch_sizes, lats)
+    cpu_k = cpu_b = 0.0
+    if run_batch_cpu is not None:
+        cpu_lats = []
+        for n in batch_sizes:
+            samples = [run_batch_cpu(n) for _ in range(repeats)]
+            cpu_lats.append(float(np.median(samples)))
+        cpu_k, cpu_b = fit_latency_line(batch_sizes, cpu_lats)
     return ArchProfile(
         arch=arch, k=k, b=b, max_batch=max_batch, mem_bytes=mem_bytes,
         act_bytes_per_item=act_bytes_per_item,
+        cpu_k=cpu_k, cpu_b=cpu_b,
         # per-tier switch costs come from the one TransferEngine formula
         load_latency_host=predicted_load_latency(tier, mem_bytes,
                                                  in_host_cache=True),

@@ -104,6 +104,14 @@ class RequestScheduler:
         genuinely looks more expensive than a replica-holding one, and all
         consumers (scheduler, TransferEngine, prefetcher) agree on the same
         contended-channel state.
+
+        Heterogeneous CPU co-execution (``policy.host_exec``) also lives in
+        that hierarchy cost: a host-DRAM-resident expert is ~free to switch
+        onto a host/CPU executor (it runs in place), so the makespan argmin
+        over the executor set prices min(execute_on_host,
+        load_then_execute_on_device) per arrival with no extra branch here —
+        the CPU arm simply wins when its switch cost plus its (slower)
+        exec latency beats every device arm's load-plus-exec.
         """
         if queued_same:
             return 0.0

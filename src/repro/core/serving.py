@@ -44,6 +44,12 @@ class SystemPolicy:
     host_cache_policy: str = "prob"
     work_stealing: bool = False       # beyond-paper straggler mitigation
     lookahead: int = 0                # beyond-paper dequeue-time window
+    host_exec: bool = False           # heterogeneous CPU co-execution:
+    #                                   host-DRAM-resident experts run in
+    #                                   place on host/CPU executors instead
+    #                                   of paying a disk reload (the
+    #                                   scheduler prices min(execute-on-host,
+    #                                   load-then-execute-on-device))
 
 
 COSERVE = SystemPolicy()
@@ -147,7 +153,13 @@ class CoServeSystem:
         self.pools = self.hierarchy.pools
         # channel-leg events (xfer) are emitted where the legs are issued
         self.hierarchy.transfer.tracer = self.tracer
+        # heterogeneous CPU co-execution: the hierarchy prices host-resident
+        # experts as free-to-run on CPU executors, and engines short-circuit
+        # their "load" (off by default — hetero=off costs are bit-identical)
+        self.hierarchy.host_exec_enabled = policy.host_exec
         self.engine = engine or SimEngine(coe, tier, hierarchy=self.hierarchy)
+        if policy.host_exec and hasattr(self.engine, "host_exec_enabled"):
+            self.engine.host_exec_enabled = True
         bind = getattr(self.engine, "bind_topology", None)
         if bind is not None:     # real backend: one transfer thread per link
             bind(self.hierarchy.topology, self.hierarchy)

@@ -56,21 +56,42 @@ _ACT_BYTES = {
 _MAX_BATCH = {"gpu": 8, "cpu": 5}
 
 
-def default_arch_profile(arch: str, device: str, tier: TierSpec) -> ArchProfile:
+def _cpu_constants(arch: str, tier: TierSpec,
+                   cpu_multiplier: float = 0.0) -> Tuple[float, float]:
+    """The CPU service-time line (K, B) for one architecture: derived from
+    the device time by ``cpu_multiplier`` when set (the sim-mode hetero
+    knob), else the paper's measured CPU constants; NUMA DRAM contention adds
+    the same 10% the static table applies."""
+    if cpu_multiplier > 0:
+        gk, gb = _EXEC_CONSTANTS[(arch, "gpu")]
+        k, b = gk * cpu_multiplier, gb * cpu_multiplier
+    else:
+        k, b = _EXEC_CONSTANTS[(arch, "cpu")]
+    if not tier.unified:
+        k *= 1.1
+    return k, b
+
+
+def default_arch_profile(arch: str, device: str, tier: TierSpec,
+                         cpu_multiplier: float = 0.0) -> ArchProfile:
     k, b = _EXEC_CONSTANTS[(arch, device)]
     mem = ARCH_BYTES[arch]
+    cpu_k, cpu_b = _cpu_constants(arch, tier, cpu_multiplier)
     if device == "cpu":
-        k *= 1.0 if tier.unified else 1.1
+        k, b = cpu_k, cpu_b
     return ArchProfile(
         arch=arch, k=k, b=b, max_batch=_MAX_BATCH[device],
         mem_bytes=mem, act_bytes_per_item=_ACT_BYTES[(arch, device)],
         load_latency_host=load_latency(tier, mem, in_host_cache=True),
         load_latency_disk=load_latency(tier, mem, in_host_cache=False),
+        cpu_k=cpu_k, cpu_b=cpu_b,
     )
 
 
-def device_profile(device: str, tier: TierSpec) -> DeviceProfile:
-    archs = {a: default_arch_profile(a, device, tier) for a in ARCH_BYTES}
+def device_profile(device: str, tier: TierSpec,
+                   cpu_multiplier: float = 0.0) -> DeviceProfile:
+    archs = {a: default_arch_profile(a, device, tier, cpu_multiplier)
+             for a in ARCH_BYTES}
     return DeviceProfile(device=device, tier=tier, arch_profiles=archs)
 
 
@@ -237,7 +258,8 @@ def make_task_requests(board: BoardSpec, n_requests: int,
 
 def make_executor_specs(tier: TierSpec, n_gpu: int, n_cpu: int,
                         pool_fraction: float = 0.75,
-                        gpu_pool_bytes: Optional[int] = None
+                        gpu_pool_bytes: Optional[int] = None,
+                        cpu_multiplier: float = 0.0
                         ) -> Tuple[Dict[str, int], List[ExecutorSpec]]:
     """Build (pools, executor specs) for a device.
 
@@ -246,11 +268,13 @@ def make_executor_specs(tier: TierSpec, n_gpu: int, n_cpu: int,
     ``pool_fraction`` (CoServe-Casual default 75/25), with the batch region
     divided between that device's executors. ``gpu_pool_bytes`` overrides the
     accelerator pool size (CoServe-Best: set from the decay-window search).
+    ``cpu_multiplier`` > 0 derives the CPU service-time model from the
+    device time instead of the static constants (``hetero.cpu_multiplier``).
     """
     pools: Dict[str, int] = {}
     specs: List[ExecutorSpec] = []
-    gpu_prof = device_profile("gpu", tier)
-    cpu_prof = device_profile("cpu", tier)
+    gpu_prof = device_profile("gpu", tier, cpu_multiplier)
+    cpu_prof = device_profile("cpu", tier, cpu_multiplier)
 
     if tier.unified:
         gpu_region = tier.device_bytes * n_gpu // max(1, n_gpu + n_cpu)

@@ -164,6 +164,15 @@ def _device_groups(capacities: Mapping[str, int],
                   if devices.get(g, "gpu") not in ("host", "cpu"))
 
 
+def _host_groups(capacities: Mapping[str, int],
+                 pool_devices: Optional[Mapping[str, str]]) -> List[str]:
+    """The host/CPU pool groups — candidate targets of the ``host_place``
+    move (deliberate CPU residents under heterogeneous co-execution)."""
+    devices = pool_devices or {}
+    return sorted(g for g in capacities
+                  if devices.get(g, "gpu") in ("host", "cpu"))
+
+
 @dataclasses.dataclass
 class _ReplayDetail:
     """Per-event decomposition of one full replay — the anchor the delta
@@ -173,7 +182,14 @@ class _ReplayDetail:
     the tier has no fabric) and the cost actually charged (``paid``), all
     recorded during the anchor replay with the pool busy clocks and channel
     state it really saw. A single-expert move re-prices only that expert's
-    events against these frozen backgrounds."""
+    events against these frozen backgrounds.
+
+    With host co-execution columns (``host_place``), ``groups`` carries the
+    device groups first and the host/CPU groups after; ``host_set`` marks
+    the host columns, whose events pay ``exec_pen`` (the extra CPU service
+    time over the device exec constant) on top of their wait/switch, and
+    whose ``hostmiss`` column is the host-arm assignment cost (never the
+    device PCIe formula). ``peer_wait`` rows stay device-column-only."""
     groups: List[str]
     has_peer: bool = False
     total: float = 0.0
@@ -184,6 +200,8 @@ class _ReplayDetail:
     peer_wait: List[List[float]] = dataclasses.field(default_factory=list)
     peer_pred: Dict[str, float] = dataclasses.field(default_factory=dict)
     events_of: Dict[str, List[int]] = dataclasses.field(default_factory=dict)
+    host_set: FrozenSet[str] = frozenset()
+    exec_pen: float = 0.0
 
     @property
     def mean(self) -> float:
@@ -194,18 +212,32 @@ def _replay(coe: "CoEModel", capacities: Mapping[str, int],
             plan: PlacementPlan, trace: WorkloadTrace,
             tier: TierSpec, links: str = "shared",
             pool_devices: Optional[Mapping[str, str]] = None,
-            record: bool = False) -> _ReplayDetail:
+            record: bool = False,
+            host_groups: Sequence[str] = (),
+            host_exec_s: float = 0.0) -> _ReplayDetail:
     """The replay loop behind ``replay_cost``; with ``record`` it also
     captures the per-event backgrounds the delta scorer needs. Recording
     adds only *pure* probes (``host_disk_cost``, channel backlog reads), so
-    the accumulated cost is bit-identical with and without it."""
+    the accumulated cost is bit-identical with and without it.
+
+    ``host_groups`` (heterogeneous co-execution) adds the named host/CPU
+    pools as candidate execution arms: their events pay the host-arm
+    assignment cost (free for DRAM residents) plus the extra CPU service
+    time ``host_exec_s - exec_s``, and their misses ride the SSD link only.
+    Empty ``host_groups`` leaves every cost bit-identical to before."""
     groups = _device_groups(capacities, pool_devices)
-    detail = _ReplayDetail(groups=groups)
+    host_list = [g for g in host_groups if g in capacities]
+    detail = _ReplayDetail(groups=groups + host_list,
+                           host_set=frozenset(host_list))
     if not groups or not trace.events:
         return detail
     h = MemoryHierarchy(coe, tier, pools=dict(capacities), links=links,
                         link_groups=groups)
     detail.has_peer = h.topology.has_peer
+    pen = max(0.0, host_exec_s - trace.exec_s) if host_list else 0.0
+    detail.exec_pen = pen
+    if host_list:
+        h.host_exec_enabled = True
     for eid, g in plan.layout():
         pool = h.pools.get(g)
         if pool is not None and eid not in pool \
@@ -217,12 +249,13 @@ def _replay(coe: "CoEModel", capacities: Mapping[str, int],
         for spec in coe.by_usage():
             if spec.mem_bytes <= h.host.free_bytes():
                 h.host.insert(spec.id)
-    busy = {g: 0.0 for g in groups}
+    busy = {g: 0.0 for g in groups + host_list}
     now, cost, n = 0.0, 0.0, 0
     for eid in trace.events:
         if eid not in coe.experts:
             continue
-        best_g, best_wait, best_switch = None, 0.0, 0.0
+        best_g, best_total, best_switch = None, 0.0, 0.0
+        best_host = False
         waits: List[float] = []
         for g in groups:
             switch = 0.0 if eid in h.pools[g] \
@@ -230,15 +263,31 @@ def _replay(coe: "CoEModel", capacities: Mapping[str, int],
             wait = max(0.0, busy[g] - now)
             if record:
                 waits.append(wait)
-            if best_g is None or wait + switch < best_wait + best_switch:
-                best_g, best_wait, best_switch = g, wait, switch
-        cost += best_wait + best_switch
+            total = wait + switch
+            if best_g is None or total < best_total:
+                best_g, best_total, best_switch = g, total, switch
+                best_host = False
+        for g in host_list:
+            # device arms win ties (strict <): hetero only reroutes a batch
+            # when the host arm is genuinely cheaper
+            switch = 0.0 if eid in h.pools[g] \
+                else h.assignment_cost(eid, now, group=g, device="cpu")
+            wait = max(0.0, busy[g] - now)
+            if record:
+                waits.append(wait)
+            total = wait + switch + pen
+            if total < best_total:
+                best_g, best_total, best_switch = g, total, switch
+                best_host = True
+        cost += best_total
         n += 1
         if record:
-            detail.paid.append(best_wait + best_switch)
+            detail.paid.append(best_total)
             detail.wait_at.append(waits)
             detail.hostmiss.append(
-                [h.host_disk_cost(eid, now, group=g) for g in groups])
+                [h.host_disk_cost(eid, now, group=g) for g in groups]
+                + [h.assignment_cost(eid, now, group=g, device="cpu")
+                   for g in host_list])
             if detail.has_peer:
                 detail.peer_wait.append(
                     [max(0.0, h.topology.peer_for(g).busy_until - now)
@@ -248,8 +297,14 @@ def _replay(coe: "CoEModel", capacities: Mapping[str, int],
                         coe.spec(eid).mem_bytes)
             detail.events_of.setdefault(eid, []).append(n - 1)
         if eid not in h.pools[best_g]:
-            h.begin_device_load(eid, now, group=best_g)
-        busy[best_g] = max(now, busy[best_g]) + best_switch + trace.exec_s
+            if best_host:
+                # a host-arm miss is a disk -> DRAM load: SSD link only,
+                # never the device PCIe formula
+                h.begin_host_load(eid, now)
+            else:
+                h.begin_device_load(eid, now, group=best_g)
+        busy[best_g] = max(now, busy[best_g]) + best_switch \
+            + (host_exec_s if best_host else trace.exec_s)
         now += trace.gap_s
     detail.total, detail.n = cost, n
     return detail
@@ -258,7 +313,9 @@ def _replay(coe: "CoEModel", capacities: Mapping[str, int],
 def replay_cost(coe: "CoEModel", capacities: Mapping[str, int],
                 plan: PlacementPlan, trace: WorkloadTrace,
                 tier: TierSpec, links: str = "shared",
-                pool_devices: Optional[Mapping[str, str]] = None) -> float:
+                pool_devices: Optional[Mapping[str, str]] = None,
+                host_groups: Sequence[str] = (),
+                host_exec_s: float = 0.0) -> float:
     """Mean per-event queueing + switch seconds of serving ``trace`` under
     ``plan``'s (static) layout.
 
@@ -269,9 +326,11 @@ def replay_cost(coe: "CoEModel", capacities: Mapping[str, int],
     scheduler's makespan argmin weighs. Misses start real transfers on the
     contended channels (SSD / per-group PCIe / peer ingress), so hot experts
     crowded behind one link keep getting more expensive within the replay,
-    exactly as they would in the simulator."""
+    exactly as they would in the simulator. ``host_groups``/``host_exec_s``
+    add host co-execution arms (see ``_replay``)."""
     return _replay(coe, capacities, plan, trace, tier, links=links,
-                   pool_devices=pool_devices).mean
+                   pool_devices=pool_devices, host_groups=host_groups,
+                   host_exec_s=host_exec_s).mean
 
 
 class _DeltaScorer:
@@ -316,13 +375,20 @@ class _DeltaScorer:
         d = self.d
         waits = d.wait_at[i]
         miss_host = d.hostmiss[i]
-        peer_ok = d.has_peer and bool(pools)
+        host_set = d.host_set
+        # only a *device* copy can seed a peer (pool -> pool) forward — a
+        # host-pool placement never rides the fabric
+        peer_ok = d.has_peer and any(p not in host_set for p in pools)
         peer_base = d.peer_pred.get(eid, 0.0) if peer_ok else 0.0
         best = None
         for gi, g in enumerate(d.groups):
-            if g in pools:
+            if g in host_set:   # host co-execution arm: wait + host-arm
+                #                 switch + the extra CPU service time
+                c = waits[gi] + d.exec_pen if g in pools \
+                    else waits[gi] + miss_host[gi] + d.exec_pen
+            elif g in pools:
                 c = waits[gi]
-            elif peer_ok:   # any planned copy is a sibling of g here
+            elif peer_ok:   # any planned device copy is a sibling of g here
                 c = waits[gi] + peer_base + d.peer_wait[i][gi]
             else:
                 c = waits[gi] + miss_host[gi]
@@ -356,10 +422,20 @@ class SearchConfig:
     time_budget_s: Optional[float] = None   # wall-clock cap on the proposal
     #                              loop (None: iterations/patience only) —
     #                              the benchmark's same-budget comparison
+    host_place: bool = False     # heterogeneous co-execution: offer the
+    #                              host/CPU pools as placement targets (the
+    #                              ``host_place`` move plans deliberate CPU
+    #                              residents for cold-tail experts)
+    host_exec_factor: float = 12.0   # CPU service time as a multiple of the
+    #                              trace's device exec constant (paper
+    #                              Fig. 5: CPU is ~8-20x slower)
 
     def __post_init__(self):
         if self.iterations < 0 or self.patience <= 0:
             raise ValueError("iterations must be >= 0, patience > 0")
+        if self.host_exec_factor <= 0:
+            raise ValueError(f"host_exec_factor must be positive, "
+                             f"got {self.host_exec_factor}")
         if self.replication < 0:
             raise ValueError(f"replication must be >= 0, "
                              f"got {self.replication}")
@@ -411,10 +487,12 @@ class _Mover:
 
     def __init__(self, coe: "CoEModel", capacities: Mapping[str, int],
                  groups: List[str], weights: Mapping[str, int],
-                 rng: np.random.RandomState, cfg: SearchConfig):
+                 rng: np.random.RandomState, cfg: SearchConfig,
+                 host_groups: Sequence[str] = ()):
         self.coe = coe
         self.capacities = capacities
         self.groups = groups
+        self.host_groups = list(host_groups)
         self.weights = weights
         self.rng = rng
         self.cfg = cfg
@@ -441,9 +519,15 @@ class _Mover:
     # ------------------------------------------------------------------ #
     def propose(self, assign: Mapping[str, List[str]]
                 ) -> Optional[Dict[str, List[str]]]:
-        move = self._pick(["replicate", "replicate", "replace", "replace",
-                           "replace", "drop_replica", "drop_cold", "migrate",
-                           "swap", "place"])
+        moves = ["replicate", "replicate", "replace", "replace",
+                 "replace", "drop_replica", "drop_cold", "migrate",
+                 "swap", "place"]
+        if self.host_groups:
+            # appended only when host placement is on, so the RNG stream —
+            # and therefore the whole search trajectory — is unchanged when
+            # it is off
+            moves.append("host_place")
+        move = self._pick(moves)
         return getattr(self, "_" + move)(assign)
 
     def _replicate(self, assign):
@@ -572,6 +656,31 @@ class _Mover:
         new[eid] = [g]
         return new
 
+    def _host_place(self, assign):
+        """Deliberate CPU residents (heterogeneous co-execution): move a
+        cold single-copy device-pool expert — or place an unplaced traced
+        expert — onto a host/CPU pool, where it executes in place. Frees
+        device bytes for hotter experts while the cold tail keeps serving
+        without a disk reload."""
+        free = self._free(assign)
+        cands = []
+        for eid in self.cold:
+            if eid not in self.coe.experts:
+                continue
+            pools = assign.get(eid, ())
+            if pools and (len(pools) != 1 or pools[0] not in self.groups):
+                continue
+            mem = self.coe.spec(eid).mem_bytes
+            cands.extend((eid, g) for g in self.host_groups
+                         if mem <= free[g])
+        picked = self._pick(cands)
+        if picked is None:
+            return None
+        eid, g = picked
+        new = self._copy(assign)
+        new[eid] = [g]
+        return new
+
 
 def search_placement(coe: "CoEModel", capacities: Mapping[str, int],
                      trace: WorkloadTrace, tier: TierSpec,
@@ -601,6 +710,9 @@ def search_placement(coe: "CoEModel", capacities: Mapping[str, int],
     if seed_plan is None:
         seed_plan = PlacementPlan.build(coe, capacities)
     groups = _device_groups(capacities, pool_devices)
+    host_groups = _host_groups(capacities, pool_devices) \
+        if cfg.host_place else []
+    host_exec_s = cfg.host_exec_factor * trace.exec_s if host_groups else 0.0
     seed_assign = {e: list(seed_plan.pools_for(e))
                    for e in seed_plan.assignments}
     # a caller-supplied seed may already spend more replicas than the search
@@ -623,7 +735,8 @@ def search_placement(coe: "CoEModel", capacities: Mapping[str, int],
     def full_detail(plan) -> _ReplayDetail:
         return _replay(coe, capacities, plan, trace, tier, links=links,
                        pool_devices=pool_devices,
-                       record=cfg.scoring == "delta")
+                       record=cfg.scoring == "delta",
+                       host_groups=host_groups, host_exec_s=host_exec_s)
 
     state = {"full_replays": 1}
     seed_detail = full_detail(seed_plan)
@@ -641,7 +754,8 @@ def search_placement(coe: "CoEModel", capacities: Mapping[str, int],
 
     if groups and trace.events:
         mover = _Mover(coe, capacities, groups, trace.weights(),
-                       np.random.RandomState(cfg.seed), cfg)
+                       np.random.RandomState(cfg.seed), cfg,
+                       host_groups=host_groups)
         if cfg.scoring == "full":
             it = 0
             while not out_of_budget(it):
@@ -657,7 +771,9 @@ def search_placement(coe: "CoEModel", capacities: Mapping[str, int],
                     stale += 1
                     continue
                 cost = replay_cost(coe, capacities, plan, trace, tier,
-                                   links=links, pool_devices=pool_devices)
+                                   links=links, pool_devices=pool_devices,
+                                   host_groups=host_groups,
+                                   host_exec_s=host_exec_s)
                 state["full_replays"] += 1
                 if cost < best_cost - 1e-12:
                     best_assign, best_cost, best_plan = cand, cost, plan

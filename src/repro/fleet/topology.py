@@ -66,7 +66,8 @@ class FleetSpec:
 
 def build_fleet(tier: TierSpec, fleet: FleetSpec,
                 pool_fraction: float = 0.75,
-                gpu_pool_bytes: Optional[int] = None
+                gpu_pool_bytes: Optional[int] = None,
+                cpu_multiplier: float = 0.0
                 ) -> Tuple[Dict[str, int], list]:
     """(pools, executor specs) for a fleet on ``tier``-class devices.
 
@@ -75,6 +76,8 @@ def build_fleet(tier: TierSpec, fleet: FleetSpec,
     executors); CPU executors share half the host DRAM as in the seed. For
     ``n_devices == 1`` the output is identical to
     ``workload.make_executor_specs(tier, gpu_per_device, n_cpu)``.
+    ``cpu_multiplier`` > 0 derives the CPU service-time model from the
+    device time instead of the static constants (``hetero.cpu_multiplier``).
     """
     # lazy: workload imports repro.core.serving, which imports repro.fleet
     from repro.core.serving import ExecutorSpec
@@ -83,8 +86,8 @@ def build_fleet(tier: TierSpec, fleet: FleetSpec,
     pools: Dict[str, int] = {}
     specs: List[ExecutorSpec] = []
     n_gpu_total = fleet.n_devices * fleet.gpu_per_device
-    gpu_prof = device_profile("gpu", tier)
-    cpu_prof = device_profile("cpu", tier)
+    gpu_prof = device_profile("gpu", tier, cpu_multiplier)
+    cpu_prof = device_profile("cpu", tier, cpu_multiplier)
 
     if tier.unified:
         # one unified memory region split between device- and host-side

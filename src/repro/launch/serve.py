@@ -15,7 +15,8 @@ Three modes behind the SAME scheduler/manager code:
 
 Config artifacts (docs/configuration.md has the full workflow):
 
-  --config spec.json   run a saved spec instead of flags
+  --config spec.json   run a saved spec; any config flag passed alongside
+                       overrides just that field (flag > file > default)
   --dump-config PATH   write the resolved spec (then exit) — the run's full
                        configuration as a reproducible, diffable artifact
   --dump-trace PATH    after the run, save the observed traffic as a
@@ -42,9 +43,9 @@ import warnings
 from repro.api import DeploymentSpec, Session, SpecError
 from repro.api.build import POLICIES, build_real_system  # noqa: F401
 from repro.api.build import real_board_layout as _real_board_layout  # noqa: F401
-from repro.api.spec import (FleetSection, MemorySection, ModelSpec,
-                            PolicySection, ServingSection, TenantSection,
-                            WorkloadSection)
+from repro.api.spec import (FleetSection, HeteroSection, MemorySection,
+                            ModelSpec, PolicySection, ServingSection,
+                            TenantSection, WorkloadSection)
 from repro.memory import POLICY_NAMES
 from repro.obs import log as obslog
 
@@ -142,11 +143,15 @@ def spec_from_args(args) -> DeploymentSpec:
     else:
         model = ModelSpec(kind="board", board=getattr(args, "board", "A"))
 
+    hetero = HeteroSection(
+        host_exec=getattr(args, "host_exec", False),
+        cpu_multiplier=getattr(args, "cpu_multiplier", 0.0),
+        host_place=getattr(args, "host_place", False))
     return DeploymentSpec(
         model=model, fleet=fleet, memory=memory, policy=policy,
         serving=serving,
         workload=WorkloadSection(requests=args.requests, tenants=tenants),
-        seed=getattr(args, "seed", 0))
+        hetero=hetero, seed=getattr(args, "seed", 0))
 
 
 # --------------------------------------------------------------------------- #
@@ -178,23 +183,52 @@ def run_online_real(args) -> dict:
 # CLI
 # --------------------------------------------------------------------------- #
 
-# dests that configure the run (a --config file replaces all of them; the
-# artifact/io flags --out/--dump-config/--dump-trace/--save-plan compose)
+# dests that configure the run (with --config, any of them passed on the
+# command line overrides just that field of the loaded spec; the artifact/io
+# flags --out/--dump-config/--dump-trace/--save-plan always compose)
 _CONFIG_DESTS = ("mode", "board", "tier", "policy", "evict", "prefetch",
                  "prefetch_trigger", "requests", "executors", "devices",
                  "links", "replication", "peer_bw", "placement", "trace",
                  "plan", "engine", "tenants", "arrival", "rates", "slos",
                  "request_class", "admission", "max_queue", "bucket_rate",
                  "bucket_burst", "autoscale", "no_slo_priority", "tick",
-                 "seed")
+                 "host_exec", "cpu_multiplier", "host_place", "seed")
+
+# flag dest -> dotted spec path for the scalar overrides; the structural
+# dests (executors, plan, no_slo_priority, the tenant-mix group) are mapped
+# by hand in _resolve_spec
+_DEST_PATHS = {
+    "mode": "serving.mode", "engine": "serving.engine",
+    "admission": "serving.admission", "max_queue": "serving.max_queue",
+    "bucket_rate": "serving.bucket_rate",
+    "bucket_burst": "serving.bucket_burst",
+    "autoscale": "serving.autoscale", "tick": "serving.tick",
+    "board": "model.board",
+    "tier": "memory.tier", "prefetch": "memory.prefetch",
+    "prefetch_trigger": "memory.prefetch_trigger",
+    "policy": "policy.name", "evict": "policy.evict",
+    "requests": "workload.requests",
+    "devices": "fleet.devices", "links": "fleet.links",
+    "replication": "fleet.replication", "peer_bw": "fleet.peer_bw_gbps",
+    "placement": "fleet.placement", "trace": "fleet.trace_path",
+    "host_exec": "hetero.host_exec",
+    "cpu_multiplier": "hetero.cpu_multiplier",
+    "host_place": "hetero.host_place",
+    "seed": "seed",
+}
+
+# the tenant mix is one coherent group: overriding any of these rebuilds
+# workload.tenants wholesale from the flag values (the flat comma-lists
+# can't be partially merged into the file's structured tenant entries)
+_TENANT_DESTS = ("tenants", "arrival", "rates", "slos", "request_class")
 
 
 def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--config", default=None, metavar="SPEC_JSON",
-                    help="run a saved DeploymentSpec instead of flags "
-                         "(docs/configuration.md; other config flags must "
-                         "be left at their defaults)")
+                    help="run a saved DeploymentSpec; config flags passed "
+                         "alongside override just those fields — flag > "
+                         "file > default (docs/configuration.md)")
     ap.add_argument("--dump-config", default=None, metavar="PATH",
                     help="write the resolved DeploymentSpec JSON ('-' for "
                          "stdout) and exit without serving")
@@ -296,21 +330,83 @@ def build_parser() -> argparse.ArgumentParser:
                     help="disable deadline-EDF queue insertion")
     ap.add_argument("--tick", type=float, default=0.5,
                     help="telemetry/autoscaler control interval, sim seconds")
+    # --- heterogeneous CPU co-execution -------------------------------- #
+    ap.add_argument("--host-exec", action="store_true",
+                    help="run host-DRAM-resident experts in place on the "
+                         "CPU executors instead of stalling on a disk/PCIe "
+                         "load; the scheduler prices min(execute_on_host, "
+                         "load_then_execute_on_device) per arrival")
+    ap.add_argument("--cpu-multiplier", type=float, default=0.0,
+                    help="sim: derive the CPU service-time model as device "
+                         "time x this factor (0 = the static measured CPU "
+                         "constants; real mode measures the CPU line "
+                         "directly)")
+    ap.add_argument("--host-place", action="store_true",
+                    help="--placement search: allow the search to plan "
+                         "deliberate CPU residents (requires --host-exec)")
     ap.add_argument("--seed", type=int, default=0)
     return ap
 
 
+def _deep_merge(base: dict, overlay: dict) -> dict:
+    """Recursive dict merge, overlay wins; non-dict values replace."""
+    out = dict(base)
+    for k, v in overlay.items():
+        if isinstance(v, dict) and isinstance(out.get(k), dict):
+            out[k] = _deep_merge(out[k], v)
+        else:
+            out[k] = v
+    return out
+
+
+def _set_path(overlay: dict, dotted: str, value):
+    node = overlay
+    parts = dotted.split(".")
+    for p in parts[:-1]:
+        node = node.setdefault(p, {})
+    node[parts[-1]] = value
+
+
 def _resolve_spec(args, ap: argparse.ArgumentParser) -> DeploymentSpec:
+    """Flags-only, file-only, or partial override: flag > file > default.
+
+    With --config, every config flag whose value differs from its parser
+    default is deep-merged over the loaded spec (a flag explicitly set to
+    its default value is indistinguishable from unset — edit the file for
+    that). The merged dict re-enters ``DeploymentSpec.from_dict``, so
+    cross-field validation runs eagerly on the final configuration."""
     if not args.config:
         return spec_from_args(args)
+    spec = DeploymentSpec.load(args.config)
     overridden = [d for d in _CONFIG_DESTS
                   if getattr(args, d) != ap.get_default(d)]
-    if overridden:
+    if not overridden:
+        return spec
+    overlay: dict = {}
+    for d in overridden:
+        if d in _TENANT_DESTS:
+            continue                      # handled as a group below
+        if d == "executors":
+            n_gpu, n_cpu = args.executors
+            _set_path(overlay, "fleet.gpu_per_device", n_gpu)
+            _set_path(overlay, "fleet.cpu", n_cpu)
+        elif d == "plan":
+            _set_path(overlay, "fleet.plan_path", args.plan)
+            _set_path(overlay, "fleet.placement", "plan")
+        elif d == "no_slo_priority":
+            _set_path(overlay, "serving.slo_priority", False)
+        else:
+            _set_path(overlay, _DEST_PATHS[d], getattr(args, d))
+    if any(d in _TENANT_DESTS for d in overridden):
+        overlay.setdefault("workload", {})["tenants"] = [
+            t.to_dict() for t in _tenant_sections(args)]
+    merged = _deep_merge(spec.to_dict(), overlay)
+    try:
+        return DeploymentSpec.from_dict(merged)
+    except SpecError as e:
         flags = ", ".join("--" + d.replace("_", "-") for d in overridden)
-        raise SystemExit(
-            f"--config carries the full run configuration; drop {flags} "
-            "(edit the spec file instead)")
-    return DeploymentSpec.load(args.config)
+        raise SpecError(
+            f"merging {flags} over {args.config}: {e}") from None
 
 
 def main(argv=None):

@@ -61,6 +61,13 @@ class MemoryHierarchy:
         # (the retained reference path benchmarks and tests pin against)
         self.cost_cache_enabled = True
         self._holders_cache: Dict[str, Tuple[int, Tuple[str, ...]]] = {}
+        # heterogeneous CPU co-execution (policy.host_exec): when on, a
+        # host-DRAM-resident expert is *free* to run on a host/CPU executor
+        # (no disk reload — it executes in place), so the scheduler's
+        # assignment cost prices min(execute_on_host, load_then_execute)
+        # across the executor set. Off by default: every cost below is
+        # bit-identical to the cache-only host tier.
+        self.host_exec_enabled = False
         # UMA collapses the middle tier; tier=None (engine-supplied latency
         # models) keeps the seed's no-host-cache behaviour
         self.host: Optional[HostTier] = None
@@ -209,7 +216,15 @@ class MemoryHierarchy:
         return tr
 
     def begin_host_load(self, expert_id: str, now: float) -> Transfer:
-        """Disk -> host DRAM demand load (CPU executors run from DRAM)."""
+        """Disk -> host DRAM demand load (CPU executors run from DRAM).
+        Under host co-execution a DRAM-resident expert short-circuits: it
+        runs in place, so the "load" is a zero-cost transfer that only waits
+        out an in-flight promotion's settle gap — no disk traffic."""
+        if self.host_exec_enabled and self.host is not None \
+                and expert_id in self.host:
+            ready = max(now, self.host.ready_time(expert_id))
+            self.host.touch(expert_id)
+            return Transfer(issued=now, start=now, done=ready)
         tr = self.transfer.begin_host_load(
             now, self.coe.spec(expert_id).mem_bytes, label=expert_id)
         if self.host is not None:
@@ -274,6 +289,13 @@ class MemoryHierarchy:
         backlog and that settle gap. Replaces the executor-local
         ``load_latency`` guess in ``RequestScheduler.additional_latency``."""
         if device in ("host", "cpu"):
+            if self.host_exec_enabled:
+                host = self.host
+                if host is not None and expert_id in host:
+                    # host co-execution: the expert already lives in DRAM —
+                    # no transfer at all, only the settle gap of an
+                    # in-flight disk->host promotion
+                    return max(0.0, host.ready_time(expert_id) - now)
             return self.predict_host_load(expert_id) + self._backlog(
                 self.topology.disk_channel, now)
         # peer arm, inlined: this runs once per executor per makespan probe,
@@ -321,6 +343,10 @@ class MemoryHierarchy:
         pinned pre-cache reference. Must return bit-identical values to the
         cached path under any residency churn (tested)."""
         if device in ("host", "cpu"):
+            if self.host_exec_enabled:
+                host = self.host
+                if host is not None and expert_id in host:
+                    return max(0.0, host.ready_time(expert_id) - now)
             return self.predict_host_load(expert_id) + self._backlog(
                 self.topology.disk_channel, now)
         mem = self.coe.spec(expert_id).mem_bytes

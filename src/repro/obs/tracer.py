@@ -25,7 +25,10 @@ Event vocabulary (``kind`` / who emits it / level):
   ``evict``   executor evicts a pool resident to make room; summary
   ``xfer``    one channel leg of a transfer occupies a link (SSD / PCIe /
               peer ingress) — ``TransferEngine``; summary
-  ``exec``    executor runs a batch — ``Executor.start_next_batch``; full
+  ``exec``    executor runs a batch — ``Executor.start_next_batch``; full.
+              ``attrs["on"]`` is ``"host"`` when the batch executed in
+              place on a CPU executor (heterogeneous co-execution),
+              ``"device"`` otherwise
   ``assign``  scheduler placed a request on an executor queue
               (``CoServeSystem.assign``); full
   ``sched``   the scheduler's decision record (policy mode + choice)

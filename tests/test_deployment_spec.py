@@ -283,13 +283,32 @@ def test_dump_config_then_config_reproduces_run(tmp_path, capsys):
     assert direct == via_config
 
 
-def test_config_rejects_conflicting_flags(tmp_path):
+def test_config_merges_flag_overrides(tmp_path):
+    """--config + config flags deep-merge: flag > file > default."""
     from repro.launch.serve import main
     cfg = str(tmp_path / "spec.json")
     main(["--mode", "sim", "--requests", "60", "--executors", "1,0",
           "--dump-config", cfg])
-    with pytest.raises(SystemExit, match="drop --requests"):
-        main(["--config", cfg, "--requests", "10"])
+    merged = main(["--config", cfg, "--requests", "10",
+                   "--dump-config", "-"])
+    spec = DeploymentSpec.from_dict(merged)
+    assert spec.workload.requests == 10          # flag wins
+    assert spec.fleet.gpu_per_device == 1        # file wins over default
+    assert spec.fleet.cpu == 0
+    # no overrides -> the file verbatim
+    verbatim = main(["--config", cfg, "--dump-config", "-"])
+    assert DeploymentSpec.from_dict(verbatim) == DeploymentSpec.load(cfg)
+
+
+def test_config_merge_validates_eagerly(tmp_path):
+    """A bad flag/file combination fails loudly at merge time, naming the
+    overriding flags."""
+    from repro.launch.serve import main
+    cfg = str(tmp_path / "spec.json")
+    main(["--mode", "sim", "--requests", "60", "--dump-config", cfg])
+    with pytest.raises(SystemExit, match="--host-place"):
+        # host_place needs placement="search"; the file says greedy
+        main(["--config", cfg, "--host-exec", "--host-place"])
 
 
 # --------------------------------------------------------------------------- #

@@ -1,0 +1,375 @@
+"""Heterogeneous CPU co-execution: pricing, execution path, placement,
+spec plumbing — and above all bit-identicality guarantees.
+
+  * host_exec=off is the cache-only host tier: fast vs the retained naive
+    reference stays bit-identical (Metrics + decision streams), exactly as
+    before this feature existed;
+  * host_exec=on is *also* bit-identical fast-vs-reference — the hetero
+    pricing arm lives in both ``assignment_cost`` and
+    ``assignment_cost_ref``, so the cached and naive cost models agree
+    while residency churns;
+  * the scheduler's CPU arm equals a seeded naive min() recompute at every
+    probe: a host-resident expert costs only its promotion settle gap, a
+    non-resident one the full disk leg;
+  * host-resident experts execute in place: zero load latency, no disk-leg
+    transfer, ``exec`` trace events labeled ``on="host"``, and the event
+    timeline still reconciles against ``Metrics`` (<1%);
+  * ``host_place`` lets the placement search plan deliberate CPU residents
+    and is never worse than the greedy seed, while host_place=off keeps
+    the search's RNG stream and results unchanged;
+  * DeploymentSpec carries the knob group losslessly and validates the
+    cross-field constraints eagerly.
+"""
+import dataclasses
+
+import pytest
+
+from repro.core import (COSERVE, CoServeSystem, Simulation, SystemPolicy,
+                        TierSpec)
+from repro.core.engines import SimEngine
+from repro.core.reference import apply_reference
+from repro.core.serving import ExecutorSpec
+from repro.core.workload import (BoardSpec, build_board_coe, device_profile,
+                                 make_executor_specs, make_task_requests)
+from repro.fleet import SearchConfig, replay_cost, search_placement, \
+    trace_from_counts
+from repro.obs import Tracer
+from repro.obs.timeline import reconcile
+
+MB = 1 << 20
+
+HOST_EXEC = dataclasses.replace(COSERVE, host_exec=True)
+
+# thrashy enough that the CPU arm actually wins sometimes: small pools,
+# modest disk, Zipf-hot catalog with a long host-resident tail
+HET_BOARD = BoardSpec(name="HQ", n_components=60, n_active=36,
+                      avg_quantity=3.0, n_detection=8, zipf_s=1.6)
+HET_TIER = TierSpec(name="het_numa", disk_bw=530e6, host_to_device_bw=12e9,
+                    unified=False, host_cache_bytes=8 << 30,
+                    device_bytes=4 << 30)
+
+
+def run_system(seed, policy=COSERVE, reference=False, decisions=None,
+               tracer=None, sim_hook=None, n_requests=250):
+    coe = build_board_coe(HET_BOARD, seed=seed)
+    pools, specs = make_executor_specs(HET_TIER, 3, 1)
+    system = CoServeSystem(coe, specs, pools, policy=policy, tier=HET_TIER,
+                           tracer=tracer)
+    if reference:
+        apply_reference(system)
+    if decisions is not None:
+        orig_assign = system.assign
+
+        def recording_assign(req, now):
+            ex = orig_assign(req, now)
+            decisions.append((req.expert_id, ex.id,
+                              tuple((g.expert_id, len(g)) for g in ex.queue)))
+            return ex
+
+        system.assign = recording_assign
+    sim = Simulation(system)
+    if sim_hook is not None:
+        sim_hook(sim, system)
+    sim.submit(make_task_requests(HET_BOARD, n_requests, seed=seed))
+    return sim.run(), system
+
+
+def strip_wall_clock(m):
+    d = dataclasses.asdict(m)
+    for k in ("wall_s", "sched_time", "mgmt_time"):
+        d.pop(k, None)
+    for ex in d.get("per_executor", {}).values():
+        if isinstance(ex, dict):
+            ex.pop("mgmt_time", None)
+    return d
+
+
+# --------------------------------------------------------------------------- #
+# bit-identicality: off and on, fast vs naive reference
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("seed", range(5))
+@pytest.mark.parametrize("policy", [COSERVE, HOST_EXEC],
+                         ids=["host_exec_off", "host_exec_on"])
+def test_metrics_bit_identical_to_reference(seed, policy):
+    fast, _ = run_system(seed, policy=policy)
+    ref, _ = run_system(seed, policy=policy, reference=True)
+    assert strip_wall_clock(fast) == strip_wall_clock(ref)
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_host_exec_on_decision_stream_matches_reference(seed):
+    fast_log, ref_log = [], []
+    run_system(seed, policy=HOST_EXEC, decisions=fast_log)
+    run_system(seed, policy=HOST_EXEC, decisions=ref_log, reference=True)
+    assert fast_log == ref_log
+    assert len(fast_log) >= 250
+
+
+def test_host_exec_changes_behavior_at_all():
+    """Guard against the flag silently wiring to nothing: on a pressured
+    tier (slow PCIe, small pools) the CPU arm must win sometimes, so on vs
+    off must differ."""
+    tight = dataclasses.replace(HET_TIER, name="tight",
+                                host_to_device_bw=2e9, device_bytes=2 << 30)
+    coe = build_board_coe(HET_BOARD, seed=0)
+    results = []
+    for policy in (COSERVE, HOST_EXEC):
+        pools, specs = make_executor_specs(tight, 3, 1)
+        system = CoServeSystem(coe, specs, pools, policy=policy, tier=tight)
+        sim = Simulation(system)
+        sim.submit(make_task_requests(HET_BOARD, 250, seed=0))
+        results.append(strip_wall_clock(sim.run()))
+    assert results[0] != results[1]
+
+
+# --------------------------------------------------------------------------- #
+# the min() arm: scheduler pricing equals a naive seeded recompute
+# --------------------------------------------------------------------------- #
+
+def test_assignment_cost_cpu_arm_matches_naive_recompute_under_churn():
+    probes = []
+
+    def hook(sim, system):
+        h = system.hierarchy
+        coe = system.coe
+
+        def probe(s, now):
+            for eid in list(coe.experts)[::4]:
+                fast = h.assignment_cost(eid, now, device="cpu")
+                ref = h.assignment_cost_ref(eid, now, device="cpu")
+                # the naive two-arm min() recompute, from first principles
+                if h.host is not None and eid in h.host:
+                    naive = max(0.0, h.host.ready_time(eid) - now)
+                else:
+                    naive = ref      # disk leg: backlog model is private,
+                    #                  assignment_cost_ref IS the naive loop
+                probes.append((eid, fast, ref, naive))
+
+        sim.add_ticker(0.05, probe)
+
+    run_system(0, policy=HOST_EXEC, sim_hook=hook)
+    assert len(probes) > 100
+    for eid, fast, ref, naive in probes:
+        assert fast == ref == naive, eid
+    # residency churn must have exercised BOTH arms
+    assert any(naive == 0.0 for _, _, _, naive in probes)
+    assert any(naive > 0.0 for _, _, _, naive in probes)
+
+
+def test_host_resident_cost_is_zero_only_when_enabled():
+    _, system = run_system(0, policy=COSERVE, n_requests=40)
+    h = system.hierarchy
+    resident = [eid for eid in system.coe.experts if h.in_host(eid)]
+    assert resident
+    eid = resident[0]
+    later = 1e6                      # any in-flight promotion long settled
+    assert h.assignment_cost(eid, later, device="cpu") > 0.0
+    h.host_exec_enabled = True
+    assert h.assignment_cost(eid, later, device="cpu") == 0.0
+    assert h.assignment_cost_ref(eid, later, device="cpu") == 0.0
+
+
+# --------------------------------------------------------------------------- #
+# the execution path: in place from DRAM, no disk leg
+# --------------------------------------------------------------------------- #
+
+def _cpu_system(host_exec: bool):
+    coe = build_board_coe(HET_BOARD, seed=0)
+    pools, specs = make_executor_specs(HET_TIER, 1, 1)
+    policy = HOST_EXEC if host_exec else COSERVE
+    return CoServeSystem(coe, specs, pools, policy=policy, tier=HET_TIER)
+
+
+def test_sim_engine_host_resident_load_is_free():
+    # warm the host tier with a short run, then probe the engine directly
+    m, system = run_system(0, policy=HOST_EXEC, n_requests=40)
+    engine = system.engine
+    assert isinstance(engine, SimEngine)
+    cpu_ex = next(e for e in system.executors if e.device == "cpu")
+    h = system.hierarchy
+    resident = [eid for eid in system.coe.experts if h.in_host(eid)]
+    assert resident
+    assert engine.load_latency(cpu_ex, resident[0]) == 0.0
+    # same expert, co-execution off: the full host-load prediction
+    m2, off = run_system(0, policy=COSERVE, n_requests=40)
+    off_cpu = next(e for e in off.executors if e.device == "cpu")
+    off_resident = [eid for eid in off.coe.experts
+                    if off.hierarchy.in_host(eid)]
+    assert off_resident
+    assert off.engine.load_latency(off_cpu, off_resident[0]) > 0.0
+
+
+def test_begin_host_load_hit_is_an_instant_settled_transfer():
+    m, system = run_system(0, policy=HOST_EXEC, n_requests=40)
+    h = system.hierarchy
+    resident = [eid for eid in system.coe.experts if h.in_host(eid)]
+    assert resident
+    disk = h.topology.disk_channel
+    now = max(1e6, disk.busy_until + 1.0)      # quiet, long-settled instant
+    before = (disk.transfers, disk.busy_until)
+    t = h.begin_host_load(resident[0], now=now)
+    assert t.issued == t.start == now
+    assert t.done == now                       # settled: executes in place
+    # no disk-channel occupancy was booked for the hit
+    assert (disk.transfers, disk.busy_until) == before
+
+
+def test_exec_events_labeled_host_and_device():
+    tracer = Tracer(level="full")
+    m, system = run_system(0, policy=HOST_EXEC, tracer=tracer)
+    execs = [e for e in tracer.events if e.kind == "exec"]
+    assert execs
+    assert all(e.attrs.get("on") in ("host", "device") for e in execs)
+    by_on = {on: [e for e in execs if e.attrs["on"] == on]
+             for on in ("host", "device")}
+    assert by_on["host"] and by_on["device"]
+    cpu_ids = {e.id for e in system.executors if e.device == "cpu"}
+    assert {e.actor for e in by_on["host"]} <= cpu_ids
+
+
+def test_timeline_reconciles_with_host_exec_on():
+    tracer = Tracer(level="full", capacity=200_000)
+    m, system = run_system(0, policy=HOST_EXEC, tracer=tracer)
+    rec = reconcile(tracer.events, m)
+    assert rec["completed_events"] == m.completed
+    assert abs(rec["avg_latency_delta"]) < 1e-6
+    stall = rec["stall_metrics_s"]
+    assert abs(rec["stall_events_s"] - stall) <= max(1e-6, 0.01 * stall)
+
+
+# --------------------------------------------------------------------------- #
+# placement: deliberate CPU residents (host_place)
+# --------------------------------------------------------------------------- #
+
+def _place_fixture(seed=0):
+    import numpy as np
+    from repro.core import CoEModel, ExpertSpec, RoutingModule
+    rng = np.random.RandomState(seed)
+    coe = CoEModel([ExpertSpec(id=f"e{i:03d}", arch="resnet101",
+                               mem_bytes=100 * MB,
+                               usage_prob=float(rng.rand()))
+                    for i in range(14)],
+                   RoutingModule(lambda d: "e000"))
+    caps = {"g0": 500 * MB, "g1": 500 * MB, "cpu": 600 * MB}
+    pool_devices = {"g0": "gpu", "g1": "gpu", "cpu": "cpu"}
+    counts = {e: float(rng.exponential(10.0)) for e in coe.experts}
+    trace = trace_from_counts(counts, length=150, exec_s=0.006)
+    return coe, caps, pool_devices, trace
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_host_place_never_worse_and_cost_is_exact(seed):
+    coe, caps, pool_devices, trace = _place_fixture(seed)
+    cfg = SearchConfig(iterations=150, seed=seed, replication=1,
+                       host_place=True, host_exec_factor=12.0)
+    res = search_placement(coe, caps, trace, HET_TIER, links="per-device",
+                           pool_devices=pool_devices, config=cfg)
+    assert res.cost <= res.seed_cost + 1e-9
+    assert res.cost == replay_cost(
+        coe, caps, res.plan, trace, HET_TIER, links="per-device",
+        pool_devices=pool_devices, host_groups=["cpu"],
+        host_exec_s=12.0 * trace.exec_s)
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_host_place_off_is_unchanged_by_the_feature(seed):
+    """host_place=False must not perturb the search: same RNG stream, same
+    proposals, same plan as a config that never heard of host groups."""
+    coe, caps, pool_devices, trace = _place_fixture(seed)
+    caps = {g: c for g, c in caps.items() if g != "cpu"}
+    pool_devices = {g: d for g, d in pool_devices.items() if g != "cpu"}
+    base = search_placement(
+        coe, caps, trace, HET_TIER, links="per-device",
+        pool_devices=pool_devices,
+        config=SearchConfig(iterations=120, seed=seed, replication=1))
+    feat = search_placement(
+        coe, caps, trace, HET_TIER, links="per-device",
+        pool_devices=pool_devices,
+        config=SearchConfig(iterations=120, seed=seed, replication=1,
+                            host_place=True, host_exec_factor=12.0))
+    # no host-capable groups exist -> host_place must be a strict no-op
+    assert base.proposed == feat.proposed
+    assert base.cost == feat.cost
+    assert base.plan.assignments == feat.plan.assignments
+
+
+def test_host_place_can_plan_cpu_residents():
+    coe, caps, pool_devices, trace = _place_fixture(1)
+    cfg = SearchConfig(iterations=400, seed=1, replication=1,
+                       host_place=True, host_exec_factor=3.0)
+    res = search_placement(coe, caps, trace, HET_TIER, links="per-device",
+                           pool_devices=pool_devices, config=cfg)
+    hosted = [eid for eid, groups in res.plan.assignments.items()
+              if "cpu" in groups]
+    # a cheap CPU (3x device time) makes deliberate residents worthwhile
+    assert hosted
+
+
+# --------------------------------------------------------------------------- #
+# spec + build plumbing
+# --------------------------------------------------------------------------- #
+
+def test_spec_round_trips_hetero_section():
+    from repro.api.spec import DeploymentSpec, FleetSection, HeteroSection
+    spec = DeploymentSpec(
+        fleet=FleetSection(placement="search"),
+        hetero=HeteroSection(host_exec=True, cpu_multiplier=9.0,
+                             host_place=True))
+    assert DeploymentSpec.from_dict(spec.to_dict()) == spec
+
+
+@pytest.mark.parametrize("kwargs,match", [
+    (dict(cpu_multiplier=-1.0), "cpu_multiplier"),
+    (dict(host_place=True), "host_place"),       # needs host_exec
+])
+def test_hetero_section_validation(kwargs, match):
+    from repro.api.spec import HeteroSection, SpecError
+    with pytest.raises(SpecError, match=match):
+        HeteroSection(**kwargs)
+
+
+def test_spec_cross_field_validation():
+    from repro.api.spec import (DeploymentSpec, FleetSection, HeteroSection,
+                                PolicySection, SpecError)
+    with pytest.raises(SpecError, match="fleet.cpu"):
+        DeploymentSpec(fleet=FleetSection(cpu=0),
+                       hetero=HeteroSection(host_exec=True))
+    with pytest.raises(SpecError, match="samba"):
+        DeploymentSpec(policy=PolicySection(name="samba"),
+                       hetero=HeteroSection(host_exec=True))
+    with pytest.raises(SpecError, match="host_place"):
+        DeploymentSpec(hetero=HeteroSection(host_exec=True,
+                                            host_place=True))
+
+
+def test_build_wires_host_exec_through_policy_and_hierarchy():
+    from repro.api.build import build_context
+    from repro.api.spec import DeploymentSpec, HeteroSection
+    ctx = build_context(DeploymentSpec(
+        hetero=HeteroSection(host_exec=True, cpu_multiplier=8.0)))
+    assert ctx.system.policy.host_exec
+    assert ctx.system.hierarchy.host_exec_enabled
+    off = build_context(DeploymentSpec())
+    assert not off.system.policy.host_exec
+    assert not off.system.hierarchy.host_exec_enabled
+
+
+def test_cpu_multiplier_derives_cpu_service_time_from_device_time():
+    gpu = device_profile("gpu", HET_TIER)
+    cpu = device_profile("cpu", HET_TIER, cpu_multiplier=8.0)
+    for arch, prof in cpu.arch_profiles.items():
+        g = gpu.arch_profiles[arch]
+        # non-unified tiers carry the seed's 1.1x cross-socket factor on k
+        assert prof.k == pytest.approx(g.k * 8.0 * 1.1)
+        assert prof.b == pytest.approx(g.b * 8.0)
+        assert prof.cpu_exec_latency(4) == prof.cpu_k * 4 + prof.cpu_b
+
+
+def test_arch_profile_cpu_exec_latency():
+    from repro.core.profiler import ArchProfile
+    p = ArchProfile(arch="a", k=0.01, b=0.002, mem_bytes=1,
+                    act_bytes_per_item=1, max_batch=8,
+                    cpu_k=0.08, cpu_b=0.01)
+    assert p.cpu_exec_latency(0) == 0.0
+    assert p.cpu_exec_latency(3) == pytest.approx(0.08 * 3 + 0.01)

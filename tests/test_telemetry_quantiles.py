@@ -1,0 +1,126 @@
+"""P2QuantileBank is numerically identical to per-q P2Quantile estimators.
+
+The bank is a pure performance rewrite (flattened rows, unrolled marker
+loops, folded constants) of the scalar P-square estimator — it must produce
+bit-identical marker heights for any stream. These tests feed both through
+the same seeded streams across several distributions and stream lengths,
+including the exact-phase (< 5 observations) edge, and pin LatencyTracker's
+snapshot on top of the bank.
+"""
+from __future__ import annotations
+
+import random
+
+import pytest
+
+from repro.serve.telemetry import LatencyTracker, P2Quantile, P2QuantileBank
+
+QS = (0.50, 0.95, 0.99)
+
+
+def _streams():
+    """(name, values) pairs spanning shapes the P-square markers react to."""
+    rng = random.Random(1234)
+    yield "uniform", [rng.random() for _ in range(3000)]
+    yield "lognormal", [rng.lognormvariate(0.0, 1.0) for _ in range(3000)]
+    yield "exponential", [rng.expovariate(3.0) for _ in range(3000)]
+    yield "bimodal", [rng.gauss(1.0, 0.05) if rng.random() < 0.9
+                      else rng.gauss(20.0, 2.0) for _ in range(3000)]
+    yield "sorted_ascending", [i * 0.001 for i in range(2000)]
+    yield "sorted_descending", [(2000 - i) * 0.001 for i in range(2000)]
+    yield "constant", [0.25] * 500
+    yield "tiny", [rng.random() for _ in range(4)]        # exact phase only
+    yield "five", [rng.random() for _ in range(5)]        # markers just born
+    yield "six", [rng.random() for _ in range(6)]         # first adjustment
+
+
+@pytest.mark.parametrize("name,stream", list(_streams()),
+                         ids=[n for n, _ in _streams()])
+def test_bank_matches_scalar_estimators_exactly(name, stream):
+    bank = P2QuantileBank(QS)
+    refs = [P2Quantile(q) for q in QS]
+    for i, x in enumerate(stream):
+        bank.add(x)
+        for ref in refs:
+            ref.add(x)
+        if i % 97 == 0:  # identity must hold mid-stream, not just at the end
+            assert bank.values() == [r.value() for r in refs], \
+                f"{name}: diverged at observation {i + 1}"
+    assert bank.values() == [r.value() for r in refs]
+    assert bank.n == refs[0].n == len(stream)
+
+
+def test_bank_internal_markers_match_scalar_markers():
+    """Stronger than value equality: every marker height and position must
+    match, or later observations could diverge after a passing values()."""
+    rng = random.Random(7)
+    bank = P2QuantileBank(QS)
+    refs = [P2Quantile(q) for q in QS]
+    for _ in range(1500):
+        x = rng.lognormvariate(0.0, 0.8)
+        bank.add(x)
+        for ref in refs:
+            ref.add(x)
+    for row, ref in zip(bank._rows, refs):
+        assert row[0:5] == ref._h
+        assert row[5:9] == ref._pos[1:]          # pos[0] is pinned at 1.0
+        assert row[9:13] == ref._des[1:]         # des[0] is pinned at 1.0
+
+
+def test_bank_empty_returns_zeros():
+    bank = P2QuantileBank(QS)
+    assert bank.values() == [0.0, 0.0, 0.0]
+    assert bank.n == 0
+
+
+def test_bank_exact_below_five_observations():
+    """Below 5 observations both implementations fall back to exact
+    nearest-rank over the sorted sample."""
+    bank = P2QuantileBank(QS)
+    for x in (3.0, 1.0, 2.0):
+        bank.add(x)
+    refs = [P2Quantile(q) for q in QS]
+    for ref in refs:
+        for x in (3.0, 1.0, 2.0):
+            ref.add(x)
+    vals = bank.values()
+    assert vals == [r.value() for r in refs]
+    assert vals[0] == 2.0          # exact median of {1, 2, 3}
+    assert vals[1] == vals[2] == 3.0
+
+
+def test_tracker_snapshot_rides_the_bank():
+    rng = random.Random(42)
+    tracker = LatencyTracker()
+    refs = [P2Quantile(q) for q in LatencyTracker.QS]
+    xs = [rng.expovariate(2.0) for _ in range(2000)]
+    for x in xs:
+        tracker.add(x)
+        for ref in refs:
+            ref.add(x)
+    snap = tracker.snapshot()
+    assert snap["count"] == len(xs)
+    assert snap["mean"] == pytest.approx(sum(xs) / len(xs))
+    assert snap["max"] == max(xs)
+    # snapshot applies the monotonicity clamp on top of the raw estimates
+    raw = [r.value() for r in refs]
+    hi, clamped = 0.0, []
+    for v in raw:
+        hi = max(hi, v)
+        clamped.append(hi)
+    assert [snap["p50"], snap["p95"], snap["p99"]] == clamped
+    assert snap["p50"] <= snap["p95"] <= snap["p99"]
+
+
+def test_tracker_quantiles_land_near_truth():
+    """Sanity that the streaming estimate tracks the true quantiles on a
+    well-behaved stream (P-square accuracy, not identity)."""
+    rng = random.Random(9)
+    xs = [rng.random() for _ in range(20000)]
+    tracker = LatencyTracker()
+    for x in xs:
+        tracker.add(x)
+    snap = tracker.snapshot()
+    assert snap["p50"] == pytest.approx(0.50, abs=0.03)
+    assert snap["p95"] == pytest.approx(0.95, abs=0.03)
+    assert snap["p99"] == pytest.approx(0.99, abs=0.03)

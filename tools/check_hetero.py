@@ -1,0 +1,96 @@
+"""Fail on heterogeneous co-execution regressions (the CI hetero gate).
+
+    python tools/check_hetero.py BASELINE.json [CURRENT.json]
+
+With one argument, validates the committed ``BENCH_hetero.json`` artifact
+itself: at least one memory-pressure sweep point must show BOTH lower stall
+time AND higher throughput with host co-execution on — the tentpole claim
+the artifact exists to document.
+
+With two arguments, additionally compares the fixed ``smoke`` rows of the
+baseline against a fresh ``--suite hetero --smoke`` run. Simulated results
+are deterministic and host-independent, so every simulated field of both
+the host-exec-off and host-exec-on smoke rows must be *identical* — a
+drift is a scheduler/cost-model correctness change, not noise, and fails
+regardless of magnitude. (Wall-clock fields are ignored.)
+
+Exit code 1 explains what regressed.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# every simulated (non-wall-clock) field of a smoke row
+EXACT_FIELDS = ("completed", "switches", "throughput", "stall_s",
+                "makespan_s", "avg_latency_s", "host_completed",
+                "events_processed")
+
+
+def load(path: str) -> dict:
+    with open(path, encoding="utf-8") as f:
+        data = json.load(f)
+    if not isinstance(data.get("sweep"), dict) \
+            or not isinstance(data.get("smoke"), dict):
+        sys.exit(f"{path}: no 'sweep'/'smoke' sections — not a "
+                 "BENCH_hetero.json?")
+    return data
+
+
+def check_wins(data: dict, path: str) -> list:
+    """The artifact must document >= 1 point where host-exec wins on both
+    stall AND throughput."""
+    wins = [k for k, row in data["sweep"].items()
+            if row["on"]["stall_s"] < row["off"]["stall_s"]
+            and row["on"]["throughput"] > row["off"]["throughput"]]
+    if wins:
+        print(f"OK: {path} host-exec wins (stall down AND throughput up) "
+              f"at {wins}")
+        return []
+    detail = "; ".join(
+        f"{k}: stall {row['off']['stall_s']}->{row['on']['stall_s']}, "
+        f"thr {row['off']['throughput']}->{row['on']['throughput']}"
+        for k, row in data["sweep"].items())
+    return [f"{path}: no sweep point improves both stall time and "
+            f"throughput with host-exec on ({detail})"]
+
+
+def check_smoke(base: dict, cur: dict) -> list:
+    problems = []
+    for mode in ("off", "on"):
+        b, c = base["smoke"][mode], cur["smoke"][mode]
+        for field in EXACT_FIELDS:
+            if b.get(field) != c.get(field):
+                problems.append(
+                    f"smoke.{mode}.{field} drifted: baseline "
+                    f"{b.get(field)!r} vs current {c.get(field)!r} "
+                    "(simulated results must be identical — scheduler/"
+                    "cost-model change?)")
+    if not problems:
+        print("OK: smoke rows identical (off + on, "
+              f"{len(EXACT_FIELDS)} fields each)")
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline", help="committed BENCH_hetero.json")
+    ap.add_argument("current", nargs="?", default=None,
+                    help="freshly generated BENCH_hetero.json (smoke run)")
+    args = ap.parse_args(argv)
+
+    base = load(args.baseline)
+    problems = check_wins(base, args.baseline)
+    if args.current:
+        problems += check_smoke(base, load(args.current))
+    if problems:
+        print("hetero regression gate FAILED:", file=sys.stderr)
+        for p in problems:
+            print(f"  - {p}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
