@@ -23,11 +23,11 @@ import os
 import sys
 import time
 
-from benchmarks import (bench_ablation, bench_batch_latency, bench_executors,
-                        bench_fleet, bench_hetero, bench_memory,
-                        bench_memory_alloc, bench_online, bench_overhead,
-                        bench_placement, bench_simperf, bench_throughput,
-                        bench_kernels)
+from benchmarks import (bench_ablation, bench_batch_latency, bench_decode,
+                        bench_executors, bench_fleet, bench_hetero,
+                        bench_memory, bench_memory_alloc, bench_online,
+                        bench_overhead, bench_placement, bench_simperf,
+                        bench_throughput, bench_kernels)
 from repro.obs import log as obslog
 
 log = obslog.get_logger("bench")
@@ -75,6 +75,9 @@ SUITES_INFO = {
     "hetero": (bench_hetero.run,
                "heterogeneous CPU co-execution on/off across memory-"
                "pressure sweeps: stall time, switches, throughput"),
+    "decode": (bench_decode.run,
+               "token-level decode: stage vs continuous batching, KV-aware "
+               "vs weight-only eviction under memory pressure"),
 }
 
 SUITES = {key: runner for key, (runner, _) in SUITES_INFO.items()}

@@ -20,6 +20,7 @@ import numpy as np
 from repro.api.artifacts import load_plan, load_trace
 from repro.api.spec import DeploymentSpec, SpecError
 from repro.core.coe import CoEModel, ExpertSpec, Request, RoutingModule
+from repro.core.decode import DecodeConfig
 from repro.core.profiler import DeviceProfile, microbenchmark_arch
 from repro.core.serving import (COSERVE, COSERVE_NONE, SAMBA, SAMBA_FIFO,
                                 SAMBA_PARALLEL, CoServeSystem, ExecutorSpec,
@@ -89,6 +90,21 @@ def resolve_policy(spec: DeploymentSpec) -> SystemPolicy:
     if spec.hetero.host_exec:
         policy = dataclasses.replace(policy, host_exec=True)
     return policy
+
+
+def resolve_decode(spec: DeploymentSpec) -> Optional[DecodeConfig]:
+    """The run's DecodeConfig, or None for stage-level serving. The token
+    sampler is seeded from the spec seed so decode-on runs replay exactly."""
+    d = spec.decode
+    if not d.enabled:
+        return None
+    return DecodeConfig(tokens=d.tokens, tokens_dist=d.tokens_dist,
+                        block_tokens=d.block_tokens,
+                        token_bytes=d.token_bytes,
+                        kv_budget_fraction=d.kv_budget_fraction,
+                        kv_evict=d.kv_evict,
+                        max_decode_batch=d.max_decode_batch,
+                        step_k=d.step_k, step_b=d.step_b, seed=spec.seed)
 
 
 def board_specs(spec: DeploymentSpec) -> Dict[str, BoardSpec]:
@@ -255,6 +271,7 @@ def build_real_system(n_components: int = 24, n_detection: int = 4,
                       policy: SystemPolicy = COSERVE,
                       d_hidden: int = 256,
                       tracer: Optional[Tracer] = None,
+                      decode: Optional[DecodeConfig] = None,
                       ) -> Tuple[CoServeSystem, CoEModel]:
     """A small CoE of real JAX MLP experts over host+disk tiers."""
     import jax
@@ -346,7 +363,7 @@ def build_real_system(n_components: int = 24, n_detection: int = 4,
     specs = [ExecutorSpec("gpu", dev_prof, 4 * mem, "gpu")
              for _ in range(n_executors)]
     system = CoServeSystem(coe, specs, pools, policy=policy, tier=tier,
-                           engine=engine, tracer=tracer)
+                           engine=engine, tracer=tracer, decode=decode)
     return system, coe
 
 
@@ -385,7 +402,8 @@ def build_context(spec: DeploymentSpec,
         system, coe = build_real_system(
             n_components=m.tiny_components, n_detection=m.tiny_detection,
             pool_experts=m.tiny_pool_experts, n_executors=m.tiny_executors,
-            d_hidden=m.tiny_d_hidden, policy=policy, tracer=tracer)
+            d_hidden=m.tiny_d_hidden, policy=policy, tracer=tracer,
+            decode=resolve_decode(spec))
         tenants = make_tenants(spec) if mode == "online" else []
         return BuildContext(spec=spec, system=system, coe=coe, tier=None,
                             requests=None, search_report=None,
@@ -402,7 +420,8 @@ def build_context(spec: DeploymentSpec,
     system = CoServeSystem(coe, specs, pools, policy=policy, tier=tier,
                            links=spec.fleet.links,
                            replication=spec.fleet.replication,
-                           placement=placement, tracer=tracer)
+                           placement=placement, tracer=tracer,
+                           decode=resolve_decode(spec))
     tenants = make_tenants(spec) if spec.workload.tenants else []
     return BuildContext(spec=spec, system=system, coe=coe, tier=tier,
                         requests=requests, search_report=search_report,

@@ -157,6 +157,8 @@ class Session:
                                   "channels", {}).get("peer_channels",
                                                       {}).items()},
                "host_prefetch": m.memory.get("prefetch", {})}
+        if m.decode:
+            out["decode"] = m.decode
         if self.ctx.search_report is not None:
             out["placement_search"] = self.ctx.search_report
         return out
@@ -181,10 +183,13 @@ class Session:
     def _run_real(self) -> dict:
         reqs = self._pending if self._pending else self._real_requests()
         m = self._metrics = run_real(self.system, reqs)
-        return {"mode": "real", "policy": self.spec.policy.name,
-                "completed": m.completed,
-                "throughput": round(m.throughput, 2), "switches": m.switches,
-                "makespan_s": round(m.makespan, 3)}
+        out = {"mode": "real", "policy": self.spec.policy.name,
+               "completed": m.completed,
+               "throughput": round(m.throughput, 2), "switches": m.switches,
+               "makespan_s": round(m.makespan, 3)}
+        if m.decode:
+            out["decode"] = m.decode
+        return out
 
     # ------------------------------------------------------------------ #
     def _gateway(self, tenants):

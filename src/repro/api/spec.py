@@ -359,6 +359,46 @@ class HeteroSection(_Section):
 
 
 @dataclasses.dataclass(frozen=True)
+class DecodeSection(_Section):
+    """Token-level continuous batching with paged KV residency
+    (``repro.core.decode``). Off by default — every decision stream and
+    metric is then bit-identical to the stage-level simulation. When on,
+    a request's terminal stage becomes prefill + a per-token decode loop,
+    and its KV blocks occupy device bytes next to expert weights."""
+    enabled: bool = False
+    tokens: int = 24                 # mean generated tokens per request
+    tokens_dist: str = "fixed"       # fixed | geometric
+    block_tokens: int = 16           # tokens per paged KV block
+    token_bytes: int = 262144        # KV bytes per token across layers
+    kv_budget_fraction: float = 0.5  # max pool fraction KV may occupy
+    kv_evict: str = "kv_aware"       # kv_aware | weight_only
+    max_decode_batch: int = 8        # continuous-batch membership cap
+    step_k: float = 0.002            # per-member seconds per decode step
+    step_b: float = 0.0005           # fixed per-step overhead seconds
+
+    _FIELD_TYPES = {"enabled": bool, "tokens": int, "tokens_dist": str,
+                    "block_tokens": int, "token_bytes": int,
+                    "kv_budget_fraction": float, "kv_evict": str,
+                    "max_decode_batch": int, "step_k": float,
+                    "step_b": float}
+
+    def __post_init__(self):
+        _check(self.tokens >= 1, "decode.tokens", "must be >= 1")
+        _choice(self.tokens_dist, "decode.tokens_dist",
+                ("fixed", "geometric"))
+        _check(self.block_tokens >= 1, "decode.block_tokens", "must be >= 1")
+        _check(self.token_bytes >= 1, "decode.token_bytes", "must be >= 1")
+        _check(0 < self.kv_budget_fraction <= 1,
+               "decode.kv_budget_fraction", "must be in (0, 1]")
+        _choice(self.kv_evict, "decode.kv_evict",
+                ("kv_aware", "weight_only"))
+        _check(self.max_decode_batch >= 1, "decode.max_decode_batch",
+               "must be >= 1")
+        _check(self.step_k >= 0, "decode.step_k", "must be >= 0")
+        _check(self.step_b >= 0, "decode.step_b", "must be >= 0")
+
+
+@dataclasses.dataclass(frozen=True)
 class ServingSection(_Section):
     """How requests reach the system: batch sim, real JAX execution, or the
     streaming online gateway with admission/SLO/autoscaling."""
@@ -499,6 +539,7 @@ class DeploymentSpec(_Section):
     observability: ObservabilitySection = dataclasses.field(
         default_factory=ObservabilitySection)
     hetero: HeteroSection = dataclasses.field(default_factory=HeteroSection)
+    decode: DecodeSection = dataclasses.field(default_factory=DecodeSection)
     seed: int = 0
     version: int = SCHEMA_VERSION
 
@@ -506,7 +547,7 @@ class DeploymentSpec(_Section):
                     "memory": MemorySection, "policy": PolicySection,
                     "serving": ServingSection, "workload": WorkloadSection,
                     "observability": ObservabilitySection,
-                    "hetero": HeteroSection,
+                    "hetero": HeteroSection, "decode": DecodeSection,
                     "seed": int, "version": int}
 
     # ------------------------------------------------------------------ #
@@ -564,6 +605,12 @@ class DeploymentSpec(_Section):
                "deliberate CPU residents are planned by the placement "
                f'search — set fleet.placement="search" (got '
                f"{self.fleet.placement!r})")
+
+        _check(not (self.decode.enabled and mode == "online"),
+               "decode.enabled",
+               "token-level decode drives the offline simulator and the "
+               'real engine — serving.mode="online" stays stage-level '
+               "(the gateway's admission/SLO anchors are per-stage)")
 
         known = self.model.board_names()
         if kind == "board":

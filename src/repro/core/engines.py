@@ -81,6 +81,59 @@ class SimEngine:
         return outputs, self.exec_latency(ex, expert_id, len(batch))
 
 
+class RingKVCache:
+    """One request's ring KV cache for the real decode path.
+
+    Host-side numpy rings in the heads-major layout ``slot_cache_shape``
+    emits ([Hkv, W, D]); ``append`` writes slot ``pos % width`` (the ring
+    update), ``attend`` runs the Pallas ``decode_attention`` kernel over
+    the ring (interpret mode on this CPU-only box). Positions past
+    ``width`` overwrite the oldest slot — the kernel's validity mask
+    reconstructs absolute positions from the scalar ``pos``.
+    """
+
+    def __init__(self, num_heads: int = 4, num_kv_heads: int = 2,
+                 head_dim: int = 64, width: int = 64,
+                 dtype: str = "float32", window: int = 0):
+        self.num_heads = num_heads
+        self.num_kv_heads = num_kv_heads
+        self.head_dim = head_dim
+        self.width = width
+        self.window = window
+        self.dtype = np.dtype(dtype) if dtype != "bfloat16" else dtype
+        shape = (num_kv_heads, width, head_dim)
+        if dtype == "bfloat16":
+            import jax.numpy as jnp
+            self.k = np.zeros(shape, jnp.bfloat16.dtype)
+            self.v = np.zeros(shape, jnp.bfloat16.dtype)
+        else:
+            self.k = np.zeros(shape, self.dtype)
+            self.v = np.zeros(shape, self.dtype)
+        self.pos = -1                   # last written absolute position
+
+    def append(self, k: np.ndarray, v: np.ndarray) -> int:
+        """Write this step's [Hkv, D] k/v at the next ring slot; returns
+        the absolute position written."""
+        self.pos += 1
+        slot = self.pos % self.width
+        self.k[:, slot, :] = k.astype(self.k.dtype)
+        self.v[:, slot, :] = v.astype(self.v.dtype)
+        return self.pos
+
+    def attend(self, q: np.ndarray):
+        """[H, D] query against the ring -> [H, D] output (B=1 kernel
+        call; members of one continuous batch have different ``pos`` so
+        they cannot share a batched call)."""
+        import jax.numpy as jnp
+
+        from repro.kernels.decode_attention import decode_attention
+        out = decode_attention(
+            jnp.asarray(q)[None], jnp.asarray(self.k)[None],
+            jnp.asarray(self.v)[None], self.pos,
+            window=self.window, interpret=True)
+        return np.asarray(out[0])
+
+
 class HostStore:
     """Host-DRAM + disk parameter store for the real backend.
 
@@ -193,6 +246,11 @@ class RealEngine:
         # executors run host-resident experts straight from the DRAM store —
         # no transfer thread, no deserialization round-trip
         self.host_exec_enabled = False
+        # token-level decode (PR 9): one ring KV cache per mid-generation
+        # request, driving the Pallas decode_attention kernel per step.
+        # ``decode_attn`` overrides the cache geometry (heads/width/dtype).
+        self.decode_caches: Dict[int, RingKVCache] = {}
+        self.decode_attn: Dict[str, Any] = {}
 
     # --- topology binding (one transfer thread per transfer channel) ---- #
     def bind_topology(self, topology, hierarchy=None) -> None:
@@ -285,6 +343,34 @@ class RealEngine:
     def warm_place(self, pool, expert_id: str) -> None:
         """Initial placement (system-init phase): transfer without timing."""
         self._transfer(expert_id, timed=False)
+
+    # --- token-level decode (PR 9) -------------------------------------- #
+    def decode_step(self, ex, states, now: float = 0.0) -> float:
+        """Run one decode step for every member of ``ex``'s continuous
+        batch: append this step's k/v to each request's ring cache and run
+        the Pallas decode kernel against it (B=1 per member — members sit
+        at different ring positions). Inputs are hash-seeded per
+        (request, position) so replays are deterministic. Returns measured
+        wall seconds — the DecodeRuntime's step latency."""
+        t0 = time.perf_counter()
+        for st in states:
+            rid = st.req.id
+            cache = self.decode_caches.get(rid)
+            if cache is None:
+                cache = self.decode_caches[rid] = \
+                    RingKVCache(**self.decode_attn)
+            rng = np.random.default_rng(abs(hash((rid, cache.pos + 1)))
+                                        % (2 ** 32))
+            hkv, d = cache.num_kv_heads, cache.head_dim
+            cache.append(rng.standard_normal((hkv, d)),
+                         rng.standard_normal((hkv, d)))
+            q = rng.standard_normal((cache.num_heads, d))
+            st.req.result = cache.attend(q)
+        return time.perf_counter() - t0
+
+    def decode_release(self, rid: int) -> None:
+        """A request finished (or was orphaned): drop its ring cache."""
+        self.decode_caches.pop(rid, None)
 
     def execute(self, ex, expert_id: str, batch: List[Request]
                 ) -> Tuple[list, float]:

@@ -122,6 +122,10 @@ class Executor:
         self.load_in_flight: Optional[Tuple[str, float]] = None  # (expert, done)
         self.stats = ExecStats()
         self.alive = True
+        # token-level decode (PR 9): CoServeSystem wires the shared
+        # DecodeRuntime here when decode is on; None otherwise (and every
+        # decode branch below is a single attribute check)
+        self.decode = None
         # fast-path caches (PR 7): queue-work seconds validated against
         # (queue version, residency epoch); queued-group counts validated
         # against queue version alone. ``use_pending_cache = False`` restores
@@ -225,6 +229,10 @@ class Executor:
         ``demand`` marks a load the executor is idle-waiting on (stall)."""
         if self.load_in_flight is not None or expert_id in self.pool:
             return None
+        if self.decode is not None:
+            # kv_aware: idle requests' KV blocks yield device bytes to the
+            # incoming expert before any weight eviction is considered
+            self.decode.expert_load_pressure(self, expert_id, now)
         t0 = _time.perf_counter()
         protected: Set[str] = set()
         if self.protect_queued or strict:

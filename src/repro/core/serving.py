@@ -18,6 +18,7 @@ import time
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.coe import CoEModel, Request
+from repro.core.decode import DecodeConfig, DecodeRuntime
 from repro.core.engines import SimEngine
 from repro.core.executor import Executor
 from repro.core.expert_manager import ExpertManager
@@ -108,6 +109,10 @@ class Metrics:
     per_tenant: Dict[str, Any] = dataclasses.field(default_factory=dict)
     memory: Dict[str, Any] = dataclasses.field(default_factory=dict)
     #                                 # hierarchy snapshot (channels, prefetch)
+    decode: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    #                                 # token-level decode snapshot (tokens,
+    #                                 # TTFT/token percentiles, KV traffic);
+    #                                 # empty when decode is off
 
 
 @dataclasses.dataclass
@@ -124,7 +129,8 @@ class CoServeSystem:
                  policy: SystemPolicy = COSERVE, tier: Optional[TierSpec] = None,
                  engine=None, links: str = "shared",
                  placement: Optional[PlacementPlan] = None,
-                 replication: int = 0, tracer: Optional[Tracer] = None):
+                 replication: int = 0, tracer: Optional[Tracer] = None,
+                 decode: Optional[DecodeConfig] = None):
         """``pools`` maps memory-domain name -> expert-pool bytes. Executors
         with the same ``pool_group`` share one ModelPool (one physical
         device's memory), as in the paper's multi-executor single-GPU setup.
@@ -180,6 +186,17 @@ class CoServeSystem:
             SchedulerPolicy(assign=policy.assign, arrange=policy.arrange,
                             lookahead=policy.lookahead))
         self.scheduler.tracer = self.tracer
+        # token-level decode (PR 9): one shared DecodeRuntime drives every
+        # executor's continuous batch and owns KV-block residency. None (the
+        # default) keeps the stage-level simulation bit-identical.
+        self.decode: Optional[DecodeRuntime] = None
+        if decode is not None:
+            self.decode = DecodeRuntime(decode, self.hierarchy,
+                                        tracer=self.tracer,
+                                        engine=self.engine)
+            self.hierarchy.kv = self.decode
+            for ex in self.executors:
+                ex.decode = self.decode
         self.sched_time = 0.0
         # observed per-expert load (assignment counts): the online signal
         # placement rebalancing and the "observed" eviction policy use
@@ -273,6 +290,10 @@ class CoServeSystem:
         for g in ex.queue:
             orphans.extend(g.requests)
         ex.queue.clear()
+        if self.decode is not None:
+            # mid-decode members lose their KV (it cannot be recovered from
+            # a dead executor) and restart from assignment like any orphan
+            orphans.extend(self.decode.fail_executor(ex))
         if getattr(ex.pool, "users", None) and ex in ex.pool.users:
             ex.pool.users.remove(ex)
         self.scheduler.executors = self.live_executors()
@@ -301,6 +322,8 @@ class CoServeSystem:
             prefetch=self.policy.prefetch,
             protect_queued=self.policy.protect_queued,
             hierarchy=self.hierarchy, tracer=self.tracer)
+        if self.decode is not None:
+            ex.decode = self.decode
         self.executors.append(ex)
         self.scheduler.executors = self.live_executors()
         return ex
@@ -413,4 +436,6 @@ class CoServeSystem:
         measured = getattr(self.engine, "measured_load_time", None)
         if measured is not None:      # real backend: worker wall time
             m.memory["real_measured_load_s"] = round(measured, 4)
+        if self.decode is not None:
+            m.decode = self.decode.metrics_snapshot()
         return m

@@ -28,12 +28,16 @@ from repro.core.coe import Request
 from repro.core.executor import Executor
 from repro.core.serving import CoServeSystem, Metrics
 
-ARRIVAL, EXEC_DONE, LOAD_DONE, INJECT, SOURCE, TICK = range(6)
+ARRIVAL, EXEC_DONE, LOAD_DONE, INJECT, SOURCE, TICK, DECODE = range(7)
 
 
 class Simulation:
     def __init__(self, system: CoServeSystem):
         self.system = system
+        # token-level decode (PR 9): the system's DecodeRuntime, or None for
+        # stage-level simulation (every decode branch below degrades to one
+        # ``is None`` check so decode=off stays bit-identical)
+        self.decode = getattr(system, "decode", None)
         self.heap: List[Tuple[float, int, int, Any]] = []
         self._seq = itertools.count()
         self.completed: List[Request] = []
@@ -143,9 +147,15 @@ class Simulation:
                         self.on_stage(self, req, eid, t)
                     follow = sys.route_followup(req, eid, out)
                     if follow is None:
-                        self.completed.append(req)
-                        if self.on_complete is not None:
-                            self.on_complete(self, req, t)
+                        if self.decode is not None:
+                            # terminal stage = prefill: the request joins the
+                            # executor's continuous decode batch instead of
+                            # completing; it finishes at its last token
+                            self.decode.admit(ex, req, t)
+                        else:
+                            self.completed.append(req)
+                            if self.on_complete is not None:
+                                self.on_complete(self, req, t)
                     else:
                         follow.arrival_time = t
                         self.push(t, ARRIVAL, follow)
@@ -163,6 +173,21 @@ class Simulation:
                                 and peer.current is None:
                             if sys.try_steal(peer, t):
                                 self.kick(peer, t)
+            elif kind == DECODE:
+                ex = payload
+                if not ex.alive:
+                    continue   # fail_executor already dropped its members
+                for req in self.decode.finish_step(ex, t):
+                    req.done_time = t
+                    self.completed.append(req)
+                    if self.on_complete is not None:
+                        self.on_complete(self, req, t)
+                self.kick(ex, t)
+                # KV offload/release may have freed pool bytes peers' loads
+                # were blocked on
+                for peer in list(ex.pool.users):
+                    if peer is not ex:
+                        self.kick(peer, t)
             else:  # INJECT
                 payload(self)
         makespan = max((r.done_time or 0.0) for r in self.completed) \
@@ -178,25 +203,39 @@ class Simulation:
         if not ex.alive:
             return
         self.system.scheduler.reorder_head(ex, now)
-        # start executing if the head group's expert is ready
-        if ex.current is None:
+        dec = self.decode
+        # start executing if the head group's expert is ready (with decode
+        # on, prefill is preferred over the next decode step while the
+        # continuous batch has room; a full batch or an unready head lets
+        # the decode loop run — steps overlap in-flight demand loads)
+        if ex.current is None and (dec is None or not dec.stepping(ex)):
             if not ex.queue and self.system.try_steal(ex, now):
                 pass
-            done = ex.start_next_batch(now)
+            done = None
+            if dec is None or dec.has_room(ex):
+                done = ex.start_next_batch(now)
             if done is not None:
                 self.push(done, EXEC_DONE, ex)
-            elif ex.queue and ex.load_in_flight is None:
-                head = ex.queue[0].expert_id
-                if head not in ex.pool:
-                    # demand load: the executor is idle until it lands
-                    t_done = ex.start_load(head, now, demand=True)
-                    if t_done is not None:
-                        self.push(t_done, LOAD_DONE, (ex, head))
+            else:
+                if ex.queue and ex.load_in_flight is None:
+                    head = ex.queue[0].expert_id
+                    if head not in ex.pool:
+                        # demand load: the executor is idle until it lands
+                        t_done = ex.start_load(head, now, demand=True)
+                        if t_done is not None:
+                            self.push(t_done, LOAD_DONE, (ex, head))
+                if dec is not None:
+                    t_step = dec.start_step(ex, now)
+                    if t_step is not None:
+                        ex.busy_until = t_step
+                        self.push(t_step, DECODE, ex)
         # overlap: prefetch the next missing expert while executing — strict
         # mode never displaces experts that still have queued groups, and a
         # long shared-channel backlog defers the speculation so it cannot
         # queue ahead of peers' imminent demand loads (retried on next kick)
-        if ex.prefetch and ex.current is not None and ex.load_in_flight is None:
+        if ex.prefetch and ex.load_in_flight is None \
+                and (ex.current is not None
+                     or (dec is not None and dec.stepping(ex))):
             cand = ex.prefetch_candidate()
             if cand is not None and (ex.hierarchy is None
                                      or ex.hierarchy.speculation_ok(

@@ -43,9 +43,9 @@ import warnings
 from repro.api import DeploymentSpec, Session, SpecError
 from repro.api.build import POLICIES, build_real_system  # noqa: F401
 from repro.api.build import real_board_layout as _real_board_layout  # noqa: F401
-from repro.api.spec import (FleetSection, HeteroSection, MemorySection,
-                            ModelSpec, PolicySection, ServingSection,
-                            TenantSection, WorkloadSection)
+from repro.api.spec import (DecodeSection, FleetSection, HeteroSection,
+                            MemorySection, ModelSpec, PolicySection,
+                            ServingSection, TenantSection, WorkloadSection)
 from repro.memory import POLICY_NAMES
 from repro.obs import log as obslog
 
@@ -147,11 +147,16 @@ def spec_from_args(args) -> DeploymentSpec:
         host_exec=getattr(args, "host_exec", False),
         cpu_multiplier=getattr(args, "cpu_multiplier", 0.0),
         host_place=getattr(args, "host_place", False))
+    decode = DecodeSection(
+        enabled=getattr(args, "decode", False),
+        tokens=getattr(args, "decode_tokens", 24),
+        kv_evict=getattr(args, "kv_evict", "kv_aware"),
+        kv_budget_fraction=getattr(args, "kv_budget", 0.5))
     return DeploymentSpec(
         model=model, fleet=fleet, memory=memory, policy=policy,
         serving=serving,
         workload=WorkloadSection(requests=args.requests, tenants=tenants),
-        hetero=hetero, seed=getattr(args, "seed", 0))
+        hetero=hetero, decode=decode, seed=getattr(args, "seed", 0))
 
 
 # --------------------------------------------------------------------------- #
@@ -192,7 +197,8 @@ _CONFIG_DESTS = ("mode", "board", "tier", "policy", "evict", "prefetch",
                  "plan", "engine", "tenants", "arrival", "rates", "slos",
                  "request_class", "admission", "max_queue", "bucket_rate",
                  "bucket_burst", "autoscale", "no_slo_priority", "tick",
-                 "host_exec", "cpu_multiplier", "host_place", "seed")
+                 "host_exec", "cpu_multiplier", "host_place",
+                 "decode", "decode_tokens", "kv_evict", "kv_budget", "seed")
 
 # flag dest -> dotted spec path for the scalar overrides; the structural
 # dests (executors, plan, no_slo_priority, the tenant-mix group) are mapped
@@ -214,6 +220,8 @@ _DEST_PATHS = {
     "host_exec": "hetero.host_exec",
     "cpu_multiplier": "hetero.cpu_multiplier",
     "host_place": "hetero.host_place",
+    "decode": "decode.enabled", "decode_tokens": "decode.tokens",
+    "kv_evict": "decode.kv_evict", "kv_budget": "decode.kv_budget_fraction",
     "seed": "seed",
 }
 
@@ -344,6 +352,24 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--host-place", action="store_true",
                     help="--placement search: allow the search to plan "
                          "deliberate CPU residents (requires --host-exec)")
+    # --- token-level decode (continuous batching + KV residency) -------- #
+    ap.add_argument("--decode", action="store_true",
+                    help="token-level decode: each request's terminal stage "
+                         "becomes a prefill followed by a per-token decode "
+                         "loop in a continuous batch, with paged KV blocks "
+                         "resident in the executor's pool (sim and real "
+                         "modes; online stays stage-level)")
+    ap.add_argument("--decode-tokens", type=int, default=24,
+                    help="decode length per request (the mean, for "
+                         "decode.tokens_dist='geometric' specs)")
+    ap.add_argument("--kv-evict", default="kv_aware",
+                    choices=["kv_aware", "weight_only"],
+                    help="under memory pressure: offload idle requests' KV "
+                         "blocks to host DRAM (kv_aware) or keep KV pinned "
+                         "and evict only expert weights (weight_only)")
+    ap.add_argument("--kv-budget", type=float, default=0.5,
+                    help="fraction of each device pool KV blocks may occupy "
+                         "before offload/spill kicks in")
     ap.add_argument("--seed", type=int, default=0)
     return ap
 

@@ -68,6 +68,14 @@ class MemoryHierarchy:
         # across the executor set. Off by default: every cost below is
         # bit-identical to the cache-only host tier.
         self.host_exec_enabled = False
+        # token-level decode (PR 9): set to the system's ``DecodeRuntime``
+        # when decode is on. Paged KV blocks then occupy device bytes next
+        # to expert weights (``DevicePool.kv_bytes``) and a pool whose KV
+        # was offloaded owes a PCIe reload before its next decode step —
+        # ``assignment_cost`` prices that debt so the scheduler steers new
+        # work away from KV-thrashed pools. None keeps every cost below
+        # bit-identical to the expert-only hierarchy.
+        self.kv = None
         # UMA collapses the middle tier; tier=None (engine-supplied latency
         # models) keeps the seed's no-host-cache behaviour
         self.host: Optional[HostTier] = None
@@ -318,9 +326,15 @@ class MemoryHierarchy:
             if src is not None:
                 mem = self.coe.spec(expert_id).mem_bytes
                 ch = topo.peer_for(group)
-                return self.transfer.predict_peer(mem) \
+                cost = self.transfer.predict_peer(mem) \
                     + max(0.0, ch.busy_until - now)
-        return self.host_disk_cost(expert_id, now, group)
+                if self.kv is not None:
+                    cost += self.kv.reload_debt(group, now)
+                return cost
+        cost = self.host_disk_cost(expert_id, now, group)
+        if self.kv is not None:
+            cost += self.kv.reload_debt(group, now)
+        return cost
 
     def host_disk_cost(self, expert_id: str, now: float,
                        group: str = "") -> float:
@@ -352,9 +366,15 @@ class MemoryHierarchy:
         mem = self.coe.spec(expert_id).mem_bytes
         if self.topology.has_peer and group in self.link_groups \
                 and self._peer_source_scan(expert_id, group) is not None:
-            return self.transfer.predict_peer(mem) \
+            cost = self.transfer.predict_peer(mem) \
                 + self._backlog(self.topology.peer_for(group), now)
-        return self.host_disk_cost(expert_id, now, group)
+            if self.kv is not None:
+                cost += self.kv.reload_debt(group, now)
+            return cost
+        cost = self.host_disk_cost(expert_id, now, group)
+        if self.kv is not None:
+            cost += self.kv.reload_debt(group, now)
+        return cost
 
     def speculation_ok(self, expert_id: str, now: float,
                        group: str = "", device: str = "") -> bool:

@@ -105,6 +105,11 @@ class DevicePool:
         self.ready: ReadySet = ReadySet(self.epoch)   # transfer complete
         self.loading: Dict[str, float] = {}   # expert -> expected done time
         self.used_bytes = 0
+        # device bytes held by paged KV-cache blocks (token-level decode):
+        # KV competes with expert weights for the same capacity, so
+        # ``free_bytes`` subtracts both. Stays 0 when decode is off — the
+        # arithmetic below is then bit-identical to the expert-only pool.
+        self.kv_bytes = 0
         self.users: List = []                 # executors sharing this pool
         self._clock = 0
 
@@ -115,7 +120,7 @@ class DevicePool:
         return list(self.resident)
 
     def free_bytes(self) -> int:
-        return self.capacity - self.used_bytes
+        return self.capacity - self.used_bytes - self.kv_bytes
 
     def fits(self, expert_id: str) -> bool:
         return self.coe.spec(expert_id).mem_bytes <= self.capacity
@@ -184,6 +189,7 @@ class DevicePool:
     def snapshot(self) -> dict:
         return {"capacity_bytes": self.capacity,
                 "used_bytes": self.used_bytes,
+                "kv_bytes": self.kv_bytes,
                 "resident": len(self.resident),
                 "pinned": len(self.pinned),
                 "loading": len(self.loading)}

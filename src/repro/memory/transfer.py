@@ -156,6 +156,30 @@ class TransferEngine:
             self._trace(ch, leg, mem_bytes, "promotion", "disk", label)
         return leg
 
+    def begin_kv_offload(self, now: float, nbytes: int, group: str,
+                         label: str = "") -> Transfer:
+        """Device -> host spill of paged KV blocks: rides (and queues on)
+        the group's host->device link in the reverse direction — the same
+        contended channel expert loads ride, which is exactly why offloading
+        idle KV competes with (and can defer) weight traffic."""
+        ch = self.topology.disk_channel if self.spec.unified \
+            else self.topology.pcie_for(group)
+        leg = ch.begin(now, nbytes, overhead=self.spec.host_overhead)
+        if self.tracer.enabled:
+            self._trace(ch, leg, nbytes, "kv_offload", "pcie", label)
+        return leg
+
+    def begin_kv_reload(self, now: float, nbytes: int, group: str,
+                        label: str = "") -> Transfer:
+        """Host -> device reload of previously offloaded KV blocks: a batch
+        whose KV was spilled pays this leg before its next decode step."""
+        ch = self.topology.disk_channel if self.spec.unified \
+            else self.topology.pcie_for(group)
+        leg = ch.begin(now, nbytes, overhead=self.spec.host_overhead)
+        if self.tracer.enabled:
+            self._trace(ch, leg, nbytes, "kv_reload", "pcie", label)
+        return leg
+
     def begin_peer_copy(self, now: float, mem_bytes: int,
                         group: str, label: str = "") -> Transfer:
         """Device -> device replica copy into ``group``'s pool over the peer

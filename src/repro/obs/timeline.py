@@ -11,6 +11,16 @@ stage, split into
   peer_copy_wait    time idle-waiting on a demand pool -> pool replica copy
   exec              the stage's own batch execution
 
+and, for runs with token-level decode on (PR 9), three more per-chain
+components after the terminal stage's prefill:
+
+  decode_wait       time between prefill completion / consecutive decode
+                    steps spent waiting for a step boundary (continuous
+                    batching admits joiners at step starts only)
+  kv_reload_wait    the KV-reload portion of the chain's decode steps
+                    (offloaded blocks riding the PCIe link back)
+  decode_exec       the steps' compute time itself
+
 Needs a *full*-level trace: stages are reconstructed by joining ``assign``
 events (arrival on a queue, chain linkage via ``parent``) with ``exec``
 events (batch membership) and demand ``load`` events (stall intervals,
@@ -109,6 +119,26 @@ def stage_records(events: Iterable[Event]) -> List[Stage]:
     return stages
 
 
+def decode_spans(events: Iterable[Event]) -> Dict[int, dict]:
+    """Per-request decode summary from ``decode`` step events: every step a
+    request is a member of counts fully toward its span (the whole batch
+    advances together). Empty for stage-level runs."""
+    spans: Dict[int, dict] = {}
+    for e in events:
+        if e.kind != "decode":
+            continue
+        for rid in e.attrs.get("requests", ()):
+            sp = spans.setdefault(
+                rid, {"start": e.t, "end": e.t, "dur": 0.0, "kv": 0.0,
+                      "steps": 0})
+            sp["start"] = min(sp["start"], e.t)
+            sp["end"] = max(sp["end"], e.t + e.dur)
+            sp["dur"] += e.dur
+            sp["kv"] += e.attrs.get("kv_wait", 0.0)
+            sp["steps"] += 1
+    return spans
+
+
 def request_timelines(events: Iterable[Event]) -> Dict[int, dict]:
     """Chain view: root request id -> ordered stages + latency breakdown.
 
@@ -117,6 +147,8 @@ def request_timelines(events: Iterable[Event]) -> Dict[int, dict]:
     (the offline anchor). Both are sums of the stage components, so the
     decomposition is exact by construction.
     """
+    events = list(events)
+    spans = decode_spans(events)
     by_root: Dict[int, List[Stage]] = {}
     for s in stage_records(events):
         by_root.setdefault(s.root, []).append(s)
@@ -124,16 +156,31 @@ def request_timelines(events: Iterable[Event]) -> Dict[int, dict]:
     for root, stages in by_root.items():
         stages.sort(key=lambda s: s.arrival)
         last = stages[-1]
-        out[root] = {
+        rec = {
             "stages": [s.to_dict() for s in stages],
             "queue_wait": sum(s.queue_wait for s in stages),
             "switch_load_wait": sum(s.switch_load_wait for s in stages),
             "peer_copy_wait": sum(s.peer_copy_wait for s in stages),
             "exec": sum(s.exec for s in stages),
+            "decode_wait": 0.0,
+            "kv_reload_wait": 0.0,
+            "decode_exec": 0.0,
             "e2e": last.end - stages[0].arrival,
             "last_stage": last.total,
             "complete": last.terminal,
         }
+        sp = spans.get(last.request)
+        if sp is not None:
+            # the terminal stage's prefill is followed by its decode span:
+            # the chain now ends at its last token. decode_wait is defined
+            # as the remainder (step-boundary gaps), so the decomposition
+            # stays exact by construction.
+            rec["kv_reload_wait"] = sp["kv"]
+            rec["decode_exec"] = sp["dur"] - sp["kv"]
+            rec["decode_wait"] = (sp["end"] - last.end) - sp["dur"]
+            rec["e2e"] = sp["end"] - stages[0].arrival
+            rec["last_stage"] = last.total + (sp["end"] - last.end)
+        out[root] = rec
     return out
 
 
@@ -144,8 +191,16 @@ def reconcile(events: Iterable[Event], metrics) -> dict:
     tolerance (tests pin 1e-6 on latency, trace_report pins 1% on stall)."""
     events = list(events)
     stages = stage_records(events)
+    spans = decode_spans(events)
     terminals = [s for s in stages if s.terminal]
-    mean = sum(s.total for s in terminals) / len(terminals) \
+
+    def _total(s: Stage) -> float:
+        # with decode on, a request finishes at its last token, not at
+        # prefill completion — extend the terminal stage by its decode span
+        sp = spans.get(s.request)
+        return s.total + (sp["end"] - s.end if sp is not None else 0.0)
+
+    mean = sum(_total(s) for s in terminals) / len(terminals) \
         if terminals else 0.0
     # stall from the load events themselves (one per demand load, exactly
     # what ExecStats accumulates) — the per-stage clipped waits count a

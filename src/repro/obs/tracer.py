@@ -36,6 +36,15 @@ Event vocabulary (``kind`` / who emits it / level):
   ``admit`` / ``shed``  the admission gate's verdict on a fresh arrival
               (online gateway); full / summary
   ``scale``   autoscaler fleet action; summary
+  ``decode``  one token-level decode step of an executor's continuous batch
+              (``DecodeRuntime``) — ``attrs["requests"]`` is the step's
+              membership, ``attrs["kv_wait"]`` the KV-reload portion of
+              ``dur``; full
+  ``kv``      a KV-block lifecycle transition (alloc / grow / offload /
+              reload / spill / release) on a device pool — the bytes side
+              of a decode event; the matching channel occupancy rides an
+              ``xfer`` event with ``op`` ``kv_offload``/``kv_reload``;
+              summary
 
 ``actor`` is the track the event belongs to (executor id, channel name,
 "scheduler", "gateway", "autoscaler"); ``name`` is the subject (expert id,
@@ -53,7 +62,7 @@ DEFAULT_CAPACITY = 262_144        # events; ~60 MB worst case, plenty for the
 #                                   bench smokes the CI traces end to end
 
 EVENT_KINDS = ("load", "evict", "xfer", "exec", "assign", "sched",
-               "admit", "shed", "scale")
+               "admit", "shed", "scale", "decode", "kv")
 
 
 @dataclasses.dataclass

@@ -315,6 +315,11 @@ class TelemetryHub:
         self.window = WindowRate(window_s)
         self.timeline: List[TimelinePoint] = []
         self.max_queue_depth = 0
+        # token-level decode (PR 9): streaming TTFT and inter-token latency,
+        # fed by DecodeRuntime.attach_telemetry; empty when decode is off
+        # (and then omitted from snapshot() so the schema is unchanged)
+        self.ttft = LatencyTracker()
+        self.token = LatencyTracker()
 
     # --- event hooks ---------------------------------------------------- #
     def on_arrival(self, req: Request, now: float):
@@ -345,6 +350,15 @@ class TelemetryHub:
         self.per_expert.setdefault(arch, LatencyTracker()).add(
             now - req.arrival_time)
 
+    def on_first_token(self, latency: float):
+        """Time-to-first-token of one request (arrival -> first decode
+        step completion)."""
+        self.ttft.add(latency)
+
+    def on_token(self, latency: float):
+        """One inter-token gap (consecutive decode-step completions)."""
+        self.token.add(latency)
+
     def sample(self, now: float, queue_depth: int, executors: int):
         self.max_queue_depth = max(self.max_queue_depth, queue_depth)
         self.timeline.append(TimelinePoint(
@@ -372,7 +386,7 @@ class TelemetryHub:
                 "shed": self.shed_by_tenant.get(t, 0),
             }
             per_tenant[t] = snap
-        return {
+        out = {
             "arrived": self.arrived,
             "completed": self.completed,
             "shed": self.shed,
@@ -385,3 +399,7 @@ class TelemetryHub:
                       "final_depth": self.timeline[-1].queue_depth
                       if self.timeline else 0},
         }
+        if self.ttft.count or self.token.count:
+            out["decode"] = {"ttft": self.ttft.snapshot(),
+                             "token": self.token.snapshot()}
+        return out

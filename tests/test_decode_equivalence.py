@@ -1,0 +1,148 @@
+"""PR-9 decode-equivalence pinning: token-level continuous batching must be
+strictly additive.
+
+  * decode=off is bit-identical to the retained naive reference — final
+    ``Metrics`` AND the recorded assign/arrange decision streams — across
+    seeds x link layouts x host_exec on/off. Every decode branch on the hot
+    paths degrades to one ``is None`` check, and this suite is the proof
+    (the PR-7/8 reference-pinning discipline);
+  * decode=on is *also* bit-identical fast-vs-reference: the KV reload-debt
+    pricing arm lives in both ``assignment_cost`` and
+    ``assignment_cost_ref``, and the token sampler is keyed by (seed,
+    request), not draw order;
+  * decode=on actually changes behaviour (guard against the config wiring
+    silently dropping the runtime), completes every request, and reports
+    the telemetry block; decode=off reports none.
+"""
+import dataclasses
+
+import pytest
+
+from conftest import run_board_system, strip_wall_clock
+from repro.core import COSERVE, TierSpec
+from repro.core.decode import DecodeConfig
+from repro.core.workload import BoardSpec
+
+MB = 1 << 20
+
+HOST_EXEC = dataclasses.replace(COSERVE, host_exec=True)
+
+# the simperf/hetero operating point: small pools, modest disk, Zipf-hot
+# catalog — thrashy enough that loads/evictions/peer copies all fire
+DEC_BOARD = BoardSpec(name="DQ", n_components=60, n_active=36,
+                      avg_quantity=3.0, n_detection=8, zipf_s=1.6)
+DEC_TIER = TierSpec(name="dec_numa", disk_bw=530e6, host_to_device_bw=12e9,
+                    unified=False, host_cache_bytes=8 << 30,
+                    device_bytes=4 << 30)
+
+# decode config for the decode-on pairs: geometric lengths and small blocks
+# so admission, growth, offload and reload all happen within 250 requests
+DEC_CFG = DecodeConfig(tokens=10, tokens_dist="geometric", block_tokens=4,
+                       token_bytes=4 * MB, kv_budget_fraction=0.3,
+                       max_decode_batch=4)
+
+
+def run_pair(seed, **kw):
+    """(fast, reference) runs with recorded decision streams."""
+    fast_log, ref_log = [], []
+    fast, _ = run_board_system(DEC_BOARD, DEC_TIER, seed=seed,
+                               decisions=fast_log, **kw)
+    ref, _ = run_board_system(DEC_BOARD, DEC_TIER, seed=seed,
+                              decisions=ref_log, reference=True, **kw)
+    return fast, ref, fast_log, ref_log
+
+
+# --------------------------------------------------------------------------- #
+# decode=off: the stage-level simulation is untouched
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("seed", range(5))
+@pytest.mark.parametrize("links", ["shared", "per-device"])
+@pytest.mark.parametrize("policy", [COSERVE, HOST_EXEC],
+                         ids=["host_exec_off", "host_exec_on"])
+def test_decode_off_bit_identical_to_reference(seed, links, policy):
+    fast, ref, fast_log, ref_log = run_pair(seed, links=links, policy=policy)
+    assert strip_wall_clock(fast) == strip_wall_clock(ref)
+    assert fast_log == ref_log
+    assert len(fast_log) >= 250          # every arrival was recorded
+    # no decode telemetry exists on the stage-level path
+    assert fast.decode == {} and ref.decode == {}
+
+
+def test_decode_off_system_carries_no_runtime():
+    _, system = run_board_system(DEC_BOARD, DEC_TIER, n_requests=20)
+    assert system.decode is None
+    assert system.hierarchy.kv is None
+    assert all(ex.decode is None for ex in system.executors)
+    assert all(p.kv_bytes == 0 for p in system.pools.values())
+
+
+# --------------------------------------------------------------------------- #
+# decode=on: the fast paths still equal the naive reference
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("seed", range(5))
+@pytest.mark.parametrize("links", ["shared", "per-device"])
+def test_decode_on_bit_identical_to_reference(seed, links):
+    cfg = dataclasses.replace(DEC_CFG, seed=seed)
+    fast, ref, fast_log, ref_log = run_pair(seed, links=links, decode=cfg)
+    assert strip_wall_clock(fast) == strip_wall_clock(ref)
+    assert fast_log == ref_log
+    assert fast.decode and fast.decode == ref.decode
+
+
+@pytest.mark.parametrize("kv_evict", ["kv_aware", "weight_only"])
+def test_decode_on_bit_identical_both_eviction_modes(kv_evict):
+    cfg = dataclasses.replace(DEC_CFG, kv_evict=kv_evict)
+    fast, ref, fast_log, ref_log = run_pair(0, decode=cfg)
+    assert strip_wall_clock(fast) == strip_wall_clock(ref)
+    assert fast_log == ref_log
+
+
+def test_decode_on_with_host_exec_bit_identical():
+    fast, ref, fast_log, ref_log = run_pair(1, policy=HOST_EXEC,
+                                            decode=DEC_CFG)
+    assert strip_wall_clock(fast) == strip_wall_clock(ref)
+    assert fast_log == ref_log
+
+
+# --------------------------------------------------------------------------- #
+# decode=on semantics: additive, complete, and observable
+# --------------------------------------------------------------------------- #
+
+def test_decode_changes_metrics_at_all():
+    """Guard against the config silently wiring to nothing: per-token
+    completion must move latency/makespan."""
+    off, _ = run_board_system(DEC_BOARD, DEC_TIER)
+    on, _ = run_board_system(DEC_BOARD, DEC_TIER, decode=DEC_CFG)
+    assert strip_wall_clock(off) != strip_wall_clock(on)
+    assert on.avg_latency > off.avg_latency      # tokens take time
+
+
+def test_decode_completes_every_request_and_counts_tokens():
+    m, system = run_board_system(DEC_BOARD, DEC_TIER, decode=DEC_CFG)
+    assert m.completed >= 250
+    d = m.decode
+    # geometric draws have mean cfg.tokens; every request emits >= 1 token
+    assert d["tokens_out"] >= m.completed
+    assert d["active"] == 0
+    assert d["ttft"]["count"] == m.completed
+    assert d["token"]["count"] == d["tokens_out"] - m.completed
+    assert d["ttft"]["p99"] >= d["ttft"]["p50"] > 0.0
+
+
+def test_fixed_token_count_is_exact():
+    cfg = dataclasses.replace(DEC_CFG, tokens=7, tokens_dist="fixed")
+    m, _ = run_board_system(DEC_BOARD, DEC_TIER, n_requests=100, decode=cfg)
+    assert m.decode["tokens_out"] == 7 * m.completed
+
+
+def test_token_draws_are_order_independent():
+    """The per-request length comes from a (seed, request-id)-keyed stream,
+    so two runs with different interleavings (shared vs per-device links)
+    emit identical token totals."""
+    a, _ = run_board_system(DEC_BOARD, DEC_TIER, links="shared",
+                            decode=DEC_CFG)
+    b, _ = run_board_system(DEC_BOARD, DEC_TIER, links="per-device",
+                            decode=DEC_CFG)
+    assert a.decode["tokens_out"] == b.decode["tokens_out"]

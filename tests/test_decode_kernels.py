@@ -1,0 +1,226 @@
+"""PR-9 decode-path kernel tests: ``decode_attention`` against independent
+oracles under the serving engine's actual operating conditions.
+
+What this adds over the per-kernel sweeps in test_kernels.py:
+
+  * a *full-history* oracle — attention computed over the chronological
+    token stream, never over ring slots — so the ring wrap-around math
+    (``pos > width``) is checked against first principles, not against
+    ``decode_attention_ref``'s own slot arithmetic;
+  * incremental consistency: ``RingKVCache`` (the RealEngine's per-request
+    cache) appended token by token matches the oracle at every position
+    through several wrap-arounds, in both cache dtypes;
+  * the cache geometry the models actually emit: shapes and dtypes come
+    from ``slot_cache_shape``/``cache_width`` (heads-major [B,Hkv,W,D],
+    float32/bfloat16, SWA-bounded width), not hand-picked constants.
+
+Everything runs the Pallas kernel in interpret mode (CPU-only box).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.engines import RingKVCache
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention
+from repro.models.config import ModelConfig
+from repro.models.kvcache import cache_width, slot_cache_shape
+
+TOL = {"float32": dict(rtol=2e-5, atol=2e-5),
+       "bfloat16": dict(rtol=2e-2, atol=2e-2)}
+
+
+def _tol(dtype):
+    return TOL["bfloat16" if np.dtype(dtype).name == "bfloat16"
+               else "float32"]
+
+
+def history_oracle(q, k_hist, v_hist, pos, width, window=0):
+    """Attention over the chronological history [Hkv, T, D]: the last
+    ``width`` tokens (the ring's capacity), optionally tightened by a
+    sliding window. Pure numpy float32; no ring-slot math anywhere."""
+    h, d = q.shape
+    hkv = k_hist.shape[0]
+    lo = max(0, pos - width + 1)
+    if window:
+        lo = max(lo, pos - window + 1)
+    k = np.repeat(k_hist[:, lo:pos + 1].astype(np.float32), h // hkv, axis=0)
+    v = np.repeat(v_hist[:, lo:pos + 1].astype(np.float32), h // hkv, axis=0)
+    scores = np.einsum("hd,htd->ht", q.astype(np.float32), k) / np.sqrt(d)
+    p = np.exp(scores - scores.max(-1, keepdims=True))
+    p /= p.sum(-1, keepdims=True)
+    return np.einsum("ht,htd->hd", p, v)
+
+
+def fill_ring(rng, hkv, width, d, pos, dtype):
+    """A ring cache [1, Hkv, W, D] holding the last ``width`` tokens of a
+    ``pos + 1``-token history, plus the full history for the oracle."""
+    t = pos + 1
+    k_hist = rng.standard_normal((hkv, t, d)).astype(np.float32)
+    v_hist = rng.standard_normal((hkv, t, d)).astype(np.float32)
+    k_ring = np.zeros((hkv, width, d), np.float32)
+    v_ring = np.zeros((hkv, width, d), np.float32)
+    for p in range(max(0, t - width), t):
+        k_ring[:, p % width] = k_hist[:, p]
+        v_ring[:, p % width] = v_hist[:, p]
+    cast = jnp.asarray(k_ring).astype(dtype), jnp.asarray(v_ring).astype(dtype)
+    return cast[0][None], cast[1][None], k_hist, v_hist
+
+
+# --------------------------------------------------------------------------- #
+# ring wrap-around vs the full-history oracle
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("pos", [0, 31, 32, 63, 64, 97, 200])
+def test_wraparound_matches_full_history_oracle(pos):
+    """Positions straddling 1x/2x/6x the ring width: the validity mask must
+    select exactly the last ``width`` tokens regardless of how many times
+    the ring has wrapped."""
+    h, hkv, w, d = 4, 2, 32, 64
+    rng = np.random.default_rng(pos)
+    k, v, k_hist, v_hist = fill_ring(rng, hkv, w, d, pos, jnp.float32)
+    q = rng.standard_normal((h, d)).astype(np.float32)
+    out = decode_attention(jnp.asarray(q)[None], k, v, pos, interpret=True)
+    want = history_oracle(q, k_hist, v_hist, pos, w)
+    np.testing.assert_allclose(np.asarray(out[0], np.float32), want,
+                               rtol=2e-5, atol=2e-5)
+    # and the ring-math reference agrees with both
+    ref_out = ref.decode_attention_ref(jnp.asarray(q)[None], k, v, pos)
+    np.testing.assert_allclose(np.asarray(ref_out[0], np.float32), want,
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("window", [8, 16, 31])
+@pytest.mark.parametrize("pos", [40, 64, 150])
+def test_sliding_window_under_wraparound(window, pos):
+    h, hkv, w, d = 4, 2, 32, 64
+    rng = np.random.default_rng(7 * pos + window)
+    k, v, k_hist, v_hist = fill_ring(rng, hkv, w, d, pos, jnp.float32)
+    q = rng.standard_normal((h, d)).astype(np.float32)
+    out = decode_attention(jnp.asarray(q)[None], k, v, pos, window=window,
+                           interpret=True)
+    want = history_oracle(q, k_hist, v_hist, pos, w, window=window)
+    np.testing.assert_allclose(np.asarray(out[0], np.float32), want,
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("h,hkv", [(4, 4), (4, 2), (8, 2), (4, 1), (16, 4)])
+def test_gqa_group_sizes_wrapped(h, hkv):
+    """MHA through 4x GQA to MQA, all past one wrap-around."""
+    w, d, pos = 32, 64, 50
+    rng = np.random.default_rng(h * 10 + hkv)
+    k, v, k_hist, v_hist = fill_ring(rng, hkv, w, d, pos, jnp.float32)
+    q = rng.standard_normal((h, d)).astype(np.float32)
+    out = decode_attention(jnp.asarray(q)[None], k, v, pos, interpret=True)
+    want = history_oracle(q, k_hist, v_hist, pos, w)
+    np.testing.assert_allclose(np.asarray(out[0], np.float32), want,
+                               rtol=2e-5, atol=2e-5)
+
+
+# --------------------------------------------------------------------------- #
+# the geometry the models emit: slot_cache_shape / cache_width
+# --------------------------------------------------------------------------- #
+
+def _model_cfg(kv_dtype, sliding_window=0):
+    return ModelConfig(name="t", family="dense", num_layers=2, d_model=256,
+                       num_heads=4, num_kv_heads=2, d_ff=512, vocab_size=128,
+                       kv_cache_dtype=kv_dtype, sliding_window=sliding_window)
+
+
+@pytest.mark.parametrize("kv_dtype", ["float32", "bfloat16"])
+def test_kernel_on_slot_cache_shape_emitted_geometry(kv_dtype):
+    """Run the kernel on a cache whose shape AND dtype come straight from
+    ``slot_cache_shape`` — the layout contract between models and kernel."""
+    cfg = _model_cfg(kv_dtype)
+    slot = cfg.block_pattern()[0]
+    assert slot.mixer == "attn"
+    batch, width = 2, 32
+    entry = slot_cache_shape(cfg, slot, batch, width)
+    assert entry["k"].dtype == jnp.dtype(kv_dtype)
+    # one period's [B, Hkv, W, D] — exactly the kernel's cache shape
+    k0, v0 = entry["k"][0], entry["v"][0]
+    hkv, d = cfg.num_kv_heads, cfg.resolved_head_dim
+    assert k0.shape == (batch, hkv, width, d)
+
+    pos = 70                             # wrapped
+    rng = np.random.default_rng(3)
+    rings = []
+    for b in range(batch):
+        k, v, k_hist, v_hist = fill_ring(rng, hkv, width, d, pos,
+                                         k0.dtype)
+        rings.append((k[0], v[0], k_hist, v_hist))
+    k = jnp.stack([r[0] for r in rings])
+    v = jnp.stack([r[1] for r in rings])
+    q = rng.standard_normal((batch, cfg.num_heads, d)).astype(np.float32)
+    out = decode_attention(jnp.asarray(q).astype(k0.dtype), k, v, pos,
+                           interpret=True)
+    for b in range(batch):
+        want = history_oracle(q[b], rings[b][2], rings[b][3], pos, width)
+        np.testing.assert_allclose(np.asarray(out[b], np.float32), want,
+                                   **_tol(k0.dtype))
+
+
+def test_cache_width_bounds_ring_by_sliding_window():
+    cfg = _model_cfg("float32", sliding_window=16)
+    assert cache_width(cfg, 1024) == 16
+    assert cache_width(cfg, 8) == 8
+    full = _model_cfg("float32")
+    assert cache_width(full, 1024) == 1024
+    # a ring sized by cache_width with the window mask equals the oracle
+    w = cache_width(cfg, 1024)
+    rng = np.random.default_rng(11)
+    pos = 45
+    k, v, k_hist, v_hist = fill_ring(rng, 2, w, 64, pos, jnp.float32)
+    q = rng.standard_normal((4, 64)).astype(np.float32)
+    out = decode_attention(jnp.asarray(q)[None], k, v, pos,
+                           window=cfg.sliding_window, interpret=True)
+    want = history_oracle(q, k_hist, v_hist, pos, w,
+                          window=cfg.sliding_window)
+    np.testing.assert_allclose(np.asarray(out[0], np.float32), want,
+                               rtol=2e-5, atol=2e-5)
+
+
+# --------------------------------------------------------------------------- #
+# RingKVCache: the RealEngine's incremental path
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_ring_kv_cache_incremental_matches_oracle(dtype):
+    """Append token by token through three wrap-arounds; attend at sampled
+    positions and compare against the full-history oracle."""
+    h, hkv, w, d = 4, 2, 16, 64
+    cache = RingKVCache(num_heads=h, num_kv_heads=hkv, head_dim=d,
+                        width=w, dtype=dtype)
+    rng = np.random.default_rng(0)
+    t = 3 * w + 5
+    k_hist = rng.standard_normal((hkv, t, d)).astype(np.float32)
+    v_hist = rng.standard_normal((hkv, t, d)).astype(np.float32)
+    probe_at = {0, 1, w - 1, w, w + 1, 2 * w, t - 1}
+    for p in range(t):
+        got = cache.append(k_hist[:, p], v_hist[:, p])
+        assert got == p == cache.pos
+        if p in probe_at:
+            q = rng.standard_normal((h, d)).astype(np.float32)
+            out = cache.attend(q)
+            want = history_oracle(q, k_hist, v_hist, p, w)
+            np.testing.assert_allclose(np.asarray(out, np.float32), want,
+                                       **_tol(cache.k.dtype))
+
+
+def test_ring_kv_cache_window_masks_attention():
+    h, hkv, w, d = 4, 2, 16, 64
+    window = 4
+    cache = RingKVCache(num_heads=h, num_kv_heads=hkv, head_dim=d,
+                        width=w, window=window)
+    rng = np.random.default_rng(1)
+    t = 2 * w + 3
+    k_hist = rng.standard_normal((hkv, t, d)).astype(np.float32)
+    v_hist = rng.standard_normal((hkv, t, d)).astype(np.float32)
+    for p in range(t):
+        cache.append(k_hist[:, p], v_hist[:, p])
+    q = rng.standard_normal((h, d)).astype(np.float32)
+    out = cache.attend(q)
+    want = history_oracle(q, k_hist, v_hist, t - 1, w, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32), want,
+                               rtol=2e-5, atol=2e-5)

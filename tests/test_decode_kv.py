@@ -1,0 +1,226 @@
+"""PR-9 KV-residency property tests: paged KV blocks are first-class pool
+residents and must obey the same conservation laws as expert weights.
+
+Seeded-random invariants, checked after EVERY decode-runtime mutation and
+every demand load (not just at the end of the run):
+
+  * per-pool capacity: ``used_bytes + kv_bytes <= capacity`` always, and
+    ``kv_bytes >= 0`` (no phantom frees);
+  * no block leaks: after completion — and after a mid-run executor
+    failure — every pool ends at ``kv_bytes == 0``, the host-side ledger is
+    empty, and no per-request decode state survives;
+  * offloaded-then-reloaded KV rides traced ``xfer`` legs
+    (op ``kv_offload``/``kv_reload``) whose event counts and byte totals
+    equal the runtime's own counters;
+  * the per-request timeline decomposition
+    (queue/switch-load/kv-reload/decode) still sums to end-to-end within
+    1e-6 with decode on, and ``reconcile`` still matches ``Metrics``.
+"""
+import dataclasses
+import random
+
+import pytest
+
+from conftest import run_board_system, strip_wall_clock
+from repro.core import COSERVE, TierSpec
+from repro.core.decode import DecodeConfig
+from repro.core.workload import BoardSpec, build_board_coe
+from repro.obs import Tracer
+from repro.obs.timeline import reconcile, request_timelines
+
+MB = 1 << 20
+
+KV_BOARD = BoardSpec(name="KQ", n_components=60, n_active=36,
+                     avg_quantity=3.0, n_detection=8, zipf_s=1.6)
+KV_TIER = TierSpec(name="kv_numa", disk_bw=530e6, host_to_device_bw=12e9,
+                   unified=False, host_cache_bytes=8 << 30,
+                   device_bytes=4 << 30)
+
+# large-ish blocks + a tight budget so growth, offload, reload and spill all
+# fire within a 250-request run
+KV_CFG = DecodeConfig(tokens=12, tokens_dist="geometric", block_tokens=4,
+                      token_bytes=4 * MB, kv_budget_fraction=0.25,
+                      max_decode_batch=6)
+
+
+def pressured_pool(pressure, seed=0):
+    """gpu_pool_bytes for catalog_bytes / pressure (the bench suites'
+    memory-pressure knob)."""
+    coe = build_board_coe(KV_BOARD, seed=seed)
+    total = sum(coe.spec(e).mem_bytes for e in coe.experts)
+    return int(total / pressure)
+
+
+def install_invariant_checks(sim, system, probes):
+    """Assert pool conservation after every decode mutation and demand
+    load; ``probes`` counts how often the checks actually ran."""
+    dec = system.decode
+
+    def check():
+        probes.append(1)
+        for g, pool in system.pools.items():
+            assert pool.kv_bytes >= 0, g
+            assert pool.used_bytes >= 0, g
+            assert pool.used_bytes + pool.kv_bytes <= pool.capacity, g
+        for g, nbytes in dec._host_kv.items():
+            assert nbytes >= 0, g
+
+    def wrap(obj, name):
+        orig = getattr(obj, name)
+
+        def wrapped(*a, _orig=orig, **kw):
+            out = _orig(*a, **kw)
+            check()
+            return out
+
+        setattr(obj, name, wrapped)
+
+    for name in ("admit", "start_step", "finish_step", "fail_executor"):
+        wrap(dec, name)
+    for ex in system.executors:
+        wrap(ex, "start_load")
+
+
+def assert_no_leaks(system):
+    dec = system.decode
+    for g, pool in system.pools.items():
+        assert pool.kv_bytes == 0, g
+    assert all(v == 0 for v in dec._host_kv.values())
+    assert not dec.states
+    assert not dec._inflight
+    assert all(not members for members in dec.batch.values())
+
+
+# --------------------------------------------------------------------------- #
+# conservation under pressure, both eviction modes, seeded-random configs
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("seed", range(5))
+@pytest.mark.parametrize("kv_evict", ["kv_aware", "weight_only"])
+def test_kv_capacity_invariant_and_no_leaks(seed, kv_evict):
+    cfg = dataclasses.replace(KV_CFG, kv_evict=kv_evict, seed=seed)
+    probes = []
+    m, system = run_board_system(
+        KV_BOARD, KV_TIER, seed=seed, decode=cfg,
+        gpu_pool_bytes=pressured_pool(8.0, seed=seed),
+        sim_hook=lambda sim, sys_: install_invariant_checks(sim, sys_,
+                                                            probes))
+    assert m.completed >= 250
+    assert len(probes) > 500             # the checks actually ran
+    assert_no_leaks(system)
+    assert m.decode["kv"]["peak_kv_bytes"]       # KV was actually resident
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_random_decode_configs_conserve_blocks(seed):
+    """Fuzzed block geometry/budget/batch: conservation must hold for any
+    valid config, not just the tuned operating point."""
+    rng = random.Random(seed)
+    cfg = DecodeConfig(
+        tokens=rng.randint(2, 20),
+        tokens_dist=rng.choice(["fixed", "geometric"]),
+        block_tokens=rng.randint(1, 8),
+        token_bytes=rng.choice([256 * 1024, MB, 4 * MB]),
+        kv_budget_fraction=rng.uniform(0.1, 0.9),
+        kv_evict=rng.choice(["kv_aware", "weight_only"]),
+        max_decode_batch=rng.randint(1, 10),
+        seed=seed)
+    probes = []
+    m, system = run_board_system(
+        KV_BOARD, KV_TIER, seed=seed, n_requests=150, decode=cfg,
+        gpu_pool_bytes=pressured_pool(rng.choice([4.5, 8.0]), seed=seed),
+        sim_hook=lambda sim, sys_: install_invariant_checks(sim, sys_,
+                                                            probes))
+    assert m.completed >= 150
+    assert len(probes) > 300
+    assert_no_leaks(system)
+
+
+def test_no_leaks_after_executor_failure():
+    """Killing an executor mid-decode must release its members' blocks and
+    re-queue the requests: the run still completes everything, leak-free."""
+    probes = []
+
+    def hook(sim, system):
+        install_invariant_checks(sim, system, probes)
+        sim.fail_executor_at(0.25, 0)
+
+    m, system = run_board_system(
+        KV_BOARD, KV_TIER, decode=KV_CFG,
+        gpu_pool_bytes=pressured_pool(8.0), sim_hook=hook)
+    assert m.completed >= 250            # orphans were re-queued and served
+    assert_no_leaks(system)
+    dead = system.executors[0]
+    assert not dead.alive
+    assert dead.id not in system.decode.batch \
+        or not system.decode.batch[dead.id]
+
+
+# --------------------------------------------------------------------------- #
+# offload/reload ride traced transfer legs
+# --------------------------------------------------------------------------- #
+
+def test_offload_and_reload_are_traced_xfer_legs():
+    tracer = Tracer(level="full", capacity=500_000)
+    m, system = run_board_system(
+        KV_BOARD, KV_TIER, decode=KV_CFG, tracer=tracer,
+        gpu_pool_bytes=pressured_pool(8.0))
+    d = m.decode["kv"]
+    assert d["offload_events"] > 0 and d["reload_events"] > 0
+    xfers = [e for e in tracer.events if e.kind == "xfer"]
+    offs = [e for e in xfers if e.attrs["op"] == "kv_offload"]
+    res = [e for e in xfers if e.attrs["op"] == "kv_reload"]
+    assert len(offs) == d["offload_events"]
+    assert len(res) == d["reload_events"]
+    assert sum(e.attrs["bytes"] for e in offs) == d["offload_bytes"]
+    assert sum(e.attrs["bytes"] for e in res) == d["reload_bytes"]
+    # the legs ride the contended PCIe channels and take real time
+    assert all(e.dur > 0.0 for e in offs + res)
+    pcie = {ch for ch in (e.actor for e in offs + res)}
+    assert all("pcie" in name for name in pcie)
+
+
+def test_weight_only_mode_never_offloads_kv():
+    """weight_only keeps resident KV pinned: no idle-request offloads ever
+    fire. Blocks born over budget still spill to host and ride reload legs
+    back — spilling is admission-time, not an eviction."""
+    cfg = dataclasses.replace(KV_CFG, kv_evict="weight_only")
+    m, _ = run_board_system(KV_BOARD, KV_TIER, decode=cfg,
+                            gpu_pool_bytes=pressured_pool(8.0))
+    assert m.decode["kv"]["offload_events"] == 0
+    assert m.decode["kv"]["offload_bytes"] == 0
+
+
+# --------------------------------------------------------------------------- #
+# timeline decomposition stays exact with decode on
+# --------------------------------------------------------------------------- #
+
+def test_timeline_decomposition_sums_to_e2e():
+    tracer = Tracer(level="full", capacity=500_000)
+    m, system = run_board_system(
+        KV_BOARD, KV_TIER, decode=KV_CFG, tracer=tracer,
+        gpu_pool_bytes=pressured_pool(8.0))
+    tls = request_timelines(tracer.events)
+    complete = {r: rec for r, rec in tls.items() if rec["complete"]}
+    assert len(complete) == m.completed
+    for root, rec in complete.items():
+        parts = (rec["queue_wait"] + rec["switch_load_wait"]
+                 + rec["peer_copy_wait"] + rec["exec"]
+                 + rec["decode_wait"] + rec["kv_reload_wait"]
+                 + rec["decode_exec"])
+        assert abs(parts - rec["e2e"]) < 1e-6, root
+    # the decode components are populated, not vacuously zero
+    assert any(rec["decode_exec"] > 0 for rec in complete.values())
+    assert any(rec["kv_reload_wait"] > 0 for rec in complete.values())
+
+
+def test_reconcile_matches_metrics_with_decode_on():
+    tracer = Tracer(level="full", capacity=500_000)
+    m, _ = run_board_system(
+        KV_BOARD, KV_TIER, decode=KV_CFG, tracer=tracer,
+        gpu_pool_bytes=pressured_pool(8.0))
+    rec = reconcile(tracer.events, m)
+    assert rec["completed_events"] == m.completed
+    assert abs(rec["avg_latency_delta"]) < 1e-6
+    stall = rec["stall_metrics_s"]
+    assert abs(rec["stall_events_s"] - stall) <= max(1e-6, 0.01 * stall)

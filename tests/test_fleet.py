@@ -6,6 +6,7 @@ import dataclasses
 import numpy as np
 import pytest
 
+from conftest import run_board_system
 from repro.core import (COSERVE, CoEModel, CoServeSystem, ExpertSpec, Request,
                         RoutingModule, Simulation)
 from repro.core.profiler import ArchProfile, DeviceProfile
@@ -97,12 +98,8 @@ def test_add_executor_validates_pool_membership():
 def test_pool_membership_surfaced_in_metrics():
     board = BoardSpec(name="T", n_components=20, n_active=12,
                       n_detection=4)
-    coe = build_board_coe(board)
-    pools, specs = make_executor_specs(NUMA, 2, 1)
-    system = CoServeSystem(coe, specs, pools, policy=COSERVE, tier=NUMA)
-    sim = Simulation(system)
-    sim.submit(make_task_requests(board, 50))
-    m = sim.run()
+    m, _ = run_board_system(board, NUMA, n_gpu=2, n_cpu=1, n_requests=50,
+                            request_seed=1)
     assert m.memory["pool_devices"] == {"gpu": "gpu", "cpu": "cpu"}
     assert "placement" in m.memory
     assert m.memory["placement"]["placed"] > 0
@@ -362,13 +359,10 @@ def test_queue_trigger_end_to_end_widens_promotion_window():
                     device_bytes=4 << 30)
 
     def run(trigger):
-        coe = build_board_coe(board)
-        pools, specs = make_executor_specs(tier, 2, 0)
         policy = dataclasses.replace(COSERVE, prefetch_trigger=trigger)
-        system = CoServeSystem(coe, specs, pools, policy=policy, tier=tier)
-        sim = Simulation(system)
-        sim.submit(make_task_requests(board, 400))
-        return sim.run()
+        m, _ = run_board_system(board, tier, n_gpu=2, n_cpu=0, policy=policy,
+                                n_requests=400, request_seed=1)
+        return m
 
     m_exec = run("exec")
     m_queue = run("queue")
@@ -472,13 +466,9 @@ def test_cpu_speculation_gates_on_disk_not_phantom_pcie():
     # and a full system never conjures a 'pcie[cpu]' channel: only device
     # pools own links
     board = BoardSpec(name="T", n_components=20, n_active=12, n_detection=4)
-    coe2 = build_board_coe(board)
-    pools, specs = make_executor_specs(FLEET_TIER, 2, 1)
-    system = CoServeSystem(coe2, specs, pools, policy=COSERVE,
-                           tier=FLEET_TIER, links="per-device")
-    sim = Simulation(system)
-    sim.submit(make_task_requests(board, 60))
-    m = sim.run()
+    m, _ = run_board_system(board, FLEET_TIER, n_gpu=2, n_cpu=1,
+                            links="per-device", n_requests=60,
+                            request_seed=1)
     names = set(m.memory["channels"]["pcie_channels"])
     assert names == {"ft/pcie[gpu]"}
 

@@ -24,13 +24,10 @@ import dataclasses
 
 import pytest
 
-from repro.core import (COSERVE, CoServeSystem, Simulation, SystemPolicy,
-                        TierSpec)
+from conftest import run_board_system, strip_wall_clock
+from repro.core import COSERVE, TierSpec
 from repro.core.engines import SimEngine
-from repro.core.reference import apply_reference
-from repro.core.serving import ExecutorSpec
-from repro.core.workload import (BoardSpec, build_board_coe, device_profile,
-                                 make_executor_specs, make_task_requests)
+from repro.core.workload import BoardSpec, device_profile
 from repro.fleet import SearchConfig, replay_cost, search_placement, \
     trace_from_counts
 from repro.obs import Tracer
@@ -51,37 +48,11 @@ HET_TIER = TierSpec(name="het_numa", disk_bw=530e6, host_to_device_bw=12e9,
 
 def run_system(seed, policy=COSERVE, reference=False, decisions=None,
                tracer=None, sim_hook=None, n_requests=250):
-    coe = build_board_coe(HET_BOARD, seed=seed)
-    pools, specs = make_executor_specs(HET_TIER, 3, 1)
-    system = CoServeSystem(coe, specs, pools, policy=policy, tier=HET_TIER,
-                           tracer=tracer)
-    if reference:
-        apply_reference(system)
-    if decisions is not None:
-        orig_assign = system.assign
-
-        def recording_assign(req, now):
-            ex = orig_assign(req, now)
-            decisions.append((req.expert_id, ex.id,
-                              tuple((g.expert_id, len(g)) for g in ex.queue)))
-            return ex
-
-        system.assign = recording_assign
-    sim = Simulation(system)
-    if sim_hook is not None:
-        sim_hook(sim, system)
-    sim.submit(make_task_requests(HET_BOARD, n_requests, seed=seed))
-    return sim.run(), system
-
-
-def strip_wall_clock(m):
-    d = dataclasses.asdict(m)
-    for k in ("wall_s", "sched_time", "mgmt_time"):
-        d.pop(k, None)
-    for ex in d.get("per_executor", {}).values():
-        if isinstance(ex, dict):
-            ex.pop("mgmt_time", None)
-    return d
+    """This suite's operating point over the shared conftest builder."""
+    return run_board_system(HET_BOARD, HET_TIER, seed=seed, policy=policy,
+                            reference=reference, decisions=decisions,
+                            tracer=tracer, sim_hook=sim_hook,
+                            n_requests=n_requests)
 
 
 # --------------------------------------------------------------------------- #
@@ -112,14 +83,10 @@ def test_host_exec_changes_behavior_at_all():
     off must differ."""
     tight = dataclasses.replace(HET_TIER, name="tight",
                                 host_to_device_bw=2e9, device_bytes=2 << 30)
-    coe = build_board_coe(HET_BOARD, seed=0)
     results = []
     for policy in (COSERVE, HOST_EXEC):
-        pools, specs = make_executor_specs(tight, 3, 1)
-        system = CoServeSystem(coe, specs, pools, policy=policy, tier=tight)
-        sim = Simulation(system)
-        sim.submit(make_task_requests(HET_BOARD, 250, seed=0))
-        results.append(strip_wall_clock(sim.run()))
+        m, _ = run_board_system(HET_BOARD, tight, policy=policy)
+        results.append(strip_wall_clock(m))
     assert results[0] != results[1]
 
 
@@ -175,10 +142,10 @@ def test_host_resident_cost_is_zero_only_when_enabled():
 # --------------------------------------------------------------------------- #
 
 def _cpu_system(host_exec: bool):
-    coe = build_board_coe(HET_BOARD, seed=0)
-    pools, specs = make_executor_specs(HET_TIER, 1, 1)
+    from conftest import build_board_system
     policy = HOST_EXEC if host_exec else COSERVE
-    return CoServeSystem(coe, specs, pools, policy=policy, tier=HET_TIER)
+    return build_board_system(HET_BOARD, HET_TIER, n_gpu=1, n_cpu=1,
+                              policy=policy)
 
 
 def test_sim_engine_host_resident_load_is_free():

@@ -18,10 +18,11 @@ import dataclasses
 
 import pytest
 
+from conftest import run_board_system, strip_wall_clock
 from repro.core import (COSERVE, CoServeSystem, Group, Simulation,
                         SystemPolicy, TierSpec)
 from repro.core.coe import Request
-from repro.core.reference import (ReferenceScheduler, apply_reference,
+from repro.core.reference import (ReferenceScheduler,
                                   reference_pending_time)
 from repro.core.workload import (BoardSpec, build_board_coe,
                                  make_executor_specs, make_task_requests)
@@ -43,48 +44,14 @@ EQ_TIER = TierSpec(name="eq_numa", disk_bw=530e6, host_to_device_bw=12e9,
 PEER_TIER = dataclasses.replace(EQ_TIER, name="eq_peer", peer_bw=50e9)
 
 
-def build_pair_inputs(seed):
-    coe = build_board_coe(EQ_BOARD, seed=seed)
-    reqs = make_task_requests(EQ_BOARD, 250, seed=seed)
-    return coe, reqs
-
-
 def run_system(seed, policy=COSERVE, links="shared", replication=0,
                reference=False, decisions=None, sim_hook=None):
-    coe, reqs = build_pair_inputs(seed)
-    pools, specs = make_executor_specs(EQ_TIER, 3, 1)
-    system = CoServeSystem(coe, specs, pools, policy=policy, tier=EQ_TIER,
-                           links=links, replication=replication)
-    if reference:
-        apply_reference(system)
-    if decisions is not None:
-        orig_assign = system.assign
-
-        def recording_assign(req, now):
-            ex = orig_assign(req, now)
-            # executor choice pins assign; the target queue's (expert, size)
-            # profile after insertion pins the arrange (join/new-group) call
-            decisions.append((req.expert_id, ex.id,
-                              tuple((g.expert_id, len(g)) for g in ex.queue)))
-            return ex
-
-        system.assign = recording_assign
-    sim = Simulation(system)
-    if sim_hook is not None:
-        sim_hook(sim, system)
-    sim.submit(reqs)
-    return sim.run()
-
-
-def strip_wall_clock(m):
-    """Metrics minus the wall-clock fields that legitimately differ."""
-    d = dataclasses.asdict(m)
-    for k in ("wall_s", "sched_time", "mgmt_time"):
-        d.pop(k, None)
-    for ex in d.get("per_executor", {}).values():
-        if isinstance(ex, dict):
-            ex.pop("mgmt_time", None)
-    return d
+    """This suite's operating point over the shared conftest builder."""
+    m, _ = run_board_system(EQ_BOARD, EQ_TIER, seed=seed, policy=policy,
+                            links=links, replication=replication,
+                            reference=reference, decisions=decisions,
+                            sim_hook=sim_hook)
+    return m
 
 
 # --------------------------------------------------------------------------- #

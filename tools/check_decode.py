@@ -1,0 +1,108 @@
+"""Fail on token-level decode regressions (the CI decode gate).
+
+    python tools/check_decode.py BASELINE.json [CURRENT.json]
+
+With one argument, validates the committed ``BENCH_decode.json`` artifact
+itself: at least one memory-pressure sweep point must show the KV-aware
+eviction policy beating weight-only eviction on BOTH stall time AND
+request p99 — the tentpole claim the artifact exists to document.
+
+With two arguments, additionally compares the fixed ``smoke`` rows of the
+baseline against a fresh ``--suite decode --smoke`` run. Simulated results
+are deterministic and host-independent, so every simulated field of all
+three smoke rows (``stage``, ``token_kv``, ``token_weight``) must be
+*identical* — a drift is a scheduler/decode-runtime/cost-model correctness
+change, not noise, and fails regardless of magnitude. (Wall-clock fields
+are ignored.)
+
+Exit code 1 explains what regressed.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+MODES = ("stage", "token_kv", "token_weight")
+
+# every simulated (non-wall-clock) field of a smoke row; the token-mode
+# rows additionally carry the decode fields below
+EXACT_FIELDS = ("completed", "switches", "throughput", "stall_s",
+                "makespan_s", "avg_latency_s", "p99_latency_s",
+                "events_processed")
+DECODE_FIELDS = ("tokens_out", "ttft_p50_s", "ttft_p99_s", "token_p50_s",
+                 "token_p99_s", "kv_offloads", "kv_reloads", "kv_spills")
+
+
+def load(path: str) -> dict:
+    with open(path, encoding="utf-8") as f:
+        data = json.load(f)
+    if not isinstance(data.get("sweep"), dict) \
+            or not isinstance(data.get("smoke"), dict):
+        sys.exit(f"{path}: no 'sweep'/'smoke' sections — not a "
+                 "BENCH_decode.json?")
+    return data
+
+
+def check_wins(data: dict, path: str) -> list:
+    """The artifact must document >= 1 point where kv_aware wins on both
+    stall AND request p99."""
+    wins = [k for k, row in data["sweep"].items()
+            if row["token_kv"]["stall_s"] < row["token_weight"]["stall_s"]
+            and row["token_kv"]["p99_latency_s"]
+            < row["token_weight"]["p99_latency_s"]]
+    if wins:
+        print(f"OK: {path} kv_aware wins (stall down AND p99 down) "
+              f"at {wins}")
+        return []
+    detail = "; ".join(
+        f"{k}: stall {row['token_weight']['stall_s']}"
+        f"->{row['token_kv']['stall_s']}, "
+        f"p99 {row['token_weight']['p99_latency_s']}"
+        f"->{row['token_kv']['p99_latency_s']}"
+        for k, row in data["sweep"].items())
+    return [f"{path}: no sweep point improves both stall time and request "
+            f"p99 with kv_aware eviction ({detail})"]
+
+
+def check_smoke(base: dict, cur: dict) -> list:
+    problems = []
+    for mode in MODES:
+        b, c = base["smoke"][mode], cur["smoke"][mode]
+        fields = EXACT_FIELDS if mode == "stage" \
+            else EXACT_FIELDS + DECODE_FIELDS
+        for field in fields:
+            if b.get(field) != c.get(field):
+                problems.append(
+                    f"smoke.{mode}.{field} drifted: baseline "
+                    f"{b.get(field)!r} vs current {c.get(field)!r} "
+                    "(simulated results must be identical — scheduler/"
+                    "decode-runtime change?)")
+    if not problems:
+        n = len(EXACT_FIELDS) + len(DECODE_FIELDS)
+        print("OK: smoke rows identical (stage + token_kv + token_weight, "
+              f"up to {n} fields each)")
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline", help="committed BENCH_decode.json")
+    ap.add_argument("current", nargs="?", default=None,
+                    help="freshly generated BENCH_decode.json (smoke run)")
+    args = ap.parse_args(argv)
+
+    base = load(args.baseline)
+    problems = check_wins(base, args.baseline)
+    if args.current:
+        problems += check_smoke(base, load(args.current))
+    if problems:
+        print("decode regression gate FAILED:", file=sys.stderr)
+        for p in problems:
+            print(f"  - {p}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
