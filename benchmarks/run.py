@@ -45,6 +45,21 @@ def _roofline(quick: bool = False):
                          for d in ("compute", "memory", "collective")}}
 
 
+def _lint(quick: bool = False):
+    """Invariant-analyzer cost + status (the CI `config` job summary row):
+    wall time and violation count of `python -m repro.analysis --strict src`
+    so lint cost stays visible as the tree grows."""
+    from repro.analysis import run_checks
+    t0 = time.perf_counter()
+    report = run_checks(["src"])
+    wall_s = time.perf_counter() - t0
+    return {"files": report.files,
+            "violations": len(report.violations),
+            "stale_registry_entries": len(report.warnings),
+            "clean": report.ok(strict=True),
+            "wall_s": round(wall_s, 3)}
+
+
 # key -> (runner, one-line description). ``--suite`` help and the docs table
 # are derived from this dict — add new suites HERE only.
 SUITES_INFO = {
@@ -78,6 +93,9 @@ SUITES_INFO = {
     "decode": (bench_decode.run,
                "token-level decode: stage vs continuous batching, KV-aware "
                "vs weight-only eviction under memory pressure"),
+    "lint": (_lint,
+             "invariant analyzer wall time + zero-violation status over "
+             "src/ (repro.analysis --strict)"),
 }
 
 SUITES = {key: runner for key, (runner, _) in SUITES_INFO.items()}

@@ -1,0 +1,35 @@
+"""Invariant analyzer + cache sanitizer for the CoServe repro.
+
+Source of truth: machine-checking of the conventions in
+docs/architecture.md "Hot paths and invariants" — determinism (no wall
+clock / unseeded RNG / set-iteration order in sim semantics), epoch
+discipline (every guarded-state mutation bumps its version counter),
+tracer fast-guards, frozen specs, and source-of-truth docstrings — plus
+the runtime cache sanitizer that shadow-validates the epoch-validated
+caches against ``repro.core.reference`` recompute.
+
+Static side::
+
+    python -m repro.analysis --strict src/      # CI entry point
+    python tools/lint.py                        # same, repo-root wrapper
+
+Dynamic side (cachesan)::
+
+    REPRO_CACHE_SANITIZE=1 python -m pytest tests/test_simperf_equivalence.py
+    # or per-spec: {"observability": {"sanitize": true}}
+
+See docs/analysis.md for the check catalogue and the allowlist policy.
+"""
+from repro.analysis.checks import (CHECK_NAMES, Report, Violation,
+                                   module_name, run_checks)
+from repro.analysis.registry import (ALLOWLIST, EPOCH_CLASSES, EPOCH_FIELDS,
+                                     TRACE_HELPERS, Exemption)
+from repro.analysis.cachesan import (CacheDivergence, CacheSanitizer,
+                                     install_from_env, sanitizer_self_test)
+
+__all__ = [
+    "ALLOWLIST", "CHECK_NAMES", "CacheDivergence", "CacheSanitizer",
+    "EPOCH_CLASSES", "EPOCH_FIELDS", "Exemption", "Report", "TRACE_HELPERS",
+    "Violation", "install_from_env", "module_name", "run_checks",
+    "sanitizer_self_test",
+]

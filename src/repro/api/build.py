@@ -404,6 +404,9 @@ def build_context(spec: DeploymentSpec,
             pool_experts=m.tiny_pool_experts, n_executors=m.tiny_executors,
             d_hidden=m.tiny_d_hidden, policy=policy, tracer=tracer,
             decode=resolve_decode(spec))
+        if obs.sanitize:
+            from repro.analysis.cachesan import CacheSanitizer
+            CacheSanitizer().install(system)
         tenants = make_tenants(spec) if mode == "online" else []
         return BuildContext(spec=spec, system=system, coe=coe, tier=None,
                             requests=None, search_report=None,
@@ -422,6 +425,9 @@ def build_context(spec: DeploymentSpec,
                            replication=spec.fleet.replication,
                            placement=placement, tracer=tracer,
                            decode=resolve_decode(spec))
+    if obs.sanitize:
+        from repro.analysis.cachesan import CacheSanitizer
+        CacheSanitizer().install(system)
     tenants = make_tenants(spec) if spec.workload.tenants else []
     return BuildContext(spec=spec, system=system, coe=coe, tier=tier,
                         requests=requests, search_report=search_report,

@@ -507,8 +507,12 @@ class ObservabilitySection(_Section):
     trace: str = "off"               # off | summary | full
     buffer_events: int = DEFAULT_CAPACITY   # ring-buffer capacity
     trace_path: str = ""             # export target ("" = no auto-export)
+    sanitize: bool = False           # cachesan: shadow-validate the
+    #                                  epoch-guarded caches against naive
+    #                                  recompute (debug; see docs/analysis.md)
 
-    _FIELD_TYPES = {"trace": str, "buffer_events": int, "trace_path": str}
+    _FIELD_TYPES = {"trace": str, "buffer_events": int, "trace_path": str,
+                    "sanitize": bool}
 
     def __post_init__(self):
         _choice(self.trace, "observability.trace", TRACE_LEVELS)

@@ -14,6 +14,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import os
 import time
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
@@ -212,6 +213,12 @@ class CoServeSystem:
             else PlacementPlan.build(coe, pools, replication=replication)
         self.placement.validate()
         self._apply_placement()
+        # cachesan: REPRO_CACHE_SANITIZE=1 shadow-validates the
+        # epoch-guarded caches on every system built anywhere (the CI
+        # equivalence leg) — lazy import, the hook costs one env read
+        if os.environ.get("REPRO_CACHE_SANITIZE"):
+            from repro.analysis.cachesan import install_from_env
+            install_from_env(self)
 
     # ------------------------------------------------------------------ #
     def _apply_placement(self):

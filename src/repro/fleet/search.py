@@ -354,7 +354,9 @@ class _DeltaScorer:
     def changed(self, assign: Mapping[str, Sequence[str]]) -> List[str]:
         """Experts whose pool set differs from the anchor's."""
         out = []
-        for e in assign.keys() | self.anchor.keys():
+        # sorted: the caller sums float deltas in this order, so hash-order
+        # iteration would make the estimate depend on PYTHONHASHSEED
+        for e in sorted(assign.keys() | self.anchor.keys()):
             if frozenset(assign.get(e) or ()) != \
                     self.anchor.get(e, frozenset()):
                 out.append(e)

@@ -38,12 +38,14 @@ def collective_bytes_from_hlo(hlo_text: str) -> dict:
 
 
 def _compile_stats(arch, shape, mesh, n_periods=None) -> dict:
-    t0 = time.time()
+    # perf_counter: monotonic, so an NTP step mid-compile can't produce a
+    # negative or wildly wrong duration (time.time() is wall clock)
+    t0 = time.perf_counter()
     cell = build_cell(arch, shape, mesh, n_periods=n_periods)
     lowered = lower_cell(cell, mesh)
-    t_lower = time.time() - t0
+    t_lower = time.perf_counter() - t0
     compiled = lowered.compile()
-    t_compile = time.time() - t0 - t_lower
+    t_compile = time.perf_counter() - t0 - t_lower
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
     coll = collective_bytes_from_hlo(compiled.as_text())

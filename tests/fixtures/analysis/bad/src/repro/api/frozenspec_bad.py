@@ -1,0 +1,14 @@
+"""Fixture (VIOLATIONS): mutating frozen spec instances — the frozen-spec
+lint must flag the ``object.__setattr__`` escape outside ``__post_init__``
+and the attribute assignment on a spec-typed variable."""
+from repro.api.spec import DeploymentSpec
+
+
+def force_seed(spec, seed):
+    object.__setattr__(spec, "seed", seed)   # VIOLATION: bypasses frozen
+
+
+def load_and_tweak(d):
+    spec = DeploymentSpec.from_dict(d)
+    spec.seed = 7                            # VIOLATION: specs are immutable
+    return spec

@@ -1,0 +1,11 @@
+"""Fixture (VIOLATIONS): iteration over set expressions in a
+sim-semantics module — hash order leaks into whatever the loop builds."""
+
+
+def drain(pending, resident):
+    out = []
+    for eid in set(pending):                     # VIOLATION: set iteration
+        out.append(eid)
+    for eid in pending.keys() & resident.keys():  # VIOLATION: view intersection
+        out.append(eid)
+    return out

@@ -1,0 +1,12 @@
+"""Fixture (VIOLATIONS): an emit with no enabled/full guard and a literal
+event kind outside ``EVENT_KINDS`` — the tracer-guard lint must flag both."""
+
+
+class Decoder:
+    def __init__(self, tracer):
+        self.tracer = tracer
+
+    def step(self, now):
+        self.tracer.emit(now, "exec", "dec0", "step")     # VIOLATION: no guard
+        if self.tracer.enabled:
+            self.tracer.emit(now, "banana", "dec0", "s")  # VIOLATION: bad kind

@@ -1,0 +1,12 @@
+"""Fixture (VIOLATIONS): wall-clock reads and unseeded RNG in a
+sim-semantics module — the determinism lint must flag every line marked
+below. Never imported; the analyzer reads the source."""
+import random
+import time
+
+
+def schedule_deadline(requests):
+    t0 = time.time()                 # VIOLATION: wall clock in sim semantics
+    rng = random.Random()            # VIOLATION: unseeded RNG
+    random.shuffle(requests)         # VIOLATION: hidden global RNG
+    return t0, rng

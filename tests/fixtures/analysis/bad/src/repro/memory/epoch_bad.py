@@ -1,0 +1,15 @@
+"""Fixture (VIOLATIONS): cross-module mutation of epoch-guarded state
+(``EPOCH_FIELDS``) with no bump in the same function — part B of the
+epoch-discipline check must flag both functions.
+
+Source of truth: nothing — fixture file, never imported.
+"""
+
+
+def account_kv_offload(pool, nbytes):
+    pool.kv_bytes -= nbytes              # VIOLATION: no epoch bump
+
+
+def splice_group(group, queue, take):
+    del group.requests[:take]            # VIOLATION: no queue bump
+    return queue

@@ -1,0 +1,4 @@
+"""Fixture (VIOLATION): a memory-subsystem module whose docstring never
+declares what it owns — the docstring lint requires the ownership line."""
+
+WATERMARK = 0.9

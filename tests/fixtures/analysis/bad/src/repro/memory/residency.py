@@ -1,0 +1,35 @@
+"""Fixture (VIOLATIONS): a ``DevicePool`` twin whose ``add`` mutates
+epoch-guarded fields without bumping — the epoch-discipline check (part A,
+``EPOCH_CLASSES``) must flag it. The module path shadows the real
+``repro.memory.residency`` so the registry entry applies.
+
+Source of truth: nothing — fixture file, never imported.
+"""
+
+
+class StateEpoch:
+    __slots__ = ("n",)
+
+    def __init__(self):
+        self.n = 0
+
+    def bump(self):
+        self.n += 1
+
+
+class DevicePool:
+    def __init__(self):
+        self.epoch = StateEpoch()
+        self.resident = {}
+        self.used_bytes = 0
+
+    def add(self, expert_id, nbytes):
+        self.resident[expert_id] = nbytes   # VIOLATION: no epoch bump
+        self.used_bytes += nbytes
+
+    def remove(self, expert_id):
+        self.used_bytes -= self.resident.pop(expert_id)
+        self.epoch.bump()
+
+    def touch(self, expert_id):
+        pass

@@ -1,0 +1,10 @@
+"""Fixture (CLEAN twin of frozenspec_bad): spec derivation through
+``dataclasses.replace`` — the frozen-spec lint passes."""
+import dataclasses
+
+from repro.api.spec import DeploymentSpec
+
+
+def load_and_tweak(d, seed):
+    spec = DeploymentSpec.from_dict(d)
+    return dataclasses.replace(spec, seed=seed)

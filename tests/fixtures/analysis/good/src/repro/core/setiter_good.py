@@ -1,0 +1,14 @@
+"""Fixture (CLEAN twin of setiter_bad): the same loops under
+``sorted(...)``, plus a membership test (never flagged — only iteration
+is order-hazardous)."""
+
+
+def drain(pending, resident):
+    out = []
+    for eid in sorted(set(pending)):
+        out.append(eid)
+    for eid in sorted(pending.keys() & resident.keys()):
+        out.append(eid)
+    if "e0" in set(pending):
+        out.append("e0")
+    return out

@@ -1,0 +1,14 @@
+"""Fixture (CLEAN twin of tracer_bad): direct guard, alias guard, and
+registered kinds only — the tracer-guard lint passes all three shapes."""
+
+
+class Decoder:
+    def __init__(self, tracer):
+        self.tracer = tracer
+
+    def step(self, now):
+        if self.tracer.enabled:
+            self.tracer.emit(now, "exec", "dec0", "step")
+        traced = self.tracer.full
+        if traced:
+            self.tracer.emit(now, "decode", "dec0", "tok")

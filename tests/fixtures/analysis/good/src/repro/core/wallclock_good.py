@@ -1,0 +1,10 @@
+"""Fixture (CLEAN twin of wallclock_bad): sim time comes in as a
+parameter, the RNG is explicitly seeded, and draws go through the owned
+instance — the determinism lint must pass this file."""
+import random
+
+
+def schedule_deadline(requests, now, seed):
+    rng = random.Random(seed)
+    rng.shuffle(requests)
+    return now, rng

@@ -1,0 +1,16 @@
+"""Fixture (CLEAN twin of epoch_bad): the same mutations paired with the
+bump in the same function — part B of the epoch-discipline check passes.
+
+Source of truth: nothing — fixture file, never imported.
+"""
+
+
+def account_kv_offload(pool, nbytes):
+    pool.kv_bytes -= nbytes
+    pool.epoch.bump()
+
+
+def splice_group(group, queue, take):
+    del group.requests[:take]
+    queue.bump()
+    return queue

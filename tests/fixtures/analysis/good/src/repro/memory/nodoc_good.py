@@ -1,0 +1,6 @@
+"""Fixture (CLEAN twin of nodoc_bad).
+
+Source of truth: the eviction watermark constant (fixture only).
+"""
+
+WATERMARK = 0.9

@@ -1,0 +1,35 @@
+"""Fixture (CLEAN twin of bad/.../residency.py): every mutating method of
+the ``DevicePool`` twin bumps the epoch, so part A of the epoch-discipline
+check passes.
+
+Source of truth: nothing — fixture file, never imported.
+"""
+
+
+class StateEpoch:
+    __slots__ = ("n",)
+
+    def __init__(self):
+        self.n = 0
+
+    def bump(self):
+        self.n += 1
+
+
+class DevicePool:
+    def __init__(self):
+        self.epoch = StateEpoch()
+        self.resident = {}
+        self.used_bytes = 0
+
+    def add(self, expert_id, nbytes):
+        self.resident[expert_id] = nbytes
+        self.used_bytes += nbytes
+        self.epoch.bump()
+
+    def remove(self, expert_id):
+        self.used_bytes -= self.resident.pop(expert_id)
+        self.epoch.bump()
+
+    def touch(self, expert_id):
+        pass

@@ -1,0 +1,21 @@
+#!/usr/bin/env python
+"""Repo-root wrapper for the invariant analyzer: ``python tools/lint.py``.
+
+Equivalent to ``PYTHONPATH=src python -m repro.analysis --strict src``
+run from the repository root (extra arguments pass through, so
+``python tools/lint.py --check tracer src/repro/memory`` works).
+"""
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(ROOT, "src"))
+
+from repro.analysis.__main__ import main  # noqa: E402
+
+if __name__ == "__main__":
+    os.chdir(ROOT)
+    argv = sys.argv[1:]
+    if not any(a.startswith("--strict") for a in argv):
+        argv = ["--strict"] + argv
+    sys.exit(main(argv))
